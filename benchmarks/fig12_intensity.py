@@ -1,0 +1,21 @@
+"""Fig. 12: performance (TOPS) vs operational intensity (ops/byte) on
+ResNet-18 C1, DSLR vs baseline; paper claims ~1.5x OI improvement."""
+from __future__ import annotations
+
+from repro.core import cycle_model as cm
+from .common import emit
+
+
+def main() -> None:
+    c1 = cm.NETWORKS["resnet18"][0]
+    for design, cyc_fn in (("baseline", cm.baseline_cycles), ("dslr", cm.dslr_cycles)):
+        dur_s = cyc_fn(c1) / cm.FREQ_HZ
+        tops = c1.ops / dur_s / 1e12
+        oi = cm.operational_intensity(c1, design)
+        emit(f"fig12.resnet18_c1.{design}", 0.0, f"tops={tops:.3f} ops_per_byte={oi:.2f}")
+    ratio = cm.operational_intensity(c1, "dslr") / cm.operational_intensity(c1, "baseline")
+    emit("fig12.oi_improvement", 0.0, f"{ratio:.2f}x (paper ~1.5x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""TPU-adaptation benchmarks: Pallas MSDF kernels (CPU interpret timings are
+for functional comparison only — real perf is the §Roofline dry-run story).
+
+Derived columns report the quantities that matter for the roofline:
+digit-plane FLOP multiplier, CSD activity factor, and anytime error decay.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import dslr as core_dslr
+from repro.kernels import ops
+from .common import emit, time_jax
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    M, K, N = 256, 512, 256
+    x = jnp.asarray(rng.standard_normal((M, K)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((K, N)).astype(np.float32))
+
+    us_dense = time_jax(lambda: x @ w, iters=3)
+    emit("kernels.dense_matmul_256x512x256", us_dense, "f32 reference")
+
+    for d in (4, 8):
+        us = time_jax(lambda d=d: ops.dslr_matmul(x, w, n_digits=d), iters=3)
+        got = np.asarray(ops.dslr_matmul(x, w, n_digits=d))
+        err = np.abs(got - np.asarray(x @ w)).max() / np.abs(np.asarray(x @ w)).max()
+        emit(
+            f"kernels.dslr_matmul_d{d}",
+            us,
+            f"rel_err={err:.2e} mxu_pass_mult={d+1}x (interpret mode)",
+        )
+
+    act = float(core_dslr.expected_digit_activity(x, n_digits=8, recoding="csd"))
+    emit("kernels.csd_activity_factor", 0.0, f"{act:.3f} nonzero digits (paper ~1/3)")
+
+    scale = jnp.max(jnp.abs(x)) * 1.01
+    us = time_jax(lambda: ops.msdf_quantize(x, scale, frac_bits=8), iters=3)
+    emit("kernels.msdf_quantize_256x512", us, "fused single-pass digit decomposition")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: python -m benchmarks.run [--only <prefix>]
+
+One module per paper table/figure:
+  table2_synthesis   Table 2  (synthesis constants + critical-path model)
+  table4_networks    Table 4 + Figs. 8-11 (durations, TOPS, TOPS/W, GOPS/mm2)
+  table5_comparison  Table 5  (prior-work ratios, 45->65 nm scaling)
+  fig2_pipeline      Fig. 2   (digit-level pipelining latency + sim timing)
+  fig12_intensity    Fig. 12  (operational intensity)
+  kernels_bench      TPU adaptation (Pallas MSDF matmul vs refs, CPU interpret)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+MODULES = [
+    "table2_synthesis",
+    "table4_networks",
+    "table5_comparison",
+    "fig2_pipeline",
+    "fig12_intensity",
+    "kernels_bench",
+]
+
+
+def main() -> None:
+    only = None
+    if "--only" in sys.argv:
+        only = sys.argv[sys.argv.index("--only") + 1]
+    print("name,us_per_call,derived")
+    failures = []
+    for mod_name in MODULES:
+        if only and not mod_name.startswith(only):
+            continue
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["main"])
+            mod.main()
+        except Exception:  # keep the harness robust; report at the end
+            failures.append(mod_name)
+            traceback.print_exc()
+    if failures:
+        print(f"# FAILED modules: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Table 4 + Figs. 8-11: duration / peak TOPS / TOPS/W / GOPS/mm2 on
+AlexNet, VGG-16 and ResNet-18 for DSLR-CNN vs. the bit-serial baseline,
+derived from the Eq. (3)/(6) cycle models, with the paper's values and
+deltas printed next to ours.
+"""
+from __future__ import annotations
+
+from repro.core import cycle_model as cm
+from .common import emit
+
+PAPER = {
+    ("alexnet", "baseline"): dict(dur=1.54, peak=2.73, eff=3.43, area=50.39),
+    ("alexnet", "dslr"): dict(dur=0.94, peak=4.47, eff=3.57, area=53.18),
+    ("vgg16", "baseline"): dict(dur=2.40, peak=1.05, eff=1.32, area=19.37),
+    ("vgg16", "dslr"): dict(dur=1.44, peak=1.75, eff=1.40, area=20.82),
+    ("resnet18", "baseline"): dict(dur=0.23, peak=1.05, eff=1.32, area=19.37),
+    ("resnet18", "dslr"): dict(dur=0.13, peak=1.75, eff=1.40, area=20.82),
+}
+
+
+def main() -> None:
+    for net in ("alexnet", "vgg16", "resnet18"):
+        for design in ("baseline", "dslr"):
+            rep = cm.evaluate_network(net, design)
+            p = PAPER[(net, design)]
+            emit(
+                f"table4.{net}.{design}.duration_ms",
+                0.0,
+                f"{rep.paper_mode_duration_ms:.4f} (paper {p['dur']}; mode={cm.PAPER_DURATION_MODE[net]})",
+            )
+            emit(f"table4.{net}.{design}.peak_tops", 0.0, f"{rep.peak_tops:.3f} (paper {p['peak']})")
+            emit(
+                f"table4.{net}.{design}.peak_energy_eff_tops_w",
+                0.0,
+                f"{rep.peak_energy_eff_tops_w:.3f} (paper {p['eff']})",
+            )
+            emit(
+                f"table4.{net}.{design}.peak_area_eff_gops_mm2",
+                0.0,
+                f"{rep.peak_area_eff_gops_mm2:.2f} (paper {p['area']})",
+            )
+        # Figs. 8-10: per-layer duration/perf
+        d = cm.evaluate_network(net, "dslr")
+        b = cm.evaluate_network(net, "baseline")
+        for lr_d, lr_b in zip(d.layers, b.layers):
+            emit(
+                f"fig8_10.{net}.{lr_d.layer.name}",
+                0.0,
+                f"dslr_ms={lr_d.duration_ms:.4f} base_ms={lr_b.duration_ms:.4f} "
+                f"dslr_tops={lr_d.tops:.3f} base_tops={lr_b.tops:.3f}",
+            )
+        # Fig. 11 aggregate speedup
+        paper_fig11 = {"alexnet": 1.58, "vgg16": 1.67, "resnet18": 1.65}[net]
+        emit(
+            f"fig11.{net}.aggregate_speedup",
+            0.0,
+            f"{cm.aggregate_speedup(net):.3f}x (paper {paper_fig11}x)",
+        )
+
+
+if __name__ == "__main__":
+    main()

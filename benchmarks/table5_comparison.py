@@ -1,0 +1,37 @@
+"""Table 5: comparison with prior accelerators, incl. 45 -> 65 nm scaling.
+
+Reproduces the abstract's ratio spans: 4.37x-569.11x peak performance and
+3.58x-44.75x energy efficiency at 45 nm, and the scaled-to-65 nm column.
+"""
+from __future__ import annotations
+
+from repro.core import cycle_model as cm
+from .common import emit
+
+
+def main() -> None:
+    emit("table5.dslr_peak_gops_45nm", 0.0, f"{cm.dslr_peak_gops(False):.2f} (paper 4478.97)")
+    emit("table5.dslr_peak_gops_65nm", 0.0, f"{cm.dslr_peak_gops(True):.2f} (paper 3188.19)")
+    emit("table5.dslr_power_mw_65nm", 0.0, f"{cm.dslr_power_mw(True):.2f} (paper 2019.56)")
+    eff45 = cm.dslr_peak_gops(False) / cm.dslr_power_mw(False)
+    emit("table5.dslr_peak_eff_tops_w_45nm", 0.0, f"{eff45:.3f} (paper 3.58)")
+    for row in cm.comparison_table():
+        tech = "65nm" if row["scaled_to_65nm"] else "45nm"
+        emit(
+            f"table5.vs_{row['baseline']}.{tech}",
+            0.0,
+            f"perf={row['perf_ratio']:.2f}x eff={row['energy_eff_ratio']:.2f}x",
+        )
+    rows45 = [r for r in cm.comparison_table() if not r["scaled_to_65nm"]]
+    perf = [r["perf_ratio"] for r in rows45]
+    eff = [r["energy_eff_ratio"] for r in rows45]
+    emit(
+        "table5.abstract_spans",
+        0.0,
+        f"perf {min(perf):.2f}x-{max(perf):.2f}x (paper 4.37-569.11); "
+        f"eff {min(eff):.2f}x-{max(eff):.2f}x (paper 3.58-44.75)",
+    )
+
+
+if __name__ == "__main__":
+    main()

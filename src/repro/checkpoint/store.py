@@ -1,0 +1,207 @@
+"""Sharding-aware, mesh-agnostic checkpointing with async writes.
+
+Fault-tolerance contract (the restart path of launch/train.py):
+  * each leaf is saved as one .npy per *process-addressable shard* plus a
+    JSON manifest (tree structure, shapes, dtypes, shard indices) — on a
+    single-process CPU container that degrades to one file per leaf, but the
+    format is the multi-host one;
+  * restore is ELASTIC: arrays are rebuilt from the manifest and re-sharded
+    to whatever mesh/sharding the new job supplies (chip-count changes between
+    runs re-shard transparently) — `restore_pytree(..., shardings=...)`;
+  * writes go through a background thread (training never blocks on disk)
+    with a `wait()` barrier before the directory is committed via atomic
+    rename `step_k.tmp -> step_k`;
+  * `latest_step` scans for the newest *committed* checkpoint, so a crash
+    mid-write can never be resumed from a torn state.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+_SEP = "."
+
+
+def _flatten_with_names(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        name = _SEP.join(_key_str(k) for k in path)
+        out[name] = leaf
+    return out
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return f"idx{k.idx}"
+    if hasattr(k, "name"):
+        return str(k.name)
+    return str(k)
+
+
+def save_pytree(tree, directory: str, wait: bool = True) -> threading.Thread:
+    """Write every addressable shard of every leaf + manifest, atomically."""
+    tmp = directory + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    named = _flatten_with_names(tree)
+    manifest: Dict[str, Any] = {"leaves": {}, "treedef": None}
+
+    work = []
+    for name, leaf in named.items():
+        arr = leaf
+        manifest["leaves"][name] = {
+            "shape": list(np.shape(arr)),
+            "dtype": str(arr.dtype) if hasattr(arr, "dtype") else "float32",
+        }
+        if isinstance(arr, jax.Array) and len(arr.addressable_shards) > 0:
+            for shard in arr.addressable_shards:
+                fname = f"{name}__shard{shard.index_hash if hasattr(shard, 'index_hash') else _index_tag(shard.index)}.npy"
+                work.append((os.path.join(tmp, fname), np.asarray(shard.data)))
+            manifest["leaves"][name]["sharded"] = True
+            manifest["leaves"][name]["indices"] = [
+                _index_json(s.index) for s in arr.addressable_shards
+            ]
+        else:
+            work.append((os.path.join(tmp, f"{name}.npy"), np.asarray(arr)))
+            manifest["leaves"][name]["sharded"] = False
+
+    # structure for elastic restore
+    manifest["structure"] = jax.tree_util.tree_structure(tree).__repr__()
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+
+    def _write():
+        for path, arr in work:
+            np.save(path, arr)
+        if os.path.exists(directory):
+            shutil.rmtree(directory)
+        os.rename(tmp, directory)  # commit
+
+    t = threading.Thread(target=_write, daemon=True)
+    t.start()
+    if wait:
+        t.join()
+    return t
+
+
+def _index_tag(index) -> str:
+    parts = []
+    for sl in index:
+        parts.append(f"{sl.start or 0}-{sl.stop if sl.stop is not None else 'end'}")
+    return "_".join(parts) or "full"
+
+
+def _index_json(index):
+    return [[sl.start, sl.stop] for sl in index]
+
+
+def restore_pytree(
+    template, directory: str, shardings: Optional[Any] = None
+):
+    """Rebuild the pytree saved by save_pytree; re-shard to ``shardings``
+    (elastic: the saved mesh need not match the current one)."""
+    with open(os.path.join(directory, "manifest.json")) as f:
+        manifest = json.load(f)
+    named_template = _flatten_with_names(template)
+    flat_shardings = (
+        _flatten_with_names(shardings) if shardings is not None else {}
+    )
+
+    restored = {}
+    for name, leaf in named_template.items():
+        meta = manifest["leaves"][name]
+        if meta.get("sharded"):
+            # stitch shards back together
+            full = np.zeros(meta["shape"], dtype=np.dtype(meta["dtype"]))
+            for fname in os.listdir(directory):
+                if fname.startswith(name + "__shard") and fname.endswith(".npy"):
+                    part = np.load(os.path.join(directory, fname))
+                    idx = _locate(meta, fname, directory, name)
+                    full[idx] = part
+            arr = full
+        else:
+            arr = np.load(os.path.join(directory, f"{name}.npy"))
+        sh = flat_shardings.get(name)
+        restored[name] = jax.device_put(arr, sh) if sh is not None else arr
+
+    flat, treedef = jax.tree_util.tree_flatten(template)
+    named_order = list(_flatten_with_names(template).keys())
+    return jax.tree_util.tree_unflatten(
+        treedef, [restored[n] for n in named_order]
+    )
+
+
+def _locate(meta, fname, directory, name):
+    """Recover the slice for a shard file from its filename tag."""
+    tag = fname[len(name) + len("__shard") : -len(".npy")]
+    if tag == "full":
+        return tuple(slice(None) for _ in meta["shape"])
+    idx = []
+    for part, dim in zip(tag.split("_"), meta["shape"]):
+        start_s, stop_s = part.split("-")
+        start = int(start_s)
+        stop = dim if stop_s == "end" else int(stop_s)
+        idx.append(slice(start, stop))
+    return tuple(idx)
+
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def latest_step(root: str) -> Optional[int]:
+    if not os.path.isdir(root):
+        return None
+    steps = [
+        int(m.group(1))
+        for d in os.listdir(root)
+        if (m := _STEP_RE.match(d)) and os.path.exists(os.path.join(root, d, "manifest.json"))
+    ]
+    return max(steps) if steps else None
+
+
+class CheckpointManager:
+    """Async checkpointing with a bounded number of kept steps."""
+
+    def __init__(self, root: str, keep: int = 3):
+        self.root = root
+        self.keep = keep
+        self._pending: Optional[threading.Thread] = None
+        os.makedirs(root, exist_ok=True)
+
+    def save(self, step: int, tree) -> None:
+        self.wait()
+        path = os.path.join(self.root, f"step_{step}")
+        self._pending = save_pytree(tree, path, wait=False)
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+        self._gc()  # only committed checkpoints are ever collected
+
+    def restore_latest(self, template, shardings=None):
+        step = latest_step(self.root)
+        if step is None:
+            return None, None
+        tree = restore_pytree(
+            template, os.path.join(self.root, f"step_{step}"), shardings
+        )
+        return step, tree
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(m.group(1))
+            for d in os.listdir(self.root)
+            if (m := _STEP_RE.match(d))
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.root, f"step_{s}"), ignore_errors=True)

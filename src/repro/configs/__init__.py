@@ -1,0 +1,34 @@
+"""Config registry: ``--arch <id>`` ids -> ArchConfig (+ paper CNN configs)."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.models.config import ArchConfig
+
+_MODULES: Dict[str, str] = {
+    "gemma-7b": "gemma_7b",
+    "llama3-405b": "llama3_405b",
+    "qwen2-0.5b": "qwen2_0_5b",
+    "qwen3-4b": "qwen3_4b",
+    "whisper-small": "whisper_small",
+    "kimi-k2-1t-a32b": "kimi_k2",
+    "deepseek-v2-236b": "deepseek_v2",
+    "hymba-1.5b": "hymba_1_5b",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.CONFIG
+
+
+# the paper's own networks (CNN cycle-model configs live in core.cycle_model;
+# runnable JAX conv stacks in models.cnn)
+CNN_IDS = ("alexnet", "vgg16", "resnet18")

@@ -1,0 +1,26 @@
+"""deepseek-v2-236b [moe]: 60L d=5120 128H expert d_ff=1536 vocab=102400,
+MoE 160 routed top-6 + 2 shared; MLA kv_lora=512 (the 'GQA kv=128' in the
+assignment table is the MLA head count). [arXiv:2405.04434]
+"""
+from repro.models.config import ArchConfig
+from repro.models.attention import MlaConfig
+from repro.models.moe import MoeConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-v2-236b",
+    family="moe",
+    n_layers=60,
+    d_model=5120,
+    n_heads=128,
+    n_kv_heads=128,
+    head_dim=128,
+    d_ff=1536,
+    vocab=102400,
+    ffn_kind="swiglu",
+    rope_theta=10000.0,
+    tie_embeddings=False,
+    mla=MlaConfig(kv_lora=512, q_lora=1536, d_nope=128, d_rope=64, d_v=128),
+    moe=MoeConfig(n_experts=160, top_k=6, d_ff=1536, n_shared=2, shared_d_ff=3072),
+    param_dtype="bfloat16",
+    microbatches=16,
+)

@@ -1,0 +1,20 @@
+"""gemma-7b [dense]: 28L d=3072 16H (GQA kv=16) d_ff=24576 vocab=256000.
+GeGLU, head_dim=256 (MQA variant is the 2b, not this one). [arXiv:2403.08295]
+"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gemma-7b",
+    family="dense",
+    n_layers=28,
+    d_model=3072,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=256,
+    d_ff=24576,
+    vocab=256000,
+    ffn_kind="geglu",
+    rope_theta=10000.0,
+    tie_embeddings=True,
+    microbatches=2,
+)

@@ -1,0 +1,30 @@
+"""hymba-1.5b [hybrid]: 32L d=1600 25H (GQA kv=5) d_ff=5504 vocab=32001,
+parallel attention + mamba heads, ssm_state=16; sliding-window attention
+(window 1024) except 3 global layers (first/middle/last). [arXiv:2411.13676]
+"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    head_dim=64,
+    d_ff=5504,
+    vocab=32001,
+    ffn_kind="swiglu",
+    window=1024,
+    block_pattern=(
+        ("hybrid_g", 1),
+        ("hybrid_w", 15),
+        ("hybrid_g", 1),
+        ("hybrid_w", 14),
+        ("hybrid_g", 1),
+    ),
+    ssm_state=16,
+    mamba_d_inner=3200,
+    tie_embeddings=True,
+    microbatches=4,
+)

@@ -1,0 +1,23 @@
+"""kimi-k2-1t-a32b [moe]: 61L d=7168 64H (GQA kv=8) expert d_ff=2048
+vocab=163840, MoE 384 experts top-8 + 1 shared. [paper-table config]
+"""
+from repro.models.config import ArchConfig
+from repro.models.moe import MoeConfig
+
+CONFIG = ArchConfig(
+    name="kimi-k2-1t-a32b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=112,
+    d_ff=2048,
+    vocab=163840,
+    ffn_kind="swiglu",
+    rope_theta=50000.0,
+    tie_embeddings=False,
+    moe=MoeConfig(n_experts=384, top_k=8, d_ff=2048, n_shared=1, shared_d_ff=2048),
+    param_dtype="bfloat16",
+    microbatches=16,
+)

@@ -1,0 +1,21 @@
+"""llama3-405b [dense]: 126L d=16384 128H (GQA kv=8) d_ff=53248 vocab=128256.
+[arXiv:2407.21783]
+"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama3-405b",
+    family="dense",
+    n_layers=126,
+    d_model=16384,
+    n_heads=128,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=53248,
+    vocab=128256,
+    ffn_kind="swiglu",
+    rope_theta=500000.0,
+    tie_embeddings=False,
+    param_dtype="bfloat16",
+    microbatches=16,
+)

@@ -1,0 +1,21 @@
+"""qwen2-0.5b [dense]: 24L d=896 14H (GQA kv=2) d_ff=4864 vocab=151936.
+QKV bias. [arXiv:2407.10671]
+"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-0.5b",
+    family="dense",
+    n_layers=24,
+    d_model=896,
+    n_heads=14,
+    n_kv_heads=2,
+    head_dim=64,
+    d_ff=4864,
+    vocab=151936,
+    ffn_kind="swiglu",
+    qkv_bias=True,
+    rope_theta=1000000.0,
+    tie_embeddings=True,
+    microbatches=4,
+)

@@ -1,0 +1,24 @@
+"""qwen2-vl-7b [vlm]: 28L d=3584 28H (GQA kv=4) d_ff=18944 vocab=152064.
+M-RoPE (sections 16/24/24 over t/h/w); vision frontend is a STUB per the
+brief (input_specs provides patch embeddings + 3-component positions).
+[arXiv:2409.12191]
+"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-vl-7b",
+    family="vlm",
+    n_layers=28,
+    d_model=3584,
+    n_heads=28,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=18944,
+    vocab=152064,
+    ffn_kind="swiglu",
+    qkv_bias=True,
+    rope_theta=1000000.0,
+    mrope_sections=(16, 24, 24),
+    tie_embeddings=False,
+    microbatches=4,
+)

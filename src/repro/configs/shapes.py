@@ -1,0 +1,85 @@
+"""Assigned input shapes and abstract input construction (dry-run safe).
+
+Every (arch x shape) cell is defined here:
+  train_4k     seq 4096,   global_batch 256  -> train_step
+  prefill_32k  seq 32768,  global_batch 32   -> prefill_step (forward + cache)
+  decode_32k   seq 32768,  global_batch 128  -> serve_step (1 token, full KV)
+  long_500k    seq 524288, global_batch 1    -> serve_step; SSM/hybrid only
+
+``input_specs`` returns ShapeDtypeStructs (weak-type correct, shardable, no
+device allocation) for every model input, per the dry-run contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+# archs whose attention is fully quadratic skip long_500k (per the brief);
+# SSM/hybrid families run it.
+LONG_CONTEXT_FAMILIES = ("ssm", "hybrid")
+
+
+def runs_shape(cfg: ArchConfig, shape: str) -> bool:
+    if shape == "long_500k":
+        return cfg.family in LONG_CONTEXT_FAMILIES
+    return True
+
+
+def _i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _act(cfg: ArchConfig, shape):
+    return jax.ShapeDtypeStruct(shape, cfg.act_dtype)
+
+
+def input_specs(cfg: ArchConfig, shape_name: str, batch_override: int | None = None) -> Dict[str, Any]:
+    """Abstract inputs for the step function of this (arch, shape) cell."""
+    sp = SHAPES[shape_name]
+    B = batch_override or sp.global_batch
+    S = sp.seq_len
+
+    if sp.kind in ("train", "prefill"):
+        batch: Dict[str, Any] = {"tokens": _i32((B, S))}
+        if sp.kind == "train":
+            batch["labels"] = _i32((B, S))
+        if cfg.family == "audio":
+            # modality frontend is a STUB: precomputed frame embeddings
+            batch["encoder_frames"] = _act(cfg, (B, S, cfg.d_model))
+        if cfg.family == "vlm":
+            batch["vision_embeds"] = _act(cfg, (B, S // 4, cfg.d_model))
+            batch["positions"] = _i32((3, B, S))
+        return batch
+
+    # decode: one new token against a seq_len cache
+    from repro.models import transformer as tf
+
+    batch = {
+        "tokens": _i32((B, 1)),
+        "cache_index": jax.ShapeDtypeStruct((), jnp.int32),
+        "caches": tf.init_cache(cfg, B, S, abstract=True),
+    }
+    if cfg.family == "vlm":
+        batch["positions"] = _i32((3, B, 1))
+    return batch

@@ -1,0 +1,23 @@
+"""whisper-small [audio]: enc-dec 12L each, d=768 12H d_ff=3072 vocab=51865.
+Conv frontend is a STUB per the brief: input_specs provides precomputed
+frame embeddings; GELU MLP + LayerNorm (whisper family norms). [arXiv:2212.04356]
+"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-small",
+    family="audio",
+    n_layers=12,
+    enc_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    head_dim=64,
+    d_ff=3072,
+    vocab=51865,
+    ffn_kind="mlp",
+    norm="layernorm",
+    block_pattern=(("dec", 12),),
+    tie_embeddings=True,
+    microbatches=2,
+)

@@ -1,0 +1,24 @@
+"""xlstm-1.3b [ssm]: 48L d=2048 4H d_ff=0 vocab=50304 — sLSTM + mLSTM blocks
+(1:7 interleave, the xLSTM[7:1]-style stack). d_ff=0: the cells carry their
+own up/down projections. [arXiv:2405.04517]
+"""
+from repro.models.config import ArchConfig
+
+_PATTERN = (("slstm", 1), ("mlstm", 7)) * 6  # 48 layers
+
+CONFIG = ArchConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=512,
+    d_ff=0,
+    vocab=50304,
+    ffn_kind="none",
+    block_pattern=_PATTERN,
+    mlstm_proj_factor=2.0,
+    tie_embeddings=True,
+    microbatches=2,
+)

@@ -1,0 +1,21 @@
+"""DSLR-CNN core: left-to-right (online/MSDF) arithmetic in JAX.
+
+Layers:
+  digits       — signed-digit fixed point, MSDF expansions, digit planes
+  online       — LR-SPM multiplier (Alg. 1), online adder, SoP tree, conv sim
+  dslr         — TPU adaptation: MSDF digit-plane matmul (anytime precision)
+  cycle_model  — Eq. (3)/(6) analytical model; Tables 2/4/5, Figs 2/8-12
+"""
+from . import cycle_model, digits, dslr, online  # noqa: F401
+from .digits import csd_from_fixed, quantize, sd_from_fixed, to_planes  # noqa: F401
+from .dslr import dslr_linear, dslr_matmul, quantize_msdf  # noqa: F401
+from .online import (  # noqa: F401
+    DELTA_ADD,
+    DELTA_MULT,
+    dslr_conv2d,
+    lr_spm,
+    online_add,
+    online_reduce_tree,
+    online_sop,
+    sop_value,
+)

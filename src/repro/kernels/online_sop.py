@@ -1,0 +1,122 @@
+"""Pallas TPU kernel: bit-exact online (LR) sum-of-products recurrence.
+
+This is the paper's PE — T parallel LR-SPMs (Alg. 1) whose digit streams a
+reduction consumes — executed as an *integer* recurrence entirely in VMEM.
+It is the exactness-preserving execution path for DSLR convolution: the
+scaled residual recurrence
+
+    v[j] = 2 w[j] + sum_t x_t * y_t[j+2]        (SoP form of Alg. 1)
+    p    = SELM(v),  w[j+1] = v - p * 2**(fx+2)
+
+emits one result digit per step MSDF; we accumulate digits into a fixed-point
+integer so the kernel returns the exact SoP value (digits * 2**-j sum) in one
+pass.  Reduction over T happens *inside* the digit step — the tensor-level
+equivalent of the online adder tree consuming multiplier digits the cycle
+they are produced (no full-product wait, Fig. 2).
+
+VMEM layout per grid step: x (bm, T) i32, y digit planes (J, bm, T) i8,
+residual + accumulator (bm, 1) i32 scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.online import DELTA_MULT
+
+
+def _online_sop_kernel(
+    x_ref,  # (bm, T) int32 parallel operands (weights)
+    y_ref,  # (J, bm, T) int8 MSDF digit planes of serial operands
+    out_ref,  # (bm, 1) int32 — exact SoP, fixed point with 2*fx+acc bits
+    w_ref,  # scratch (bm, 1) int32 residual (scaled 2**(fx+2) * 2**fx)
+    acc_ref,  # scratch (bm, 1) int32 digit accumulator
+    *,
+    frac_bits: int,
+    n_out: int,
+    log2_t: int,
+):
+    J = y_ref.shape[0]
+    fx = frac_bits
+    # scale: T-way SoP of (-1,1) operands needs log2_t integer headroom;
+    # run the recurrence on values / 2**log2_t (the adder tree's alignment)
+    half = 1 << (fx + 1 + log2_t)
+
+    w_ref[...] = jnp.zeros_like(w_ref)
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def step(s, _):
+        y_s = jax.lax.cond(
+            s < J,
+            lambda: jax.lax.dynamic_index_in_dim(y_ref[...], s, 0, keepdims=False),
+            lambda: jnp.zeros(y_ref.shape[1:], jnp.int8),
+        )
+        # SoP term: sum_t x_t * y_t (the T LR-SPM partial terms, reduced the
+        # same cycle — the online adder tree collapsed into the recurrence)
+        sop = jnp.sum(x_ref[...] * y_s.astype(jnp.int32), axis=-1, keepdims=True)
+        v = 2 * w_ref[...] + sop  # sop is already scaled by 2**fx * 2**2 ... / 2**log2_t via half
+        t = v >> (fx + log2_t)  # truncated estimate floor(4v)
+        p = jnp.where(t >= 2, 1, jnp.where(t <= -3, -1, 0))
+        p = jnp.where(s < DELTA_MULT, 0, p)
+        w_ref[...] = v - p * (half * 2)
+        # accumulate digit at weight 2**-(s - DELTA_MULT): MSDF, slot 0 first
+        emitted = s - DELTA_MULT
+        acc_ref[...] += jnp.where(
+            s >= DELTA_MULT, p << jnp.maximum(n_out - emitted, 0), 0
+        )
+        return _
+
+    jax.lax.fori_loop(0, n_out + 1 + DELTA_MULT, step, 0)
+    out_ref[...] = acc_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("frac_bits", "n_out", "block_rows", "interpret")
+)
+def online_sop_exact(
+    x_fixed: jax.Array,  # (M, T) int32 fixed point, |x| < 1 (frac_bits)
+    y_digits: jax.Array,  # (M, T, J) int8 MSDF digits
+    frac_bits: int = 8,
+    n_out: int | None = None,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Exact SoP values via the online recurrence; returns float32 (M,).
+
+    Result is exact when ``n_out >= frac_bits + J + log2(T) + 1``.
+    """
+    M, T = x_fixed.shape
+    J = y_digits.shape[-1]
+    log2_t = max((T - 1).bit_length(), 0)
+    if n_out is None:
+        n_out = frac_bits + J + log2_t + 2
+    bm = min(block_rows, M)
+    assert M % bm == 0
+
+    planes = jnp.moveaxis(y_digits, -1, 0)  # (J, M, T)
+    out = pl.pallas_call(
+        functools.partial(
+            _online_sop_kernel, frac_bits=frac_bits, n_out=n_out, log2_t=log2_t
+        ),
+        grid=(M // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, T), lambda m: (m, 0)),
+            pl.BlockSpec((J, bm, T), lambda m: (0, m, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, 1), lambda m: (m, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, 1), jnp.int32),
+        scratch_shapes=[
+            pltpu.VMEM((bm, 1), jnp.int32),
+            pltpu.VMEM((bm, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x_fixed, planes)
+    # digits were accumulated at integer weight 2**(n_out - s); value =
+    # acc * 2**-(n_out) * 2**log2_t (undo tree alignment) / 2**(2*fx)
+    return out[:, 0].astype(jnp.float32) * (
+        2.0 ** (log2_t - n_out)
+    )

@@ -1,0 +1,124 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute with ``interpret=True`` — the
+kernel body runs per grid step in Python/XLA exactly as written, which is
+how we validate them against ``ref.py``.  On TPU backends the same calls
+compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dslr as core_dslr
+
+from . import dslr_matmul as _dm
+from . import msdf_quantize as _mq
+from . import online_sop as _os
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def dslr_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    n_digits: int = 8,
+    recoding: str = "csd",
+    block_m: int = 128,
+    block_n: int = 128,
+    skip_zero_planes: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """x @ w with MSDF digit-plane execution (2-D x (M, K), w (K, N))."""
+    if interpret is None:
+        interpret = _on_cpu()
+    q = core_dslr.quantize_msdf(x, n_digits, recoding)
+    scales = jnp.exp2(-jnp.arange(q.planes.shape[0], dtype=jnp.float32))
+    M = x.shape[0]
+    bm = _pick_block(M, block_m)
+    bn = _pick_block(w.shape[1], block_n)
+    out = _dm.dslr_matmul_planes(
+        q.planes,
+        w,
+        scales,
+        block_m=bm,
+        block_n=bn,
+        skip_zero_planes=skip_zero_planes,
+        interpret=interpret,
+    )
+    return out * q.scale
+
+
+def msdf_quantize(
+    x: jax.Array,
+    scale: jax.Array,
+    frac_bits: int = 8,
+    n_digits: int | None = None,
+    block_rows: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = _on_cpu()
+    return _mq.msdf_quantize(
+        x,
+        scale,
+        frac_bits=frac_bits,
+        n_digits=n_digits,
+        block_rows=_pick_block(x.shape[0], block_rows),
+        interpret=interpret,
+    )
+
+
+def online_sop_exact(
+    x_fixed: jax.Array,
+    y_digits: jax.Array,
+    frac_bits: int = 8,
+    n_out: int | None = None,
+    block_rows: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = _on_cpu()
+    return _os.online_sop_exact(
+        x_fixed,
+        y_digits,
+        frac_bits=frac_bits,
+        n_out=n_out,
+        block_rows=_pick_block(x_fixed.shape[0], block_rows),
+        interpret=interpret,
+    )
+
+
+def slstm_sweep(
+    wx: jax.Array,
+    r_w: jax.Array,
+    n_heads: int,
+    chunk: int = 16,
+    block_batch: int = 8,
+    interpret: bool | None = None,
+):
+    """Weight-stationary sLSTM sequence sweep (see kernels/slstm_cell.py)."""
+    from . import slstm_cell as _sc
+
+    if interpret is None:
+        interpret = _on_cpu()
+    return _sc.slstm_sweep(
+        wx,
+        r_w,
+        n_heads=n_heads,
+        chunk=_pick_block(wx.shape[1], chunk),
+        block_batch=_pick_block(wx.shape[0], block_batch),
+        interpret=interpret,
+    )
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    """Largest divisor of ``dim`` not exceeding ``preferred``."""
+    b = min(preferred, dim)
+    while dim % b:
+        b -= 1
+    return b

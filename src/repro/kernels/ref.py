@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import digits as dig
+
+
+def dslr_matmul_planes_ref(
+    planes: jax.Array, w: jax.Array, digit_scales: jax.Array
+) -> jax.Array:
+    """sum_d scales[d] * (planes[d] @ w) — dense, no skipping."""
+    contribs = jnp.einsum(
+        "dmk,kn->dmn", planes.astype(jnp.float32), w.astype(jnp.float32)
+    )
+    return jnp.tensordot(digit_scales.astype(jnp.float32), contribs, axes=1)
+
+
+def msdf_quantize_ref(
+    x: jax.Array, scale: jax.Array, frac_bits: int, n_digits: int | None = None
+) -> jax.Array:
+    if n_digits is None:
+        n_digits = frac_bits + 1
+    # multiply by the reciprocal exactly like the kernel does, so round-half
+    # ties fall identically
+    xi = dig.quantize(x * (1.0 / scale), frac_bits)
+    d = dig.sd_from_fixed(xi, frac_bits, frac_bits)  # (..., frac_bits + 1)
+    return jnp.moveaxis(d[..., :n_digits], -1, 0)
+
+
+def online_sop_exact_ref(
+    x_fixed: jax.Array, y_digits: jax.Array, frac_bits: int
+) -> jax.Array:
+    xv = x_fixed.astype(jnp.float32) * 2.0**-frac_bits
+    yv = dig.digits_to_float(y_digits, jnp.float32)
+    return jnp.sum(xv * yv, axis=-1)
+
+
+def slstm_sweep_ref(wx: jax.Array, r_w: jax.Array, n_heads: int):
+    """Pure-jnp oracle for the weight-stationary sLSTM sweep kernel."""
+    B, S, d4 = wx.shape
+    d = d4 // 4
+    Dh = d // n_heads
+    zeros = jnp.zeros((B, d), jnp.float32)
+    state0 = (zeros, zeros, zeros, jnp.full((B, d), -30.0, jnp.float32))
+
+    def step(state, g_in):
+        c, n, h, m = state
+        rec = jnp.einsum(
+            "bhd,hde->bhe", h.reshape(B, n_heads, Dh), r_w.astype(jnp.float32)
+        ).reshape(B, 4 * d)
+        g = g_in.astype(jnp.float32) + rec
+        gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+        m_new = jnp.maximum(gf + m, gi)
+        ie = jnp.exp(gi - m_new)
+        fe = jnp.exp(gf + m - m_new)
+        c_new = fe * c + ie * jnp.tanh(gz)
+        n_new = fe * n + ie
+        h_new = jax.nn.sigmoid(go) * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    fin, hs = jax.lax.scan(step, state0, jnp.moveaxis(wx, 1, 0))
+    return jnp.moveaxis(hs, 0, 1), fin

@@ -1,0 +1,160 @@
+"""Pallas TPU kernel: weight-stationary sLSTM cell sweep.
+
+The §Perf analysis (EXPERIMENTS.md, xlstm-1.3b × train_4k) showed the sLSTM
+recurrence is HBM-bound on its *recurrent weight re-read*: an XLA while-loop
+fetches the (H, Dh, 4Dh) matrix every timestep (16.8 MB × 4096 steps × 6
+layers ≈ 84% of the model's traffic).  This kernel applies the paper's PE
+principle — the stationary operand parked next to the compute unit while the
+serial operand streams — to the RNN:
+
+  * grid = (batch_blocks, time_chunks); the recurrent weight's BlockSpec
+    index map is CONSTANT, so Pallas elides its re-copy between grid steps:
+    R is fetched from HBM once per batch block and stays VMEM-resident for
+    the entire sequence sweep;
+  * the cell state (c, n, h, m) lives in VMEM scratch carried across the
+    sequential time-chunk grid steps;
+  * per chunk, ``unroll`` cell updates run back-to-back on the resident R.
+
+Forward-only (training uses the XLA path with time-block unrolling, §Perf
+X2; a custom_vjp backward sweep is the symmetric extension).  Validated in
+interpret mode against the pure-JAX oracle in ``ref.py``/``models.ssm``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _slstm_kernel(
+    wx_ref,  # (bb, Tc, 4d) input projections for this (batch, time) block
+    rw_ref,  # (H, Dh, 4Dh) recurrent weights — VMEM-resident (constant idx)
+    h_seq_ref,  # out: (bb, Tc, d)
+    c_fin_ref,  # out: (bb, d) final states (written on the last chunk)
+    n_fin_ref,
+    h_fin_ref,
+    m_fin_ref,
+    c_ref,  # VMEM scratch state, persists across time-chunk grid steps
+    n_ref,
+    h_ref,
+    m_ref,
+    *,
+    n_heads: int,
+    head_dim: int,
+    n_chunks: int,
+    chunk: int,
+):
+    t_idx = pl.program_id(1)
+
+    @pl.when(t_idx == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        h_ref[...] = jnp.zeros_like(h_ref)
+        m_ref[...] = jnp.full_like(m_ref, -30.0)
+
+    bb = wx_ref.shape[0]
+    d = n_heads * head_dim
+    rw = rw_ref[...]
+
+    def cell(state, g_in):
+        c, n, h, m = state
+        rec = jax.lax.dot_general(
+            h.reshape(bb * n_heads, head_dim)[:, None, :]
+            .reshape(bb, n_heads, head_dim),
+            rw,
+            (((2,), (1,)), ((1,), (0,))),
+            preferred_element_type=jnp.float32,
+        )  # (H, bb, 4Dh) batched over heads
+        rec = jnp.moveaxis(rec, 0, 1).reshape(bb, 4 * d)
+        g = g_in + rec
+        gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+        m_new = jnp.maximum(gf + m, gi)
+        ie = jnp.exp(gi - m_new)
+        fe = jnp.exp(gf + m - m_new)
+        c_new = fe * c + ie * jnp.tanh(gz)
+        n_new = fe * n + ie
+        h_new = jax.nn.sigmoid(go) * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    state = (c_ref[...], n_ref[...], h_ref[...], m_ref[...])
+    for t in range(chunk):  # unrolled: R stays resident across all updates
+        state, h_t = cell(state, wx_ref[:, t, :])
+        h_seq_ref[:, t, :] = h_t
+
+    c_ref[...], n_ref[...], h_ref[...], m_ref[...] = state
+
+    @pl.when(t_idx == n_chunks - 1)
+    def _flush():
+        c_fin_ref[...] = c_ref[...]
+        n_fin_ref[...] = n_ref[...]
+        h_fin_ref[...] = h_ref[...]
+        m_fin_ref[...] = m_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_heads", "chunk", "block_batch", "interpret")
+)
+def slstm_sweep(
+    wx: jax.Array,  # (B, S, 4d) precomputed input projections (f32)
+    r_w: jax.Array,  # (H, Dh, 4Dh) recurrent weights
+    n_heads: int,
+    chunk: int = 16,
+    block_batch: int = 8,
+    interpret: bool = False,
+):
+    """Full-sequence sLSTM sweep with VMEM-resident recurrent weights.
+
+    Returns (h_seq (B, S, d), (c, n, h, m) final states).
+    """
+    B, S, d4 = wx.shape
+    d = d4 // 4
+    head_dim = d // n_heads
+    assert S % chunk == 0, (S, chunk)
+    bb = min(block_batch, B)
+    assert B % bb == 0
+    n_chunks = S // chunk
+
+    grid = (B // bb, n_chunks)
+    out_shapes = (
+        jax.ShapeDtypeStruct((B, S, d), jnp.float32),
+        jax.ShapeDtypeStruct((B, d), jnp.float32),
+        jax.ShapeDtypeStruct((B, d), jnp.float32),
+        jax.ShapeDtypeStruct((B, d), jnp.float32),
+        jax.ShapeDtypeStruct((B, d), jnp.float32),
+    )
+    fin_spec = pl.BlockSpec((bb, d), lambda b, t: (b, 0))
+    h_seq, c, n, h, m = pl.pallas_call(
+        functools.partial(
+            _slstm_kernel,
+            n_heads=n_heads,
+            head_dim=head_dim,
+            n_chunks=n_chunks,
+            chunk=chunk,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, chunk, 4 * d), lambda b, t: (b, t, 0)),
+            # constant index map -> the copy is elided between grid steps:
+            # R is HBM-fetched once per batch block (weight-stationary)
+            pl.BlockSpec(
+                (n_heads, head_dim, 4 * head_dim), lambda b, t: (0, 0, 0)
+            ),
+        ],
+        out_specs=(
+            pl.BlockSpec((bb, chunk, d), lambda b, t: (b, t, 0)),
+            fin_spec, fin_spec, fin_spec, fin_spec,
+        ),
+        out_shape=out_shapes,
+        scratch_shapes=[
+            pltpu.VMEM((bb, d), jnp.float32),
+            pltpu.VMEM((bb, d), jnp.float32),
+            pltpu.VMEM((bb, d), jnp.float32),
+            pltpu.VMEM((bb, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(wx.astype(jnp.float32), r_w.astype(jnp.float32))
+    return h_seq, (c, n, h, m)

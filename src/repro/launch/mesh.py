@@ -1,0 +1,67 @@
+"""Production mesh construction + logical->physical sharding rule tables.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module touches no jax device state — required by the dry-run
+contract (device count is locked at first jax init).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+
+# logical axis -> mesh axis rules (see models/common.py::logical_to_mesh_axes)
+#   params:  embed -> data (FSDP);  mlp/heads/vocab/expert -> model (TP/EP)
+#   acts:    batch -> (pod, data);  heads/mlp/vocab -> model
+# a mesh axis used twice in one PartitionSpec is dropped on second use, which
+# resolves e.g. ("batch", "seq", "embed") to (('pod','data'), None, None).
+SINGLE_POD_RULES: Dict[str, object] = {
+    "batch": "data",
+    "kv_seq": "data",  # long_500k: batch=1, shard the cache sequence instead
+    "embed": "data",  # FSDP parameter shard axis
+    "embed2": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "q_proj": "model",
+    "kv_proj": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "expert": "model",
+    "cache_feature": "model",
+    "layers": None,
+    "seq": None,
+    # sequence parallelism: the residual stream (the tensor saved per layer
+    # by remat) shards its seq axis over 'model'; XLA all-gathers at the
+    # attention/ffn boundaries and reduce-scatters back (SP a la Megatron).
+    # Distinct name from "seq": inside one constrain call a mesh axis may
+    # bind once, and qkv/mlp/vocab constraints must keep 'model'.
+    "seq_sp": "model",
+}
+
+MULTI_POD_RULES: Dict[str, object] = dict(
+    SINGLE_POD_RULES,
+    batch=("pod", "data"),
+    # FSDP spans pods: parameters/optimizer shard over 512 ways, halving
+    # per-chip state; the cross-pod all-gather rides the slow link — which is
+    # exactly what the error-feedback int8 compression (optim/compression)
+    # and the latency-hiding scheduler are for.  See EXPERIMENTS.md §Dry-run.
+    embed=("pod", "data"),
+    kv_seq=("pod", "data"),
+)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def rules_for(mesh) -> Dict[str, object]:
+    return MULTI_POD_RULES if "pod" in mesh.axis_names else SINGLE_POD_RULES
+
+
+def data_axis_size(mesh) -> int:
+    n = mesh.shape["data"]
+    if "pod" in mesh.axis_names:
+        n *= mesh.shape["pod"]
+    return n

@@ -1,0 +1,121 @@
+"""Roofline derivation from dry-run artifacts (§Roofline of EXPERIMENTS.md).
+
+Hardware constants (TPU v5e class, per the brief):
+  peak bf16 compute : 197 TFLOP/s per chip
+  HBM bandwidth     : 819 GB/s per chip
+  ICI link bandwidth: ~50 GB/s per link per chip
+
+The dry-run records PER-CHIP quantities (the partitioned HLO module's shapes
+are per-device), so each term divides by the per-chip peak directly:
+
+  compute term    = hlo.flops_corrected / 197e12        [s]
+  memory term     = hlo.hbm_bytes / 819e9               [s]
+  collective term = hlo.collective_bytes / 50e9         [s]
+
+plus MODEL_FLOPS = 6 * N_active * tokens (train) or 2 * N_active * tokens
+(inference), the useful-compute ratio MODEL_FLOPS / HLO_FLOPS (remat +
+redundancy waste shows up here), and the dominant-term classification the
+§Perf hillclimb iterates on.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.roofline [--dir artifacts/dryrun/16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+ARTIFACT_DEFAULT = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "artifacts", "dryrun", "16x16"
+)
+
+
+def roofline_row(rec: Dict) -> Dict:
+    if rec.get("status") != "ok":
+        return {
+            "arch": rec["arch"],
+            "shape": rec["shape"],
+            "status": rec.get("status", "?"),
+            "reason": rec.get("reason", rec.get("error", ""))[:120],
+        }
+    hlo = rec["hlo"]
+    chips = rec["chips"]
+    t_c = hlo["flops_corrected"] / PEAK_FLOPS
+    t_m = hlo["hbm_bytes"] / HBM_BW
+    t_x = hlo["collective_bytes"] / ICI_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x), key=lambda kv: kv[1])
+    model_flops_per_chip = rec["model_flops"] / chips
+    useful = model_flops_per_chip / max(hlo["flops_corrected"], 1.0)
+    bound = max(t_c, t_m, t_x)
+    # achievable fraction of compute roofline if perfectly overlapped
+    frac = t_c / bound if bound > 0 else 0.0
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "status": "ok",
+        "compute_s": t_c,
+        "memory_s": t_m,
+        "collective_s": t_x,
+        "dominant": dom[0],
+        "model_flops_ratio": useful,
+        "roofline_fraction": frac * useful,  # useful-FLOPs at peak / bound time
+        "mem_gib_per_dev": rec["memory"]["per_device_total"] / 2**30,
+        "fits_16g": rec["memory"]["per_device_total"] < 16 * 2**30,
+    }
+
+
+def load_rows(directory: str) -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("tag"):
+            continue  # hillclimb experiment records live next to baselines
+        rows.append(roofline_row(rec))
+    return rows
+
+
+def format_table(rows: List[Dict]) -> str:
+    hdr = (
+        f"{'arch':<18}{'shape':<13}{'compute_s':>11}{'memory_s':>11}"
+        f"{'collect_s':>11}{'dominant':>11}{'useful':>8}{'roofl%':>8}"
+        f"{'GiB/dev':>9}{'fits':>6}"
+    )
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        if r["status"] != "ok":
+            lines.append(
+                f"{r['arch']:<18}{r['shape']:<13}  {r['status']}: {r.get('reason','')}"
+            )
+            continue
+        lines.append(
+            f"{r['arch']:<18}{r['shape']:<13}"
+            f"{r['compute_s']:>11.4f}{r['memory_s']:>11.4f}{r['collective_s']:>11.4f}"
+            f"{r['dominant']:>11}{r['model_flops_ratio']:>8.2f}"
+            f"{100*r['roofline_fraction']:>7.1f}%"
+            f"{r['mem_gib_per_dev']:>9.2f}{str(r['fits_16g']):>6}"
+        )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=os.path.abspath(ARTIFACT_DEFAULT))
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+    rows = load_rows(args.dir)
+    if args.json:
+        print(json.dumps(rows, indent=1))
+    else:
+        print(format_table(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Model substrate: all 10 assigned architectures + the paper's CNNs."""
+from . import attention, cnn, common, config, ffn, moe, ssm, transformer  # noqa: F401
+from .config import ArchConfig  # noqa: F401

@@ -1,0 +1,376 @@
+"""Attention: GQA / MHA / MLA, RoPE / M-RoPE, qk-norm, sliding window,
+blocked (flash-style) causal attention with online softmax, KV-cache decode.
+
+All attention here is memory-bounded: prefill uses a KV-block scan with an
+online softmax (never materializing the (S, S) score matrix), which is what
+lets the 32k prefill shapes compile within HBM at 405B scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+from .common import ParamSpec
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    window: int = 0  # 0 = global; >0 = sliding-window (sub-quadratic)
+    mrope_sections: Tuple[int, ...] = ()  # qwen2-vl multimodal rope
+    causal: bool = True
+    mla: Optional["MlaConfig"] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class MlaConfig:
+    kv_lora: int = 512
+    q_lora: int = 1536
+    d_nope: int = 128
+    d_rope: int = 64
+    d_v: int = 128
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, Dh); positions: (B, S) int."""
+    freqs = rope_freqs(x.shape[-1], theta)  # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, Dh/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array, positions: jax.Array, theta: float, sections: Tuple[int, ...]
+) -> jax.Array:
+    """M-RoPE (Qwen2-VL): positions (3, B, S) = (t, h, w); the rotary
+    frequency bands are partitioned across the three components."""
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(x.shape[-1], theta)  # (half,)
+    # select which position component drives each frequency band
+    comp = jnp.repeat(
+        jnp.arange(len(sections)), jnp.asarray(sections), total_repeat_length=half
+    )
+    pos = positions.astype(jnp.float32)[comp, :, :]  # (half, B, S)
+    angles = jnp.moveaxis(pos, 0, -1) * freqs  # (B, S, half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# blocked attention (online softmax over KV chunks; never (S,S) resident)
+# ---------------------------------------------------------------------------
+
+
+def blocked_attention(
+    q: jax.Array,  # (B, Sq, H, Dh)
+    k: jax.Array,  # (B, Sk, Hkv, Dh)
+    v: jax.Array,  # (B, Sk, Hkv, Dh)
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    kv_chunk: int = 1024,
+    kv_len: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Flash-style attention: scan over KV chunks with running (m, l, acc).
+
+    ``q_offset``: absolute position of q[0] (for decode/cache alignment).
+    ``kv_len``: optional dynamic valid-length of k/v (decode cache).
+    """
+    B, Sq, H, Dh = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]  # may differ from Dh (MLA: d_v != d_nope + d_rope)
+    rep = H // Hkv
+    kv_chunk = min(kv_chunk, Sk)
+    n_chunks = (Sk + kv_chunk - 1) // kv_chunk
+    pad = n_chunks * kv_chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    # grouped-head layout: q (B, Sq, Hkv, rep, Dh) contracts against k/v in
+    # their NATIVE (Hkv) layout — never materializing the rep-x duplicated
+    # K/V (for H/Hkv = 16 that is a 16x VMEM/HBM saving on decode)
+    qg = (q * (Dh**-0.5)).astype(q.dtype).reshape(B, Sq, Hkv, rep, Dh)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    kc = k.reshape(B, n_chunks, kv_chunk, Hkv, Dh)
+    vc = v.reshape(B, n_chunks, kv_chunk, Hkv, Dv)
+
+    def step(carry, chunk):
+        m_prev, l_prev, acc_prev = carry
+        kj, vj, j = chunk
+        # barrier: stops XLA from hoisting the (CPU-backend) bf16->f32 dot
+        # legalization convert out of the loop, which would materialize the
+        # entire KV cache in f32 (a 2x HBM regression; TPU MXU is unaffected)
+        kj, vj = jax.lax.optimization_barrier((kj, vj))
+        kv_pos = j * kv_chunk + jnp.arange(kv_chunk)
+        # scores (B, Hkv, rep, Sq, C): bf16 operands, f32 accumulation — an
+        # explicit .astype(f32) on kj would get hoisted out of both scans by
+        # XLA, materializing the whole KV cache stack in f32 (verified)
+        s = jnp.einsum(
+            "bqkgd,bckd->bkgqc", qg, kj, preferred_element_type=jnp.float32
+        )
+        mask = jnp.ones((Sq, kv_chunk), bool)
+        if causal:
+            mask &= q_pos[:, None] >= kv_pos[None, :]
+        if window:
+            mask &= kv_pos[None, :] > q_pos[:, None] - window
+        if kv_len is not None:
+            mask &= kv_pos[None, :] < kv_len
+        if pad:
+            mask &= kv_pos[None, :] < Sk
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + p.sum(axis=-1)
+        acc_new = acc_prev * corr[..., None] + jnp.einsum(
+            "bkgqc,bckd->bkgqd",
+            p.astype(q.dtype),
+            vj,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, rep, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, rep, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, Hkv, rep, Sq, Dv), jnp.float32)
+    # remat the chunk step: without it, autodiff saves the (Sq, kv_chunk)
+    # probability matrix of EVERY chunk — the full quadratic score matrix —
+    # defeating the whole point of blocked attention
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(step, policy=jax.checkpoint_policies.nothing_saveable),
+        (m0, l0, acc0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), jnp.arange(n_chunks)),
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = out.reshape(B, H, Sq, Dv)
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)  # (B, Sq, H, Dv)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer (covers MHA as Hkv == H)
+# ---------------------------------------------------------------------------
+
+
+def gqa_spec(cfg: AttnConfig):
+    d, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    spec = {
+        "wq": cm.dense_spec(d, H * Dh, ("embed", "q_proj"), bias=cfg.qkv_bias),
+        "wk": cm.dense_spec(d, Hkv * Dh, ("embed", "kv_proj"), bias=cfg.qkv_bias),
+        "wv": cm.dense_spec(d, Hkv * Dh, ("embed", "kv_proj"), bias=cfg.qkv_bias),
+        "wo": cm.dense_spec(H * Dh, d, ("q_proj", "embed")),
+    }
+    if cfg.qk_norm:
+        spec["q_norm"] = cm.rmsnorm_spec(Dh, None)
+        spec["k_norm"] = cm.rmsnorm_spec(Dh, None)
+    return spec
+
+
+def _project_qkv(params, cfg: AttnConfig, x, positions, dslr_digits=0):
+    B, S, _ = x.shape
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = cm.dense(params["wq"], x, dslr_digits).reshape(B, S, H, Dh)
+    k = cm.dense(params["wk"], x, dslr_digits).reshape(B, S, Hkv, Dh)
+    v = cm.dense(params["wv"], x, dslr_digits).reshape(B, S, Hkv, Dh)
+    if cfg.qk_norm:
+        q = cm.rmsnorm(params["q_norm"], q)
+        k = cm.rmsnorm(params["k_norm"], k)
+    if cfg.mrope_sections:
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    elif positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_apply(
+    params,
+    cfg: AttnConfig,
+    x: jax.Array,  # (B, S, d)
+    positions: Optional[jax.Array] = None,  # (B, S) or (3, B, S) for mrope
+    kv_cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+    cache_index: Optional[jax.Array] = None,
+    dslr_digits: int = 0,
+):
+    """Returns (out, new_kv_cache).  Prefill when kv_cache is None."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(params, cfg, x, positions, dslr_digits)
+    # NOTE: no explicit q/k/v constraints — head counts (e.g. kv=2) don't
+    # always divide the model axis; the projection-weight shardings propagate
+    # the right layout and avoid SPMD involuntary-remat copies.
+
+    if kv_cache is None:
+        out = blocked_attention(q, k, v, causal=cfg.causal, window=cfg.window)
+        new_cache = (k, v)
+    else:
+        # barrier: prevents XLA from hoisting this layer's cache read (and
+        # the CPU backend's bf16->f32 dot-legalization convert) out of the
+        # layer scan, which would materialize the full 28-layer cache in f32
+        ck, cv = jax.lax.optimization_barrier(kv_cache)
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, cache_index, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, cache_index, 0, 0))
+        out = blocked_attention(
+            q,
+            ck,
+            cv,
+            causal=cfg.causal,
+            window=cfg.window,
+            q_offset=cache_index,
+            kv_len=cache_index + S,
+        )
+        new_cache = (ck, cv)
+
+    out = out.reshape(B, S, cfg.n_heads * cfg.head_dim)
+    return cm.dense(params["wo"], out, dslr_digits), new_cache
+
+
+def gqa_cache_shape(cfg: AttnConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    # NOTE: sliding-window layers could keep only `window` positions (rolling
+    # buffer); we keep the full buffer for layout uniformity — flagged as a
+    # hillclimb candidate in EXPERIMENTS.md §Perf.
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return (
+        jax.ShapeDtypeStruct(shape, dtype),
+        jax.ShapeDtypeStruct(shape, dtype),
+    )
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+
+def mla_spec(cfg: AttnConfig):
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    return {
+        "q_a": cm.dense_spec(d, m.q_lora, ("embed", None)),
+        "q_a_norm": cm.rmsnorm_spec(m.q_lora, None),
+        "q_b": cm.dense_spec(m.q_lora, H * (m.d_nope + m.d_rope), (None, "q_proj")),
+        "kv_a": cm.dense_spec(d, m.kv_lora + m.d_rope, ("embed", None)),
+        "kv_a_norm": cm.rmsnorm_spec(m.kv_lora, None),
+        "kv_b": cm.dense_spec(m.kv_lora, H * (m.d_nope + m.d_v), (None, "kv_proj")),
+        "wo": cm.dense_spec(H * m.d_v, d, ("q_proj", "embed")),
+    }
+
+
+def mla_apply(
+    params,
+    cfg: AttnConfig,
+    x: jax.Array,
+    positions: Optional[jax.Array] = None,
+    kv_cache: Optional[jax.Array] = None,  # cached latent (B, S, kv_lora+d_rope)
+    cache_index: Optional[jax.Array] = None,
+    dslr_digits: int = 0,
+):
+    """DeepSeek-V2 MLA.  The *compressed latent* is what we cache — the
+    paper's 93% KV-memory saving — and heads are up-projected on the fly."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+
+    q = cm.dense(params["q_b"], cm.rmsnorm(params["q_a_norm"], cm.dense(params["q_a"], x, dslr_digits)), dslr_digits)
+    q = q.reshape(B, S, H, m.d_nope + m.d_rope)
+    q_nope, q_rope = q[..., : m.d_nope], q[..., m.d_nope :]
+    if positions is not None:
+        q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    latent = cm.dense(params["kv_a"], x, dslr_digits)  # (B, S, kv_lora + d_rope)
+
+    if kv_cache is None:
+        # prefill: up-project the latent to per-head K/V (compute-optimal)
+        c_kv = cm.rmsnorm(params["kv_a_norm"], latent[..., : m.kv_lora])
+        k_rope = latent[..., m.kv_lora :][:, :, None, :]  # (B, S, 1, d_rope)
+        if positions is not None:
+            k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+        kv = cm.dense(params["kv_b"], c_kv, dslr_digits).reshape(
+            B, S, H, m.d_nope + m.d_v
+        )
+        k_nope, v = kv[..., : m.d_nope], kv[..., m.d_nope :]
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, k_nope.shape[:-1] + (m.d_rope,))],
+            axis=-1,
+        )
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = blocked_attention(q_full, k, v, causal=cfg.causal)
+        out = out.reshape(B, S, H * m.d_v)
+        return cm.dense(params["wo"], out, dslr_digits), latent
+
+    # decode: *absorbed* attention in latent space (the MLA trick) — the
+    # cached compressed latent is attended directly; W_kv_b is folded into
+    # the query and output projections so the 32k cache is never expanded.
+    new_cache = jax.lax.dynamic_update_slice(
+        kv_cache, latent.astype(kv_cache.dtype), (0, cache_index, 0)
+    )
+    Sk = new_cache.shape[1]
+    c_kv = cm.rmsnorm(params["kv_a_norm"], new_cache[..., : m.kv_lora])
+    k_rope = new_cache[..., m.kv_lora :][:, :, None, :]  # (B, Sk, 1, d_rope)
+    kpos = jnp.broadcast_to(jnp.arange(Sk, dtype=jnp.int32)[None, :], (B, Sk))
+    k_rope = apply_rope(k_rope, kpos, cfg.rope_theta)[:, :, 0, :]
+
+    w_kv_b = params["kv_b"]["kernel"].reshape(m.kv_lora, H, m.d_nope + m.d_v)
+    w_k, w_v = w_kv_b[..., : m.d_nope], w_kv_b[..., m.d_nope :]
+    # absorb W_k into q: (B,S,H,dn) x (L,H,dn) -> (B,S,H,L); bf16 operands +
+    # f32 accumulation everywhere (explicit f32 casts of the cached latent
+    # would be hoisted into a full-cache f32 copy — see blocked_attention)
+    f32 = jnp.float32
+    q_lat = jnp.einsum(
+        "bshd,lhd->bshl", q_nope, w_k.astype(q_nope.dtype),
+        preferred_element_type=f32,
+    ).astype(x.dtype)
+    scale = (m.d_nope + m.d_rope) ** -0.5
+    s_nope = jnp.einsum("bshl,btl->bhst", q_lat, c_kv, preferred_element_type=f32)
+    s_rope = jnp.einsum(
+        "bshd,btd->bhst", q_rope, k_rope.astype(q_rope.dtype),
+        preferred_element_type=f32,
+    )
+    s = (s_nope + s_rope) * scale
+    kv_pos = jnp.arange(Sk)
+    valid = kv_pos[None, :] < (cache_index + S)
+    causal_ok = kv_pos[None, :] <= (cache_index + jnp.arange(S)[:, None])
+    s = jnp.where((valid & causal_ok)[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out_lat = jnp.einsum(
+        "bhst,btl->bshl", p.astype(x.dtype), c_kv, preferred_element_type=f32
+    ).astype(x.dtype)
+    out = jnp.einsum(
+        "bshl,lhd->bshd", out_lat, w_v.astype(x.dtype), preferred_element_type=f32
+    ).astype(x.dtype)
+    out = out.reshape(B, S, H * m.d_v)
+    return cm.dense(params["wo"], out, dslr_digits), new_cache
+
+
+def mla_cache_shape(cfg: AttnConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    m = cfg.mla
+    return jax.ShapeDtypeStruct((batch, max_len, m.kv_lora + m.d_rope), dtype)

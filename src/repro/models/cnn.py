@@ -1,0 +1,70 @@
+"""The paper's own networks (AlexNet / VGG-16 / ResNet-18 conv stacks) as
+runnable JAX models with a selectable execution mode:
+
+  * ``mode='float'``  — plain XLA convolutions (oracle)
+  * ``mode='dslr'``   — every conv computed by the bit-exact digit-serial
+                        LR SoP datapath (core.online.dslr_conv2d)
+
+Used by examples/cnn_inference.py and the functional-fidelity tests.  The
+throughput story for these nets is the cycle model (core.cycle_model); this
+module is the *numerical* reproduction.  ``width`` scales channel counts so
+smoke tests stay CPU-sized.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import online
+from repro.core.cycle_model import NETWORKS, ConvLayer
+from . import common as cm
+from .common import ParamSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class CnnConfig:
+    name: str  # alexnet | vgg16 | resnet18
+    width: float = 1.0  # channel scale for smoke runs
+    num_classes: int = 10
+    frac_bits: int = 8
+
+    def layers(self) -> List[ConvLayer]:
+        def s(c):  # scale channels, keep >= 4
+            return max(4, int(c * self.width))
+
+        out = []
+        for l in NETWORKS[self.name]:
+            n = l.n if l.n == 3 else s(l.n)
+            out.append(ConvLayer(l.name, l.k, s(l.m), n, l.r, l.c, l.stride))
+        return out
+
+
+def cnn_spec(cfg: CnnConfig):
+    spec = {}
+    for l in cfg.layers():
+        spec[l.name] = {
+            "w": ParamSpec((l.k, l.k, l.n, l.m), (None, None, None, "mlp"), "normal"),
+            "b": ParamSpec((l.m,), ("mlp",), "zeros"),
+        }
+    last_m = cfg.layers()[-1].m
+    spec["head"] = cm.dense_spec(last_m, cfg.num_classes, (None, None), bias=True)
+    return spec
+
+
+def cnn_apply(cfg: CnnConfig, params, x: jax.Array, mode: str = "float"):
+    """x: (B, H, W, 3).  Returns logits (B, num_classes)."""
+    for l in cfg.layers():
+        w = params[l.name]["w"]
+        pad = (l.k - 1) // 2
+        if mode == "dslr":
+            x = online.dslr_conv2d(
+                x, w, frac_bits=cfg.frac_bits, stride=l.stride, padding=pad
+            )
+        else:
+            x = online.conv2d_ref(x, w, stride=l.stride, padding=pad)
+        x = jax.nn.relu(x + params[l.name]["b"])
+    x = jnp.mean(x, axis=(1, 2))  # global average pool
+    return cm.dense(params["head"], x)

@@ -1,0 +1,212 @@
+"""Minimal param-pytree module system (no flax/haiku dependency).
+
+Models are defined as *spec builders*: pure functions from config to a nested
+dict of ``ParamSpec`` leaves.  A spec tree can then be materialized three
+ways, which is what makes the 405B dry-run possible:
+
+  * ``init_params``     — real arrays (smoke tests, examples)
+  * ``abstract_params`` — ShapeDtypeStructs, zero allocation (dry-run)
+  * ``param_pspecs``    — PartitionSpecs from the leaf's logical axes +
+                          the active logical->mesh rule table
+
+Apply functions are plain JAX functions of (params, inputs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical axis names (None = replicated)
+    init: str = "normal"  # normal | zeros | ones | scaled
+    scale: float = 1.0
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _init_leaf(spec: ParamSpec, key) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "normal":
+        fan_in = spec.shape[0] if spec.shape else 1
+        std = spec.scale / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(spec.dtype)
+    raise ValueError(spec.init)
+
+
+def init_params(spec_tree, key) -> Dict:
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, [_init_leaf(s, k) for s, k in zip(leaves, keys)])
+
+
+def abstract_params(spec_tree) -> Dict:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), spec_tree, is_leaf=is_spec
+    )
+
+
+# ---------------------------------------------------------------------------
+# logical axis -> mesh axis rules (MaxText-style), used by launch/sharding
+# ---------------------------------------------------------------------------
+
+# set by launch/; None means "no sharding constraints"
+_ACTIVE_RULES: Optional[Dict[str, Any]] = None
+_ACTIVE_MESH = None
+
+
+def set_active_rules(rules: Optional[Dict[str, Any]], mesh=None) -> None:
+    global _ACTIVE_RULES, _ACTIVE_MESH
+    _ACTIVE_RULES = rules
+    _ACTIVE_MESH = mesh
+
+
+def logical_to_mesh_axes(axes: Sequence[Optional[str]]):
+    if _ACTIVE_RULES is None:
+        return None
+    mesh_axes = []
+    used = set()
+    for ax in axes:
+        m = _ACTIVE_RULES.get(ax) if ax is not None else None
+        # a mesh axis may appear at most once in a PartitionSpec
+        if m is not None:
+            flat = tuple(m) if isinstance(m, (tuple, list)) else (m,)
+            flat = tuple(a for a in flat if a not in used)
+            used.update(flat)
+            m = flat if flat else None
+            if m is not None and len(m) == 1:
+                m = m[0]
+        mesh_axes.append(m)
+    return P(*mesh_axes)
+
+
+def param_pspecs(spec_tree):
+    return jax.tree.map(
+        lambda s: logical_to_mesh_axes(s.axes) or P(), spec_tree, is_leaf=is_spec
+    )
+
+
+def constrain(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Annotate an activation with logical axes (no-op without active rules).
+
+    Mesh axes whose size does not divide the tensor dimension are dropped
+    (e.g. seq->model sequence parallelism on a decode step's S == 1 axis).
+    """
+    if _ACTIVE_RULES is None:
+        return x
+    spec = logical_to_mesh_axes(axes)
+    if _ACTIVE_MESH is not None:
+        cleaned = []
+        for dim, part in zip(x.shape, spec):
+            if part is None:
+                cleaned.append(None)
+                continue
+            names = part if isinstance(part, tuple) else (part,)
+            size = 1
+            for n in names:
+                size *= _ACTIVE_MESH.shape[n]
+            cleaned.append(part if dim % size == 0 else None)
+        spec = P(*cleaned)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ---------------------------------------------------------------------------
+# elementary layers
+# ---------------------------------------------------------------------------
+
+
+def dense_spec(d_in: int, d_out: int, axes=("embed", "mlp"), bias=False, scale=1.0, dtype=jnp.float32):
+    spec = {"kernel": ParamSpec((d_in, d_out), axes, "normal", scale, dtype)}
+    if bias:
+        spec["bias"] = ParamSpec((d_out,), (axes[1],), "zeros", dtype=dtype)
+    return spec
+
+
+def dense(params, x, dslr_digits: int = 0):
+    """Linear layer; ``dslr_digits > 0`` switches to the paper's MSDF
+    digit-plane execution (weights parallel/stationary, activations
+    digit-serial) via core.dslr."""
+    w = params["kernel"].astype(x.dtype)
+    if dslr_digits:
+        from repro.core.dslr import dslr_matmul
+
+        shp = x.shape
+        y = dslr_matmul(x.reshape(-1, shp[-1]), w, n_digits=dslr_digits)
+        y = y.reshape(*shp[:-1], w.shape[-1]).astype(x.dtype)
+    else:
+        y = x @ w
+    if "bias" in params:
+        y = y + params["bias"].astype(y.dtype)
+    return y
+
+
+def rmsnorm_spec(d: int, axis="embed"):
+    return {"weight": ParamSpec((d,), (axis,), "ones")}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["weight"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_spec(d: int, axis="embed"):
+    return {
+        "weight": ParamSpec((d,), (axis,), "ones"),
+        "bias": ParamSpec((d,), (axis,), "zeros"),
+    }
+
+
+def layernorm(params, x, eps=1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["weight"] + params["bias"]).astype(dt)
+
+
+def embedding_spec(vocab: int, d: int, dtype=jnp.float32):
+    return {"table": ParamSpec((vocab, d), ("vocab", "embed"), "normal", 1.0, dtype)}
+
+
+def embed(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params, x):
+    """Tied output head: logits via the embedding table."""
+    return x @ params["table"].T
+
+
+def stack_specs(spec_tree, n_layers: int):
+    """Prepend a scanned 'layers' axis to every leaf (scan-over-layers)."""
+    return jax.tree.map(
+        lambda s: ParamSpec(
+            (n_layers,) + s.shape, ("layers",) + s.axes, s.init, s.scale, s.dtype
+        ),
+        spec_tree,
+        is_leaf=is_spec,
+    )
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)

@@ -1,0 +1,152 @@
+"""Architecture configuration: one dataclass covering all 10 assigned archs."""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax.numpy as jnp
+
+from .attention import AttnConfig, MlaConfig
+from .moe import MoeConfig
+from .ssm import MambaConfig, MlstmConfig, SlstmConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    ffn_kind: str = "swiglu"  # swiglu | geglu | mlp | none
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+    rope_theta: float = 10000.0
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    tie_embeddings: bool = True
+    # block pattern: list of (block_type, count); block types:
+    #   dense, moe, hybrid(_g/_w), mlstm, slstm, enc, dec
+    block_pattern: Tuple[Tuple[str, int], ...] = ()
+    # attention variants
+    mla: Optional[MlaConfig] = None
+    window: int = 0  # sliding window for *_w blocks
+    mrope_sections: Tuple[int, ...] = ()
+    # moe
+    moe: Optional[MoeConfig] = None
+    # ssm / recurrent
+    ssm_state: int = 16
+    ssm_chunk: int = 256  # mamba selective-scan chunk (activation/traffic knob)
+    mamba_d_inner: int = 0  # 0 -> 2 * d_model
+    mlstm_proj_factor: float = 2.0
+    # encoder-decoder (whisper): encoder pattern is separate
+    enc_layers: int = 0
+    # execution
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"  # bfloat16 for the HBM-critical giants
+    remat: bool = True
+    remat_policy: str = "full"  # full | save_ffn (keep FFN hidden, skip its recompute)
+    scan_layers: bool = True
+    dslr_digits: int = 0  # >0: paper's MSDF digit-serial linear execution
+    # distribution defaults (can be overridden per shape at dry-run time)
+    microbatches: int = 1
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to a 256 multiple so the (vocab, d) embedding
+        shards over model x data; padded logits are masked to -1e9."""
+        return -(-self.vocab // 256) * 256
+
+    @property
+    def act_dtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+    def attn_config(self, window: int = 0, causal: bool = True) -> AttnConfig:
+        return AttnConfig(
+            d_model=self.d_model,
+            n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads,
+            head_dim=self.resolved_head_dim,
+            rope_theta=self.rope_theta,
+            qk_norm=self.qk_norm,
+            qkv_bias=self.qkv_bias,
+            window=window,
+            mrope_sections=self.mrope_sections,
+            causal=causal,
+            mla=self.mla,
+        )
+
+    def mamba_config(self) -> MambaConfig:
+        return MambaConfig(
+            d_model=self.d_model,
+            d_inner=self.mamba_d_inner or 2 * self.d_model,
+            d_state=self.ssm_state,
+            chunk=self.ssm_chunk,
+        )
+
+    def mlstm_config(self) -> MlstmConfig:
+        return MlstmConfig(
+            d_model=self.d_model,
+            n_heads=self.n_heads,
+            proj_factor=self.mlstm_proj_factor,
+        )
+
+    def slstm_config(self) -> SlstmConfig:
+        return SlstmConfig(d_model=self.d_model, n_heads=self.n_heads)
+
+    def pattern(self) -> List[Tuple[str, int]]:
+        if self.block_pattern:
+            return list(self.block_pattern)
+        kind = "moe" if self.moe is not None else "dense"
+        return [(kind, self.n_layers)]
+
+    def smoke(self) -> "ArchConfig":
+        """Reduced same-family config for CPU smoke tests."""
+        scale = {}
+        scale["n_layers"] = min(self.n_layers, 2)
+        scale["d_model"] = 64
+        scale["n_heads"] = 4
+        scale["n_kv_heads"] = min(self.n_kv_heads, 2) if self.n_kv_heads < self.n_heads else 4
+        scale["head_dim"] = 16
+        scale["d_ff"] = 128 if self.d_ff else 0
+        scale["vocab"] = 256
+        scale["microbatches"] = 1
+        scale["dtype"] = "float32"
+        if self.moe is not None:
+            # capacity_factor 8: smoke batches are tiny, so capacity-based
+            # token dropping would make prefill/decode outputs legitimately
+            # diverge from a full forward; drop-free keeps tests exact
+            scale["moe"] = dataclasses.replace(
+                self.moe, n_experts=8, top_k=2, d_ff=32,
+                shared_d_ff=32 if self.moe.n_shared else 0,
+                capacity_factor=8.0,
+            )
+        if self.mla is not None:
+            scale["mla"] = MlaConfig(kv_lora=32, q_lora=48, d_nope=16, d_rope=8, d_v=16)
+        if self.block_pattern:
+            scale["block_pattern"] = _shrink_pattern(self.block_pattern)
+        if self.enc_layers:
+            scale["enc_layers"] = 2
+        if self.mamba_d_inner:
+            scale["mamba_d_inner"] = 128
+        if self.mrope_sections:
+            scale["mrope_sections"] = (2, 3, 3)
+        scale["window"] = min(self.window, 32) if self.window else 0
+        return dataclasses.replace(self, **scale)
+
+
+def _shrink_pattern(pattern):
+    """Keep one or two layers of each distinct block type, preserving order."""
+    out, seen = [], set()
+    for kind, _ in pattern:
+        if kind not in seen:
+            out.append((kind, 1))
+            seen.add(kind)
+    return tuple(out)

@@ -1,0 +1,40 @@
+"""Feed-forward blocks: SwiGLU / GeGLU / ReLU-MLP (+ DSLR execution mode)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+
+
+def ffn_spec(d_model: int, d_ff: int, kind: str = "swiglu"):
+    if kind in ("swiglu", "geglu"):
+        return {
+            "wi_gate": cm.dense_spec(d_model, d_ff, ("embed", "mlp")),
+            "wi_up": cm.dense_spec(d_model, d_ff, ("embed", "mlp")),
+            "wo": cm.dense_spec(d_ff, d_model, ("mlp", "embed")),
+        }
+    if kind == "mlp":  # whisper-style GELU MLP with biases
+        return {
+            "wi": cm.dense_spec(d_model, d_ff, ("embed", "mlp"), bias=True),
+            "wo": cm.dense_spec(d_ff, d_model, ("mlp", "embed"), bias=True),
+        }
+    raise ValueError(kind)
+
+
+def ffn_apply(params, x, kind: str = "swiglu", dslr_digits: int = 0):
+    if kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if kind == "swiglu" else cm.gelu
+        g = cm.dense(params["wi_gate"], x, dslr_digits)
+        u = cm.dense(params["wi_up"], x, dslr_digits)
+        h = act(g) * u
+        h = cm.constrain(h, "batch", "seq", "mlp")
+        from jax.ad_checkpoint import checkpoint_name
+
+        h = checkpoint_name(h, "ffn_hidden")
+        return cm.dense(params["wo"], h, dslr_digits)
+    if kind == "mlp":
+        h = cm.gelu(cm.dense(params["wi"], x, dslr_digits))
+        h = cm.constrain(h, "batch", "seq", "mlp")
+        return cm.dense(params["wo"], h, dslr_digits)
+    raise ValueError(kind)

@@ -1,0 +1,121 @@
+"""Mixture-of-Experts with capacity-based sort-free dispatch (EP-shardable).
+
+Implements the routed-experts layer used by kimi-k2 (384e top-8 + 1 shared)
+and deepseek-v2 (160e top-6 + 2 shared).  Dispatch is the scatter/gather
+formulation (no (T, E, C) one-hot tensor), so activation memory stays
+O(T*k + E*C*d) and expert compute is the *active* FLOPs — which is what the
+roofline's 6*N_active*D model expects:
+
+  1. router logits -> top-k experts + gates per token
+  2. position-in-expert via a cumsum rank over the (T, E) assignment mask
+  3. tokens scattered into an (E * C, d) buffer (capacity drops -> dump row)
+  4. batched expert FFN: einsum over the E axis (sharded over 'expert')
+  5. gather back + gate-weighted combine
+
+Expert weights carry the 'expert' logical axis -> mapped to the model mesh
+axis (expert parallelism); XLA inserts the dispatch all-to-alls.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+from .common import ParamSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class MoeConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int  # per-expert hidden
+    n_shared: int = 0
+    shared_d_ff: int = 0  # defaults to d_ff * n_shared when 0
+    capacity_factor: float = 1.25
+    router_noise: float = 0.0
+
+
+def moe_spec(d_model: int, mcfg: MoeConfig):
+    E, dff = mcfg.n_experts, mcfg.d_ff
+    spec = {
+        "router": ParamSpec((d_model, E), ("embed", None), "normal", 1.0),
+        # EP over 'model' (expert axis) + FSDP over 'data' on d_model.
+        # NOTE (hillclimb K1, refuted): moving the FSDP shard to d_ff to kill
+        # the wi partial-sum all-reduces made the partitioner replicate
+        # expert compute (FLOPs 7.5 -> 13.0 TF/chip) and DOUBLED collective
+        # bytes; the original layout is kept.  See EXPERIMENTS.md §Perf.
+        "wi_gate": ParamSpec((E, d_model, dff), ("expert", "embed", "mlp"), "normal"),
+        "wi_up": ParamSpec((E, d_model, dff), ("expert", "embed", "mlp"), "normal"),
+        "wo": ParamSpec((E, dff, d_model), ("expert", "mlp", "embed"), "normal"),
+    }
+    if mcfg.n_shared:
+        sdff = mcfg.shared_d_ff or mcfg.d_ff * mcfg.n_shared
+        spec["shared"] = {
+            "wi_gate": cm.dense_spec(d_model, sdff, ("embed", "mlp")),
+            "wi_up": cm.dense_spec(d_model, sdff, ("embed", "mlp")),
+            "wo": cm.dense_spec(sdff, d_model, ("mlp", "embed")),
+        }
+    return spec
+
+
+def moe_apply(params, x: jax.Array, mcfg: MoeConfig, dslr_digits: int = 0):
+    """x: (B, S, d) -> (B, S, d); aux loss returned separately."""
+    B, S, d = x.shape
+    E, K = mcfg.n_experts, mcfg.top_k
+    T = B * S
+    xt = x.reshape(T, d)
+
+    logits = (xt.astype(jnp.float32)) @ params["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # (T, E)
+    gates, idx = jax.lax.top_k(probs, K)  # (T, K)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(1.0) / (T * K)
+    aux_loss = E * jnp.sum(me * ce)
+
+    capacity = max(1, int(-(-T * K // E) * mcfg.capacity_factor))  # ceil(TK/E)*f
+
+    # position of each (token, k) assignment within its expert queue
+    assign = jax.nn.one_hot(idx, E, dtype=jnp.int32)  # (T, K, E)
+    assign_flat = assign.reshape(T * K, E)
+    pos_in_expert = jnp.cumsum(assign_flat, axis=0) - assign_flat  # (T*K, E)
+    pos = jnp.sum(pos_in_expert * assign_flat, axis=-1)  # (T*K,)
+    e_flat = idx.reshape(T * K)
+    keep = pos < capacity
+    # scatter-ADD (associative -> partial local scatters + reduce) with
+    # dropped tokens masked to zero contributions at slot 0; no dump row so
+    # the buffer stays (E*C, d) and divisible for expert sharding
+    slot = jnp.where(keep, e_flat * capacity + jnp.minimum(pos, capacity - 1), 0)
+    xk = jnp.repeat(xt, K, axis=0)  # (T*K, d) token per assignment
+    xk = jnp.where(keep[:, None], xk, 0)
+    buf = jnp.zeros((E * capacity, d), x.dtype).at[slot].add(xk)
+    eb = buf.reshape(E, capacity, d)
+    # NOTE (hillclimb K3, refuted): the capacity dim is replicated across the
+    # 'data' axis, so expert matmuls carry redundant FLOPs across data ranks.
+    # Constraining it to 'data' ("expert","batch",None) made the partitioner
+    # produce 2.5x MORE per-chip FLOPs (reshard thrash); the proper fix is a
+    # shard_map dispatch with ragged all-to-alls.  See EXPERIMENTS.md §Perf.
+    eb = cm.constrain(eb, "expert", None, None)
+
+    # batched expert SwiGLU
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", eb, params["wi_gate"].astype(x.dtype)))
+    h = h * jnp.einsum("ecd,edf->ecf", eb, params["wi_up"].astype(x.dtype))
+    h = cm.constrain(h, "expert", None, "mlp")
+    out_b = jnp.einsum("ecf,efd->ecd", h, params["wo"].astype(x.dtype))
+
+    out_flat = out_b.reshape(E * capacity, d)
+    gathered = out_flat[slot]  # (T*K, d)
+    gathered = gathered * (gates.reshape(T * K, 1) * keep[:, None]).astype(x.dtype)
+    y = gathered.reshape(T, K, d).sum(axis=1)
+
+    if mcfg.n_shared:
+        from .ffn import ffn_apply
+
+        y = y + ffn_apply(params["shared"], xt, "swiglu", dslr_digits)
+
+    return y.reshape(B, S, d), aux_loss

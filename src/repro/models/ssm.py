@@ -1,0 +1,445 @@
+"""State-space & recurrent blocks: Mamba (S6), mLSTM, sLSTM.
+
+These are the sub-quadratic architectures that legitimately run the
+long_500k shape: per-token state is O(1) in sequence length.
+
+  * Mamba (hymba's parallel-SSM heads): selective scan implemented with
+    ``jax.lax.associative_scan`` over the linear recurrence
+    h_t = a_t * h_{t-1} + b_t  (a_t = exp(dt * A)), giving O(S log S) work
+    and O(S) memory for training/prefill, plus an O(1) single-step update
+    for decode.
+  * mLSTM (xLSTM): matrix-memory cell in *chunkwise* form — intra-chunk
+    quadratic attention-like term + inter-chunk recurrent state carried by a
+    scan, i.e. O(S * chunk) not O(S^2).
+  * sLSTM (xLSTM): scalar-memory cell with exponential gating and a true
+    hidden-state recurrence -> sequential lax.scan (that is its nature).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+from .common import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# Mamba / S6
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_model: int
+    d_inner: int
+    d_state: int = 16
+    d_conv: int = 4
+    dt_rank: int = 0  # 0 -> ceil(d_model / 16)
+    chunk: int = 256  # selective-scan chunking (bounds activation memory)
+
+    @property
+    def rank(self) -> int:
+        return self.dt_rank or -(-self.d_model // 16)
+
+
+def mamba_spec(mc: MambaConfig):
+    return {
+        "in_proj": cm.dense_spec(mc.d_model, 2 * mc.d_inner, ("embed", "mlp")),
+        "conv_w": ParamSpec((mc.d_conv, mc.d_inner), (None, "mlp"), "normal", 1.0),
+        "conv_b": ParamSpec((mc.d_inner,), ("mlp",), "zeros"),
+        "x_proj": cm.dense_spec(mc.d_inner, mc.rank + 2 * mc.d_state, ("mlp", None)),
+        "dt_proj": cm.dense_spec(mc.rank, mc.d_inner, (None, "mlp"), bias=True),
+        "a_log": ParamSpec((mc.d_inner, mc.d_state), ("mlp", None), "ones"),
+        "d_skip": ParamSpec((mc.d_inner,), ("mlp",), "ones"),
+        "out_proj": cm.dense_spec(mc.d_inner, mc.d_model, ("mlp", "embed")),
+    }
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array  # (B, d_conv - 1, d_inner) rolling conv window
+    ssm: jax.Array  # (B, d_inner, d_state)
+
+
+def mamba_state_shape(mc: MambaConfig, batch: int, dtype=jnp.float32):
+    return MambaState(
+        conv=jax.ShapeDtypeStruct((batch, mc.d_conv - 1, mc.d_inner), dtype),
+        ssm=jax.ShapeDtypeStruct((batch, mc.d_inner, mc.d_state), dtype),
+    )
+
+
+def _mamba_ssm_terms(params, mc: MambaConfig, xc: jax.Array):
+    """Common S6 term computation. xc: (B, S, d_inner) post-conv."""
+    proj = cm.dense(params["x_proj"], xc)
+    dt_in, Bmat, Cmat = jnp.split(proj, [mc.rank, mc.rank + mc.d_state], axis=-1)
+    dt = jax.nn.softplus(cm.dense(params["dt_proj"], dt_in))  # (B, S, dI)
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))  # (dI, N), negative
+    a = jnp.exp(dt[..., None].astype(jnp.float32) * A)  # (B, S, dI, N)
+    bx = (dt[..., None] * Bmat[..., None, :] * xc[..., None]).astype(jnp.float32)
+    return a, bx, Cmat
+
+
+def mamba_apply(
+    params,
+    mc: MambaConfig,
+    x: jax.Array,  # (B, S, d_model)
+    state: Optional[MambaState] = None,
+    want_state: bool = False,
+):
+    """Returns (y, new_state).  Training when state is None and
+    want_state=False; prefill captures the final state; decode threads it."""
+    B, S, _ = x.shape
+    xz = cm.dense(params["in_proj"], x)
+    xi, z = jnp.split(xz, 2, axis=-1)  # (B, S, dI) each
+
+    if state is None:
+        # causal depthwise conv via padding
+        xp = jnp.pad(xi, ((0, 0), (mc.d_conv - 1, 0), (0, 0)))
+        conv_in = xp
+        new_conv = xp[:, -(mc.d_conv - 1) :, :] if mc.d_conv > 1 else None
+    else:
+        conv_in = jnp.concatenate([state.conv.astype(xi.dtype), xi], axis=1)
+        new_conv = conv_in[:, -(mc.d_conv - 1) :, :]
+
+    # depthwise causal conv, kernel (d_conv, dI)
+    w = params["conv_w"].astype(xi.dtype)
+    xc = sum(
+        conv_in[:, i : i + S, :] * w[i][None, None, :] for i in range(mc.d_conv)
+    ) + params["conv_b"].astype(xi.dtype)
+    xc = jax.nn.silu(xc)
+
+    if state is None:
+        # chunked selective scan: the discretized (B, S, dI, N) tensors are
+        # too large to materialize at 4k/32k sequence lengths, so compute
+        # them per chunk; h state threads between chunks via lax.scan, and
+        # the intra-chunk linear recurrence uses associative_scan.
+        Ck = min(mc.chunk, S)
+        assert S % Ck == 0, (S, Ck)
+        G = S // Ck
+        xg = jnp.moveaxis(xc.reshape(B, G, Ck, -1), 1, 0)  # (G, B, Ck, dI)
+
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, bl * ar + br
+
+        def chunk_step(h0, xck):
+            a, bx, Cmat = _mamba_ssm_terms(params, mc, xck)
+            # fold the inter-chunk state into the first step's offset
+            acum, hin = jax.lax.associative_scan(combine, (a, bx), axis=1)
+            h = hin + acum * h0[:, None]
+            yk = jnp.einsum("bsdn,bsn->bsd", h, Cmat.astype(jnp.float32))
+            return h[:, -1], yk.astype(x.dtype)
+
+        h0 = jnp.zeros((B, xi.shape[-1], mc.d_state), jnp.float32)
+        new_ssm, yg = jax.lax.scan(chunk_step, h0, xg)
+        y = jnp.moveaxis(yg, 0, 1).reshape(B, S, -1)
+    else:
+        a, bx, Cmat = _mamba_ssm_terms(params, mc, xc)
+        h0 = state.ssm.astype(jnp.float32)
+
+        def step(hprev, t):
+            hnew = a[:, t] * hprev + bx[:, t]
+            return hnew, hnew
+
+        new_ssm, hs = jax.lax.scan(step, h0, jnp.arange(S))
+        h = jnp.moveaxis(hs, 0, 1)
+        y = jnp.einsum("bsdn,bsn->bsd", h, Cmat.astype(jnp.float32)).astype(x.dtype)
+
+    y = y + params["d_skip"].astype(x.dtype) * xc
+    y = y * jax.nn.silu(z)
+    out = cm.dense(params["out_proj"], y)
+    if state is not None or want_state:
+        new_state = MambaState(
+            conv=new_conv.astype(jnp.float32), ssm=new_ssm.astype(jnp.float32)
+        )
+    else:
+        new_state = None
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix memory) — chunkwise-parallel
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MlstmConfig:
+    d_model: int
+    n_heads: int
+    proj_factor: float = 2.0
+    chunk: int = 512
+
+    @property
+    def d_inner(self) -> int:
+        return int(self.d_model * self.proj_factor)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.n_heads
+
+
+def mlstm_spec(mc: MlstmConfig):
+    dI, H, Dh = mc.d_inner, mc.n_heads, mc.head_dim
+    return {
+        "up_proj": cm.dense_spec(mc.d_model, 2 * dI, ("embed", "mlp")),
+        # q/k/v are per-head block-diagonal (heads don't mix), as in xLSTM
+        "wq": ParamSpec((H, Dh, Dh), (None, "mlp", None), "normal"),
+        "wk": ParamSpec((H, Dh, Dh), (None, "mlp", None), "normal"),
+        "wv": ParamSpec((H, Dh, Dh), (None, "mlp", None), "normal"),
+        "w_i": cm.dense_spec(dI, mc.n_heads, ("mlp", None), bias=True),
+        "w_f": cm.dense_spec(dI, mc.n_heads, ("mlp", None), bias=True),
+        "norm": cm.rmsnorm_spec(dI, None),
+        "down_proj": cm.dense_spec(dI, mc.d_model, ("mlp", "embed")),
+    }
+
+
+class MlstmState(NamedTuple):
+    C: jax.Array  # (B, H, Dh, Dh) matrix memory
+    n: jax.Array  # (B, H, Dh) normalizer
+    m: jax.Array  # (B, H) stabilizer (log domain)
+
+
+def mlstm_state_shape(mc: MlstmConfig, batch: int, dtype=jnp.float32):
+    H, Dh = mc.n_heads, mc.head_dim
+    return MlstmState(
+        C=jax.ShapeDtypeStruct((batch, H, Dh, Dh), dtype),
+        n=jax.ShapeDtypeStruct((batch, H, Dh), dtype),
+        m=jax.ShapeDtypeStruct((batch, H), dtype),
+    )
+
+
+def _mlstm_qkv_gates(params, mc: MlstmConfig, x):
+    B, S, _ = x.shape
+    H, Dh = mc.n_heads, mc.head_dim
+    up, z = jnp.split(cm.dense(params["up_proj"], x), 2, axis=-1)
+    uph = up.reshape(B, S, H, Dh)
+
+    def headwise(w):
+        return jnp.einsum("bshd,hde->bshe", uph, w.astype(up.dtype))
+
+    q = headwise(params["wq"])
+    k = headwise(params["wk"]) * (Dh**-0.5)
+    v = headwise(params["wv"])
+    log_i = cm.dense(params["w_i"], up)  # (B, S, H) input gate (log via exp)
+    log_f = jax.nn.log_sigmoid(cm.dense(params["w_f"], up))  # forget in (0,1)
+    return q, k, v, log_i, log_f, z
+
+
+def mlstm_apply(
+    params,
+    mc: MlstmConfig,
+    x: jax.Array,
+    state: Optional[MlstmState] = None,
+    want_state: bool = False,
+):
+    """Chunkwise mLSTM. state != None -> recurrent decode (S small)."""
+    B, S, _ = x.shape
+    H, Dh = mc.n_heads, mc.head_dim
+    q, k, v, log_i, log_f, z = _mlstm_qkv_gates(params, mc, x)
+
+    if state is not None:
+        # recurrent decode (S is tiny, typically 1): exact cell update
+        C, n, m = state.C.astype(jnp.float32), state.n.astype(jnp.float32), state.m.astype(jnp.float32)
+        outs = []
+        for t in range(S):
+            i_t = log_i[:, t].astype(jnp.float32)
+            f_t = log_f[:, t].astype(jnp.float32)
+            kt = k[:, t].astype(jnp.float32)  # (B, H, Dh)
+            vt = v[:, t].astype(jnp.float32)
+            qt = q[:, t].astype(jnp.float32)
+            m_new = jnp.maximum(f_t + m, i_t)
+            fe = jnp.exp(f_t + m - m_new)
+            ie = jnp.exp(i_t - m_new)
+            C = fe[..., None, None] * C + ie[..., None, None] * (
+                kt[..., :, None] * vt[..., None, :]
+            )
+            n = fe[..., None] * n + ie[..., None] * kt
+            m = m_new
+            num = jnp.einsum("bhd,bhde->bhe", qt, C)
+            den = jnp.maximum(
+                jnp.abs(jnp.einsum("bhd,bhd->bh", qt, n)),
+                jnp.exp(jnp.minimum(-m, 80.0)),  # stabilized bound, = chunkwise
+            )
+            outs.append((num / den[..., None]).astype(x.dtype))
+        h = jnp.stack(outs, axis=1).reshape(B, S, H * Dh)
+        new_state = MlstmState(C=C, n=n, m=m)
+    else:
+        h, fin = _mlstm_chunkwise(q, k, v, log_i, log_f, mc)
+        new_state = MlstmState(*fin) if want_state else None
+
+    h = cm.rmsnorm(params["norm"], h) * jax.nn.silu(z)
+    return cm.dense(params["down_proj"], h), new_state
+
+
+def _mlstm_chunkwise(q, k, v, log_i, log_f, mc: MlstmConfig):
+    """O(S * chunk): intra-chunk quadratic + inter-chunk recurrent state."""
+    B, S, H, Dh = q.shape
+    C = min(mc.chunk, S)
+    assert S % C == 0, (S, C)
+    G = S // C
+
+    def r(t):  # (B, S, ...) -> (G, B, C, ...)
+        return jnp.moveaxis(t.reshape(B, G, C, *t.shape[2:]), 1, 0)
+
+    qg, kg, vg = r(q.astype(jnp.float32)), r(k.astype(jnp.float32)), r(v.astype(jnp.float32))
+    ig, fg = r(log_i.astype(jnp.float32)), r(log_f.astype(jnp.float32))
+
+    # cumulative log-forget within chunk: b[t] = sum_{u<=t} f[u]
+    bcum = jnp.cumsum(fg, axis=2)  # (G, B, C, H)
+
+    def chunk_step(carry, inp):
+        Cs, ns, ms = carry  # (B, H, Dh, Dh), (B, H, Dh), (B, H)
+        qc, kc, vc, ic, fc, bc = inp
+        btot = bc[:, -1]  # (B, C... ) wait shapes: bc (B, C, H)
+        btot = bc[:, -1, :]  # (B, H) total log forget of the chunk
+        # log weight of state contribution at position t: bc[t] + m
+        # intra-chunk pair weights: D[t,u] = bc[t] - bc[u] + ic[u]  (u <= t)
+        # NOTE: -1e30 (finite) instead of -inf — inf-masking NaNs the VJP
+        dmat = bc[:, :, None, :] - bc[:, None, :, :] + ic[:, None, :, :]  # (B,C,C,H)
+        causal = jnp.tril(jnp.ones((C, C), bool))
+        dmat = jnp.where(causal[None, :, :, None], dmat, -1e30)
+        m_intra = jnp.max(dmat, axis=2)  # (B, C, H)
+        m_state = bc + ms[:, None, :]  # (B, C, H)
+        m_t = jnp.maximum(m_intra, m_state)
+
+        w_state = jnp.exp(m_state - m_t)  # (B, C, H)
+        pmat = jnp.where(
+            causal[None, :, :, None], jnp.exp(dmat - m_t[:, :, None, :]), 0.0
+        )  # (B, C, C, H)
+
+        sk = jnp.einsum("bthd,buhd->btuh", qc, kc)  # raw q.k scores
+        inter_num = jnp.einsum("bthd,bhde->bthe", qc, Cs) * w_state[..., None]
+        intra_num = jnp.einsum("btuh,btuh,buhe->bthe", pmat, sk, vc)
+        num = inter_num + intra_num
+        inter_den = jnp.einsum("bthd,bhd->bth", qc, ns) * w_state
+        intra_den = jnp.einsum("btuh,btuh->bth", pmat, sk)
+        den = jnp.maximum(
+            jnp.abs(inter_den + intra_den), jnp.exp(jnp.minimum(-m_t, 80.0))
+        )
+        out = num / den[..., None]
+
+        # state update to end of chunk
+        m_new = jnp.maximum(btot + ms, jnp.max(bc[:, -1:, :] - bc + ic, axis=1))
+        wk = jnp.exp(btot[:, None, :] - bc + ic - m_new[:, None, :])  # (B, C, H)
+        Cs_new = jnp.exp(btot + ms - m_new)[..., None, None] * Cs + jnp.einsum(
+            "bch,bchd,bche->bhde", wk, kc, vc
+        )
+        ns_new = jnp.exp(btot + ms - m_new)[..., None] * ns + jnp.einsum(
+            "bch,bchd->bhd", wk, kc
+        )
+        return (Cs_new, ns_new, m_new), out
+
+    C0 = jnp.zeros((B, H, Dh, Dh), jnp.float32)
+    n0 = jnp.zeros((B, H, Dh), jnp.float32)
+    # -30 (not -1e30): a soft -inf that keeps every exp()/VJP finite while
+    # the zero state it weights contributes nothing anyway
+    m0 = jnp.full((B, H), -30.0, jnp.float32)
+    fin, outs = jax.lax.scan(chunk_step, (C0, n0, m0), (qg, kg, vg, ig, fg, bcum))
+    h = jnp.moveaxis(outs, 0, 1).reshape(B, S, H * Dh)
+    return h.astype(q.dtype), fin
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM scalar memory)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SlstmConfig:
+    d_model: int
+    n_heads: int
+    unroll: int = 8  # timesteps per scan iteration: amortizes the R read
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+def slstm_spec(sc: SlstmConfig):
+    d = sc.d_model
+    return {
+        "w_in": cm.dense_spec(d, 4 * d, ("embed", "mlp"), bias=True),  # i,f,z,o
+        "r_in": ParamSpec((sc.n_heads, sc.head_dim, 4 * sc.head_dim), (None, None, None), "normal"),
+        "norm": cm.rmsnorm_spec(d, None),
+        "out": cm.dense_spec(d, d, ("embed", "embed2")),
+    }
+
+
+class SlstmState(NamedTuple):
+    c: jax.Array  # (B, d)
+    n: jax.Array  # (B, d)
+    h: jax.Array  # (B, d)
+    m: jax.Array  # (B, d)
+
+
+def slstm_state_shape(sc: SlstmConfig, batch: int, dtype=jnp.float32):
+    s = jax.ShapeDtypeStruct((batch, sc.d_model), dtype)
+    return SlstmState(c=s, n=s, h=s, m=s)
+
+
+def slstm_apply(
+    params,
+    sc: SlstmConfig,
+    x: jax.Array,
+    state: Optional[SlstmState] = None,
+    want_state: bool = False,
+):
+    """True recurrent cell (hidden-state feedback) -> sequential scan."""
+    B, S, d = x.shape
+    H, Dh = sc.n_heads, sc.head_dim
+    wx = cm.dense(params["w_in"], x)  # (B, S, 4d)
+
+    if state is None:
+        zeros = jnp.zeros((B, d), jnp.float32)
+        st = SlstmState(zeros, zeros, zeros, jnp.full((B, d), -30.0, jnp.float32))
+    else:
+        st = SlstmState(*(s.astype(jnp.float32) for s in state))
+
+    # bf16 recurrent weights: the per-timestep R re-read dominates sLSTM HBM
+    # traffic (loop-invariant 4*d*Dh matrix read every step); halving its
+    # bytes halves the dominant term.  Gates/state stay f32 for stability.
+    # (f32 when activations are f32 — XLA-CPU cannot *execute* bf16 dots,
+    # though it compiles them; full-scale configs are bf16 and dry-run only.)
+    r_dtype = jnp.bfloat16 if x.dtype == jnp.bfloat16 else jnp.float32
+    r_w = params["r_in"].astype(r_dtype)  # (H, Dh, 4Dh)
+
+    def cell(carry, g_in):
+        c, n, h, m = carry
+        rec = jnp.einsum(
+            "bhd,hde->bhe",
+            h.reshape(B, H, Dh).astype(r_dtype),
+            r_w,
+            preferred_element_type=jnp.float32,
+        ).reshape(B, 4 * d)
+        g = g_in.astype(jnp.float32) + rec
+        gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+        m_new = jnp.maximum(gf + m, gi)  # exponential gating stabilizer
+        ie = jnp.exp(gi - m_new)
+        fe = jnp.exp(gf + m - m_new)
+        c_new = fe * c + ie * jnp.tanh(gz)
+        n_new = fe * n + ie
+        h_new = jax.nn.sigmoid(go) * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    # time-block unrolling: U cell updates per scan iteration so the
+    # (loop-invariant) recurrent matrix is fetched once per U steps — the
+    # weight-stationary principle of the paper's PE applied to the RNN
+    U = sc.unroll if S % max(sc.unroll, 1) == 0 and S >= sc.unroll else 1
+    wxb = jnp.moveaxis(wx.reshape(B, S // U, U, 4 * d), 1, 0)  # (S/U, B, U, 4d)
+
+    def block_step(carry, wx_blk):
+        hs_blk = []
+        for u in range(U):
+            carry, h_u = cell(carry, wx_blk[:, u])
+            hs_blk.append(h_u)
+        return carry, jnp.stack(hs_blk, axis=1)  # (B, U, d)
+
+    (c, n, h, m), hs = jax.lax.scan(block_step, tuple(st), wxb)
+    y = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(x.dtype)
+    y = cm.rmsnorm(params["norm"], y)
+    out = cm.dense(params["out"], y)
+    new_state = SlstmState(c, n, h, m) if (state is not None or want_state) else None
+    return out, new_state

@@ -1,0 +1,468 @@
+"""Transformer assembly: block specs, scan-over-layers apply, train loss,
+prefill and single-token decode — for every assigned architecture family.
+
+Key structural decisions for 1000+-chip runnability:
+  * scan-over-layers with stacked params (compact HLO independent of depth),
+  * jax.checkpoint (full remat) around each scanned block body,
+  * caches are stacked per block-group and threaded through the same scan,
+  * heterogeneous stacks (xLSTM s/m interleave, Hymba global/window mix,
+    whisper enc/dec) are expressed as consecutive homogeneous *groups*,
+    each with its own scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import common as cm
+from . import ffn as ffn_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .config import ArchConfig
+
+# =============================================================================
+# block specs
+# =============================================================================
+
+
+def _norm_spec(cfg: ArchConfig):
+    return (
+        cm.rmsnorm_spec(cfg.d_model)
+        if cfg.norm == "rmsnorm"
+        else cm.layernorm_spec(cfg.d_model)
+    )
+
+
+def _norm(cfg: ArchConfig, p, x):
+    return cm.rmsnorm(p, x) if cfg.norm == "rmsnorm" else cm.layernorm(p, x)
+
+
+def block_spec(cfg: ArchConfig, kind: str):
+    """Parameter spec for one block of the given kind."""
+    s: Dict[str, Any] = {"norm_attn": _norm_spec(cfg)}
+    acfg = cfg.attn_config()
+    if kind in ("dense", "moe", "hybrid_g", "hybrid_w", "enc", "dec"):
+        s["attn"] = attn.mla_spec(acfg) if cfg.mla else attn.gqa_spec(acfg)
+    if kind == "dec":
+        s["norm_cross"] = _norm_spec(cfg)
+        s["cross"] = attn.gqa_spec(cfg.attn_config(causal=False))
+    if kind in ("hybrid_g", "hybrid_w"):
+        s["mamba"] = ssm_mod.mamba_spec(cfg.mamba_config())
+        s["norm_mamba"] = _norm_spec(cfg)
+    if kind == "mlstm":
+        s = {"norm_attn": _norm_spec(cfg), "mlstm": ssm_mod.mlstm_spec(cfg.mlstm_config())}
+    if kind == "slstm":
+        s = {"norm_attn": _norm_spec(cfg), "slstm": ssm_mod.slstm_spec(cfg.slstm_config())}
+    if kind in ("dense", "hybrid_g", "hybrid_w", "enc", "dec") and cfg.ffn_kind != "none":
+        s["norm_ffn"] = _norm_spec(cfg)
+        s["ffn"] = ffn_mod.ffn_spec(cfg.d_model, cfg.d_ff, cfg.ffn_kind)
+    if kind == "moe":
+        s["norm_ffn"] = _norm_spec(cfg)
+        s["moe"] = moe_mod.moe_spec(cfg.d_model, cfg.moe)
+    return s
+
+
+def block_apply(
+    cfg: ArchConfig,
+    kind: str,
+    params,
+    x: jax.Array,
+    positions,
+    cache=None,
+    cache_index=None,
+    enc_out: Optional[jax.Array] = None,
+    want_cache: bool = False,
+):
+    """One block. Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    dd = cfg.dslr_digits
+    new_cache: Dict[str, Any] = {}
+    cache = cache or {}
+    want_cache = want_cache or bool(cache)
+
+    if kind in ("mlstm", "slstm"):
+        h = _norm(cfg, params["norm_attn"], x)
+        if kind == "mlstm":
+            out, st = ssm_mod.mlstm_apply(
+                params["mlstm"], cfg.mlstm_config(), h, cache.get("mlstm"),
+                want_state=want_cache,
+            )
+            if st is not None:
+                new_cache["mlstm"] = st
+        else:
+            out, st = ssm_mod.slstm_apply(
+                params["slstm"], cfg.slstm_config(), h, cache.get("slstm"),
+                want_state=want_cache,
+            )
+            if st is not None:
+                new_cache["slstm"] = st
+        return x + out, new_cache, aux
+
+    window = cfg.window if kind == "hybrid_w" else 0
+    acfg = cfg.attn_config(window=window, causal=(kind != "enc"))
+    h = _norm(cfg, params["norm_attn"], x)
+
+    if cfg.mla:
+        a_out, kv = attn.mla_apply(
+            params["attn"], acfg, h, positions, cache.get("kv"), cache_index, dd
+        )
+    else:
+        a_out, kv = attn.gqa_apply(
+            params["attn"], acfg, h, positions, cache.get("kv"), cache_index, dd
+        )
+    if want_cache and kind != "enc":
+        new_cache["kv"] = kv
+
+    if kind in ("hybrid_g", "hybrid_w"):
+        # Hymba: attention heads and mamba heads read the same input in
+        # parallel; their outputs are averaged (paper's fused hybrid head)
+        m_in = _norm(cfg, params["norm_mamba"], x)
+        m_out, m_st = ssm_mod.mamba_apply(
+            params["mamba"], cfg.mamba_config(), m_in, cache.get("mamba"),
+            want_state=want_cache,
+        )
+        if m_st is not None:
+            new_cache["mamba"] = m_st
+        x = x + 0.5 * (a_out + m_out)
+    else:
+        x = x + a_out
+
+    if kind == "dec":
+        hc = _norm(cfg, params["norm_cross"], x)
+        ccfg = cfg.attn_config(causal=False)
+        c_out = _cross_attend(params["cross"], ccfg, hc, enc_out, dd)
+        x = x + c_out
+
+    if "ffn" in params:
+        h = _norm(cfg, params["norm_ffn"], x)
+        x = x + ffn_mod.ffn_apply(params["ffn"], h, cfg.ffn_kind, dd)
+    elif "moe" in params:
+        h = _norm(cfg, params["norm_ffn"], x)
+        y, aux = moe_mod.moe_apply(params["moe"], h, cfg.moe, dd)
+        x = x + y
+
+    # sequence-parallel residual stream: the block output is the tensor the
+    # layer scan carries AND saves for remat — sharding its seq axis over
+    # 'model' divides per-device activation memory by the TP degree
+    x = cm.constrain(x, "batch", "seq_sp", "embed")
+    return x, new_cache, aux
+
+
+def _cross_attend(params, acfg, q_in, enc_out, dd):
+    B, S, _ = q_in.shape
+    H, Hkv, Dh = acfg.n_heads, acfg.n_kv_heads, acfg.head_dim
+    q = cm.dense(params["wq"], q_in, dd).reshape(B, S, H, Dh)
+    k = cm.dense(params["wk"], enc_out, dd).reshape(B, -1, Hkv, Dh)
+    v = cm.dense(params["wv"], enc_out, dd).reshape(B, -1, Hkv, Dh)
+    out = attn.blocked_attention(q, k, v, causal=False)
+    return cm.dense(params["wo"], out.reshape(B, S, H * Dh), dd)
+
+
+# =============================================================================
+# model = embedding + block groups (+ encoder stack for audio) + head
+# =============================================================================
+
+
+def model_spec(cfg: ArchConfig):
+    spec = _model_spec_inner(cfg)
+    if cfg.param_dtype == "bfloat16":
+        # bf16 parameter storage (405B-class memory posture; grads/moments
+        # follow the leaf dtype — documented trade-off in DESIGN.md)
+        spec = jax.tree.map(
+            lambda s: dataclasses.replace(s, dtype=jnp.bfloat16)
+            if jnp.issubdtype(s.dtype, jnp.floating)
+            else s,
+            spec,
+            is_leaf=cm.is_spec,
+        )
+    return spec
+
+
+def _model_spec_inner(cfg: ArchConfig):
+    spec: Dict[str, Any] = {"embed": cm.embedding_spec(cfg.padded_vocab, cfg.d_model)}
+    if cfg.family == "vlm":
+        # vision frontend is a stub per the brief; patches arrive embedded
+        pass
+    if cfg.enc_layers:
+        spec["encoder"] = {
+            "g0": cm.stack_specs(block_spec(cfg, "enc"), cfg.enc_layers),
+            "norm": _norm_spec(cfg),
+        }
+    groups = {}
+    for gi, (kind, count) in enumerate(cfg.pattern()):
+        groups[f"g{gi}_{kind}"] = cm.stack_specs(block_spec(cfg, kind), count)
+    spec["blocks"] = groups
+    spec["norm_f"] = _norm_spec(cfg)
+    if not cfg.tie_embeddings:
+        spec["head"] = cm.dense_spec(cfg.d_model, cfg.padded_vocab, ("embed", "vocab"))
+    return spec
+
+
+def _scan_group(
+    cfg: ArchConfig,
+    kind: str,
+    stacked_params,
+    x,
+    positions,
+    caches=None,
+    cache_index=None,
+    enc_out=None,
+    want_cache: bool = False,
+):
+    """Scan over a homogeneous stack of blocks (remat'd body)."""
+
+    def body(carry, layer_in):
+        xc, aux_acc = carry
+        p, cache = layer_in
+        xo, new_cache, aux = block_apply(
+            cfg, kind, p, xc, positions, cache, cache_index, enc_out, want_cache
+        )
+        return (xo, aux_acc + aux), new_cache
+
+    if cfg.remat:
+        if cfg.remat_policy == "save_ffn":
+            # selective remat: keep the (sharded) FFN hidden activations so
+            # the backward pass skips recomputing the two largest matmuls
+            policy = jax.checkpoint_policies.save_only_these_names("ffn_hidden")
+        else:
+            policy = jax.checkpoint_policies.nothing_saveable
+        body = jax.checkpoint(body, policy=policy)
+
+    n = jax.tree.leaves(stacked_params)[0].shape[0]
+    if cfg.scan_layers and n > 1:
+        (x, aux), new_caches = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), (stacked_params, caches)
+        )
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        outs = []
+        for i in range(n):
+            p_i = jax.tree.map(lambda t: t[i], stacked_params)
+            c_i = jax.tree.map(lambda t: t[i], caches) if caches is not None else None
+            (x, aux), c_new = body((x, aux), (p_i, c_i))
+            outs.append(c_new)
+        new_caches = (
+            jax.tree.map(lambda *ts: jnp.stack(ts), *outs) if outs and outs[0] else {}
+        )
+    return x, aux, new_caches
+
+
+# -- cache construction -------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, abstract: bool = False):
+    """Stacked decode caches per block group (ShapeDtypeStructs or zeros)."""
+    out: Dict[str, Any] = {}
+    for gi, (kind, count) in enumerate(cfg.pattern()):
+        g: Dict[str, Any] = {}
+        acfg = cfg.attn_config(window=cfg.window if kind == "hybrid_w" else 0)
+        if kind in ("dense", "moe", "hybrid_g", "hybrid_w", "dec"):
+            if cfg.mla:
+                kv = attn.mla_cache_shape(acfg, batch, max_len)
+            else:
+                kv = attn.gqa_cache_shape(acfg, batch, max_len)
+            g["kv"] = kv
+        if kind in ("hybrid_g", "hybrid_w"):
+            g["mamba"] = ssm_mod.mamba_state_shape(cfg.mamba_config(), batch)
+        if kind == "mlstm":
+            g["mlstm"] = ssm_mod.mlstm_state_shape(cfg.mlstm_config(), batch)
+        if kind == "slstm":
+            g["slstm"] = ssm_mod.slstm_state_shape(cfg.slstm_config(), batch)
+        # stack along the layer axis
+        g = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((count,) + s.shape, s.dtype), g
+        )
+        out[f"g{gi}_{kind}"] = g
+    if cfg.enc_layers:
+        out["enc_out"] = jax.ShapeDtypeStruct(
+            (batch, max_len, cfg.d_model), cfg.act_dtype
+        )
+    if abstract:
+        return out
+    concrete = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), out)
+    # exponential-gating stabilizers must start at the soft -inf (-30), not 0
+    for g in concrete.values():
+        if isinstance(g, dict):
+            for key in ("mlstm", "slstm"):
+                if key in g:
+                    g[key] = g[key]._replace(m=jnp.full_like(g[key].m, -30.0))
+    return concrete
+
+
+def cache_pspecs(cfg: ArchConfig, batch: int, max_len: int, mesh=None):
+    """Logical PartitionSpecs for decode caches.
+
+    batch shards over (pod, data) when divisible; otherwise (long_500k,
+    global_batch=1) the *sequence* axis of KV caches shards over data.  The
+    trailing feature axis (head_dim / latent / d_inner) shards over model —
+    TP along the contraction.  Axes whose mesh size does not divide the
+    dimension are dropped per leaf (e.g. the 4-head mLSTM stabilizer, the
+    3-wide mamba conv window).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    abstract = init_cache(cfg, batch, max_len, abstract=True)
+
+    def mesh_size(part):
+        names = part if isinstance(part, tuple) else (part,)
+        size = 1
+        for n in names:
+            size *= mesh.shape[n] if mesh is not None else 1
+        return size
+
+    batch_rule = cm.logical_to_mesh_axes(["batch"])[0]
+    batch_ok = batch_rule is not None and batch % max(mesh_size(batch_rule), 1) == 0
+
+    def axis_fits(part, dim):
+        if part is None or mesh is None:
+            return part
+        return part if dim % mesh_size(part) == 0 else None
+
+    def leaf_spec(leaf):
+        nd = len(leaf.shape)
+        axes: List[Any] = [None] * nd
+        if nd >= 2:
+            if batch_ok:
+                axes[1] = "batch"
+            elif nd >= 4 and leaf.shape[2] == max_len:  # KV-style: shard seq
+                axes[2] = "kv_seq"
+        if nd >= 2:
+            axes[-1] = "cache_feature"
+        raw = cm.logical_to_mesh_axes(axes)
+        if raw is None:
+            return raw
+        return P(*[axis_fits(p, leaf.shape[i]) for i, p in enumerate(raw)])
+
+    return jax.tree.map(leaf_spec, abstract)
+
+
+# -- forward passes -----------------------------------------------------------
+
+
+def forward(
+    cfg: ArchConfig,
+    params,
+    tokens: jax.Array,  # (B, S) int32
+    positions: Optional[jax.Array] = None,
+    caches=None,
+    cache_index=None,
+    vision_embeds: Optional[jax.Array] = None,
+    encoder_frames: Optional[jax.Array] = None,
+    want_cache: bool = False,
+):
+    """Returns (logits, new_caches, aux_loss)."""
+    B, S = tokens.shape
+    x = cm.embed(params["embed"], tokens).astype(cfg.act_dtype)
+    x = x * (cfg.d_model**0.5)
+
+    if vision_embeds is not None:
+        # VLM stub frontend: patch embeddings overwrite the leading positions
+        nv = vision_embeds.shape[1]
+        x = jax.lax.dynamic_update_slice(
+            x, vision_embeds.astype(x.dtype), (0, 0, 0)
+        ) if nv == S else jnp.concatenate(
+            [vision_embeds.astype(x.dtype), x[:, nv:, :]], axis=1
+        )
+
+    if positions is None:
+        base = cache_index if cache_index is not None else 0
+        positions = base + jnp.arange(S, dtype=jnp.int32)[None, :]
+        positions = jnp.broadcast_to(positions, (B, S))
+
+    enc_out = None
+    new_caches: Dict[str, Any] = {}
+    if cfg.enc_layers:
+        if caches is not None and encoder_frames is None:
+            enc_out = caches["enc_out"].astype(cfg.act_dtype)  # decode steps
+        else:
+            assert encoder_frames is not None, "audio family needs encoder frames"
+            e = encoder_frames.astype(cfg.act_dtype)
+            e, _, _ = _scan_group(
+                cfg, "enc", params["encoder"]["g0"], e,
+                jnp.broadcast_to(
+                    jnp.arange(e.shape[1], dtype=jnp.int32)[None], e.shape[:2]
+                ),
+            )
+            enc_out = _norm(cfg, params["encoder"]["norm"], e)
+        if want_cache or caches is not None:
+            new_caches["enc_out"] = enc_out
+
+    x = cm.constrain(x, "batch", "seq_sp", "embed")
+    total_aux = jnp.zeros((), jnp.float32)
+    for gi, (kind, count) in enumerate(cfg.pattern()):
+        gname = f"g{gi}_{kind}"
+        g_cache = caches.get(gname) if caches is not None else None
+        x, aux, g_new = _scan_group(
+            cfg, kind, params["blocks"][gname], x, positions,
+            g_cache, cache_index, enc_out, want_cache,
+        )
+        total_aux += aux
+        if g_new:
+            new_caches[gname] = g_new
+
+    x = _norm(cfg, params["norm_f"], x)
+    if cfg.tie_embeddings:
+        logits = cm.unembed(params["embed"], x)
+    else:
+        logits = cm.dense(params["head"], x)
+    if cfg.padded_vocab != cfg.vocab:
+        pad_mask = (jnp.arange(cfg.padded_vocab) >= cfg.vocab) * jnp.asarray(
+            -1e9, logits.dtype
+        )
+        logits = logits + pad_mask
+    logits = cm.constrain(logits, "batch", "seq", "vocab")
+    return logits, (new_caches or None), total_aux
+
+
+def lm_loss(cfg: ArchConfig, params, batch: Dict[str, jax.Array]):
+    """Causal LM loss (+ MoE aux). batch: tokens (B,S), labels (B,S)."""
+    logits, _, aux = forward(
+        cfg,
+        params,
+        batch["tokens"],
+        vision_embeds=batch.get("vision_embeds"),
+        encoder_frames=batch.get("encoder_frames"),
+        positions=batch.get("positions"),
+    )
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    # one-hot contraction instead of take_along_axis: keeps the vocab axis
+    # sharded (a gather would all-gather the full logits per device)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    onehot = cm.constrain(onehot, "batch", "seq", "vocab")
+    gold = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = (logz - gold) * mask
+    loss = nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    # z-loss keeps logits bounded at scale (production trick)
+    zloss = 1e-4 * jnp.sum((logz * mask) ** 2) / jnp.maximum(mask.sum(), 1.0)
+    return loss + zloss + 0.01 * aux, {"loss": loss, "aux": aux}
+
+
+def decode_step(
+    cfg: ArchConfig,
+    params,
+    tokens: jax.Array,  # (B, 1)
+    caches,
+    cache_index: jax.Array,
+    encoder_frames: Optional[jax.Array] = None,
+    positions: Optional[jax.Array] = None,
+):
+    """One serve step: new token against the KV/SSM cache."""
+    logits, new_caches, _ = forward(
+        cfg,
+        params,
+        tokens,
+        caches=caches,
+        cache_index=cache_index,
+        encoder_frames=encoder_frames,
+        positions=positions,
+    )
+    next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+    return next_tok, new_caches

@@ -1,0 +1,7 @@
+"""Optimizers (no optax): AdamW (f32 / bf16 / int8-quantized moments),
+Adafactor (factored second moment), schedules, clipping, and error-feedback
+int8 gradient compression for the cross-pod all-reduce leg."""
+from .adamw import adamw_init, adamw_update, OptConfig  # noqa: F401
+from .adafactor import adafactor_init, adafactor_update  # noqa: F401
+from .compression import compress_grads, decompress_grads  # noqa: F401
+from .schedule import cosine_schedule  # noqa: F401

@@ -1,0 +1,73 @@
+"""Adafactor: factored second moment (row+col stats instead of full-size v).
+
+For the 405B config this is the difference between fitting and not fitting:
+moments cost O(rows + cols) per matrix instead of O(rows * cols).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .adamw import OptConfig, global_norm
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor_init(params, cfg: OptConfig):
+    def init_leaf(p):
+        if _factored(p):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),  # row stats
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros_like(p, jnp.float32)}
+
+    return {
+        "v": jax.tree.map(init_leaf, params, is_leaf=lambda x: isinstance(x, jax.Array)),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(params, grads, state, cfg: OptConfig, lr_scale=1.0):
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    decay = 1.0 - step.astype(jnp.float32) ** -0.8  # beta2 schedule
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, v):
+        g = g.astype(jnp.float32) * clip
+        g2 = g * g + 1e-30
+        if _factored(p):
+            vr = decay * v["vr"] + (1 - decay) * jnp.mean(g2, axis=-1)
+            vc = decay * v["vc"] + (1 - decay) * jnp.mean(g2, axis=-2)
+            rms = (
+                vr[..., None]
+                * vc[..., None, :]
+                / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)[..., None]
+            )
+            update = g * jax.lax.rsqrt(rms + 1e-30)
+            newv = {"vr": vr, "vc": vc}
+        else:
+            vv = decay * v["v"] + (1 - decay) * g2
+            update = g * jax.lax.rsqrt(vv + 1e-30)
+            newv = {"v": vv}
+        # relative step clipping (Adafactor's d=1.0)
+        rms_u = jnp.sqrt(jnp.mean(update**2) + 1e-30)
+        update = update / jnp.maximum(1.0, rms_u)
+        if p.ndim >= 2:
+            update = update + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * update).astype(p.dtype), newv
+
+    is_state_leaf = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_v = jax.tree.flatten(state["v"], is_leaf=is_state_leaf)[0]
+    out = [upd(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v)]
+    new_params = tdef.unflatten([o[0] for o in out])
+    new_v = jax.tree.unflatten(
+        jax.tree.structure(state["v"], is_leaf=is_state_leaf), [o[1] for o in out]
+    )
+    return new_params, {"v": new_v, "step": step}, {"grad_norm": gnorm}

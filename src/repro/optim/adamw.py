@@ -1,0 +1,108 @@
+"""AdamW with memory-tiered moment storage.
+
+At 405B, optimizer state is the HBM budget: 8 bytes/param of f32 moments is
+3.2 TB.  ``moment_dtype``:
+  * float32 — exact (small models)
+  * bfloat16 — 4 bytes/param total moments (the default at scale)
+  * int8 — block-quantized moments with per-block f32 scales (1/64 overhead),
+    the "8-bit optimizer" trick; dequantize -> update -> requantize per step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "bfloat16"  # float32 | bfloat16 | int8
+    block: int = 256  # int8 quantization block
+
+
+# -- int8 block quantization ---------------------------------------------------
+
+
+def _quant_i8(x: jax.Array, block: int) -> Tuple[jax.Array, jax.Array]:
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % block
+    flat = jnp.pad(flat, (0, pad))
+    blk = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blk), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blk / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequant_i8(q: jax.Array, scale: jax.Array, shape, size) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)[:size]
+    return flat.reshape(shape)
+
+
+def _store(x: jax.Array, cfg: OptConfig):
+    if cfg.moment_dtype == "int8":
+        return _quant_i8(x, cfg.block)
+    return x.astype(jnp.dtype(cfg.moment_dtype))
+
+
+def _load(stored, like: jax.Array, cfg: OptConfig) -> jax.Array:
+    if cfg.moment_dtype == "int8":
+        q, scale = stored
+        return _dequant_i8(q, scale, like.shape, like.size)
+    return stored.astype(jnp.float32)
+
+
+# -- init / update -------------------------------------------------------------
+
+
+def adamw_init(params, cfg: OptConfig) -> Dict[str, Any]:
+    zeros = jax.tree.map(lambda p: _store(jnp.zeros_like(p, jnp.float32), cfg), params)
+    zeros2 = jax.tree.map(lambda p: _store(jnp.zeros_like(p, jnp.float32), cfg), params)
+    return {"m": zeros, "v": zeros2, "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(grads) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(grads))
+    )
+
+
+def adamw_update(params, grads, state, cfg: OptConfig, lr_scale=1.0):
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    b1c = 1.0 - cfg.b1**step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2**step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    is_stored = lambda x: isinstance(x, tuple) or isinstance(x, jax.Array)
+
+    def upd(p, g, m_st, v_st):
+        g = g.astype(jnp.float32) * clip
+        m = cfg.b1 * _load(m_st, p, cfg) + (1 - cfg.b1) * g
+        v = cfg.b2 * _load(v_st, p, cfg) + (1 - cfg.b2) * g * g
+        update = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            update = update + cfg.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+        return newp, _store(m, cfg), _store(v, cfg)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = tdef.unflatten([o[0] for o in out])
+    new_state = {
+        "m": tdef.unflatten([o[1] for o in out]),
+        "v": tdef.unflatten([o[2] for o in out]),
+        "step": step,
+    }
+    return new_params, new_state, {"grad_norm": gnorm}

@@ -1,0 +1,48 @@
+"""Error-feedback int8 gradient compression for the slow (cross-pod) link.
+
+On a multi-pod mesh the data-parallel all-reduce crosses the pod axis over
+DCN-class links; int8 with per-tensor scale cuts those bytes 4x (vs f32)
+while error feedback keeps the accumulated quantization bias bounded —
+residuals are carried in the optimizer-side state and re-added next step.
+
+Usage (train_step):
+    g_q, new_residuals = compress_grads(grads, residuals)
+    ... psum happens on g_q's dequantized values (XLA reduces bf16/int8) ...
+This module is exercised by unit tests and wired behind
+``TrainConfig.grad_compression``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _compress_leaf(g: jax.Array, r: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    gf = g.astype(jnp.float32) + r
+    scale = jnp.max(jnp.abs(gf)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    residual = gf - q.astype(jnp.float32) * scale  # error feedback
+    return q, scale, residual
+
+
+def compress_grads(grads, residuals):
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = tdef.flatten_up_to(residuals)
+    out = [_compress_leaf(g, r) for g, r in zip(flat_g, flat_r)]
+    q = tdef.unflatten([o[0] for o in out])
+    scales = tdef.unflatten([o[1] for o in out])
+    new_res = tdef.unflatten([o[2] for o in out])
+    return (q, scales), new_res
+
+
+def decompress_grads(compressed):
+    q, scales = compressed
+    return jax.tree.map(
+        lambda qi, s: qi.astype(jnp.float32) * s, q, scales
+    )
+
+
+def init_residuals(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,7 @@
+from .steps import (  # noqa: F401
+    TrainConfig,
+    build_serve_step,
+    build_train_step,
+    opt_pspecs_like,
+    train_state_init,
+)

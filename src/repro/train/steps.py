@@ -1,0 +1,239 @@
+"""Train / serve step construction: microbatch gradient accumulation,
+remat'd scan-over-layers forward (in models/), optimizer update, and the
+single-token decode step — plus the sharding-spec plumbing that attaches
+logical -> mesh PartitionSpecs to every carried pytree.
+
+Compute/communication overlap comes from two places:
+  * microbatch accumulation: XLA overlaps microbatch i+1's forward with the
+    (reduce-scattered) gradient math of microbatch i inside the scan,
+  * the XLA latency-hiding scheduler flags set in launch/dryrun.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import common as cm
+from repro.models import transformer as tf
+from repro.models.config import ArchConfig
+from repro.optim import adamw, adafactor, compression, schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: str = "adamw"  # adamw | adafactor
+    opt: adamw.OptConfig = dataclasses.field(default_factory=adamw.OptConfig)
+    warmup_steps: int = 200
+    total_steps: int = 10_000
+    grad_compression: bool = False  # error-feedback int8 (cross-pod leg)
+
+
+# -----------------------------------------------------------------------------
+# state init + sharding specs
+# -----------------------------------------------------------------------------
+
+
+def train_state_init(cfg: ArchConfig, tcfg: TrainConfig, key=None, abstract=False):
+    spec = tf.model_spec(cfg)
+    if abstract:
+        params = cm.abstract_params(spec)
+        if tcfg.optimizer == "adafactor":
+            init = functools.partial(adafactor.adafactor_init, cfg=tcfg.opt)
+        else:
+            init = functools.partial(adamw_init_wrapped, cfg=tcfg.opt)
+        opt_state = jax.eval_shape(init, params)
+    else:
+        params = cm.init_params(spec, key)
+        if tcfg.optimizer == "adafactor":
+            opt_state = adafactor.adafactor_init(params, tcfg.opt)
+        else:
+            opt_state = adamw.adamw_init(params, tcfg.opt)
+    if tcfg.grad_compression and not abstract:
+        opt_state["residuals"] = compression.init_residuals(params)
+    elif tcfg.grad_compression:
+        opt_state["residuals"] = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params
+        )
+    return params, opt_state
+
+
+def adamw_init_wrapped(params, cfg):
+    return adamw.adamw_init(params, cfg)
+
+
+def opt_pspecs_like(opt_state_abstract, params_abstract, params_pspecs):
+    """PartitionSpecs for optimizer state: moments inherit the param's spec;
+    factored stats drop the corresponding axis; scalars replicate."""
+    flat_p = {_path(p): (l, s) for (p, l), s in zip(
+        jax.tree_util.tree_flatten_with_path(params_abstract)[0],
+        jax.tree.leaves(params_pspecs, is_leaf=lambda x: isinstance(x, P)),
+    )}
+
+    def leaf_spec(path, leaf):
+        name = _path(path)
+        for pname, (pleaf, pspec) in flat_p.items():
+            if name.endswith("." + pname) or name == pname or pname in name:
+                if tuple(leaf.shape) == tuple(pleaf.shape):
+                    return pspec
+                if tuple(leaf.shape) == tuple(pleaf.shape[:-1]):  # vr
+                    return P(*pspec[: len(leaf.shape)]) if pspec else P()
+                if tuple(leaf.shape) == tuple(
+                    pleaf.shape[:-2] + pleaf.shape[-1:]
+                ):  # vc
+                    parts = list(pspec) if pspec else []
+                    if len(parts) == len(pleaf.shape):
+                        parts = parts[:-2] + parts[-1:]
+                        return P(*parts)
+                break
+        return P()
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(opt_state_abstract)
+    return jax.tree_util.tree_unflatten(
+        treedef, [leaf_spec(p, l) for p, l in flat]
+    )
+
+
+def _path(path) -> str:
+    return ".".join(
+        str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k)))) for k in path
+    )
+
+
+# -----------------------------------------------------------------------------
+# train step
+# -----------------------------------------------------------------------------
+
+
+def _split_microbatches(batch: Dict[str, jax.Array], n_mb: int):
+    def split(k, v):
+        if k == "positions" and v.ndim == 3 and v.shape[0] == 3:
+            # (3, B, S) M-RoPE positions: batch is axis 1
+            return jnp.moveaxis(
+                v.reshape(3, n_mb, v.shape[1] // n_mb, v.shape[2]), 1, 0
+            )
+        return v.reshape(n_mb, v.shape[0] // n_mb, *v.shape[1:])
+
+    return {k: split(k, v) for k, v in batch.items()}
+
+
+def build_train_step(cfg: ArchConfig, tcfg: TrainConfig) -> Callable:
+    """Returns train_step(params, opt_state, batch, step) -> (params,
+    opt_state, metrics).  Gradient accumulation over cfg.microbatches keeps
+    live activations at 1/n_mb of the global batch."""
+
+    def loss_fn(params, mb):
+        return tf.lm_loss(cfg, params, mb)
+
+    # gradients must inherit the parameter shardings explicitly: without the
+    # constraint the microbatch-scan carry may propagate replicated, which
+    # materializes full d x d / d x vocab gradient buffers per device
+    param_specs = cm.param_pspecs(tf.model_spec(cfg))
+
+    def constrain_like_params(grads):
+        if cm._ACTIVE_RULES is None:
+            return grads
+        return jax.tree.map(
+            lambda g, s: jax.lax.with_sharding_constraint(g, s),
+            grads,
+            param_specs,
+        )
+
+    def train_step(params, opt_state, batch, step):
+        n_mb = max(cfg.microbatches, 1)
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+        if n_mb == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            grads = constrain_like_params(grads)
+        else:
+            mbs = _split_microbatches(batch, n_mb)
+
+            def acc(carry, mb):
+                g_acc, l_acc = carry
+                (l, _m), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(a.dtype), g_acc, g
+                )
+                g_acc = constrain_like_params(g_acc)
+                return (g_acc, l_acc + l), None
+
+            # accumulate in the param dtype: f32 normally; bf16 when the
+            # config stores bf16 params (the 405B memory posture)
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(
+                    p.shape,
+                    jnp.float32 if p.dtype == jnp.float32 else p.dtype,
+                ),
+                params,
+            )
+            (grads, loss_sum), _ = jax.lax.scan(acc, (g0, jnp.zeros(())), mbs)
+            grads = jax.tree.map(lambda g: g / n_mb, grads)
+            loss = loss_sum / n_mb
+            metrics = {"loss": loss, "aux": jnp.zeros(())}
+
+        if tcfg.grad_compression:
+            # error-feedback int8: models the cross-pod quantized all-reduce
+            compressed, new_res = compression.compress_grads(
+                grads, opt_state["residuals"]
+            )
+            grads = compression.decompress_grads(compressed)
+        lr_scale = schedule.cosine_schedule(
+            step, tcfg.warmup_steps, tcfg.total_steps
+        )
+        core_state = {k: v for k, v in opt_state.items() if k != "residuals"}
+        if tcfg.optimizer == "adafactor":
+            params, core_state, info = adafactor.adafactor_update(
+                params, grads, core_state, tcfg.opt, lr_scale
+            )
+        else:
+            params, core_state, info = adamw.adamw_update(
+                params, grads, core_state, tcfg.opt, lr_scale
+            )
+        if tcfg.grad_compression:
+            core_state["residuals"] = new_res
+        metrics = dict(metrics, **info, lr_scale=lr_scale)
+        return params, core_state, metrics
+
+    return train_step
+
+
+# -----------------------------------------------------------------------------
+# prefill / serve steps
+# -----------------------------------------------------------------------------
+
+
+def build_prefill_step(cfg: ArchConfig) -> Callable:
+    def prefill_step(params, batch):
+        caches = None
+        logits, caches, _ = tf.forward(
+            cfg,
+            params,
+            batch["tokens"],
+            positions=batch.get("positions"),
+            vision_embeds=batch.get("vision_embeds"),
+            encoder_frames=batch.get("encoder_frames"),
+            want_cache=True,
+        )
+        return logits[:, -1, :], caches
+
+    return prefill_step
+
+
+def build_serve_step(cfg: ArchConfig) -> Callable:
+    def serve_step(params, batch):
+        next_tok, new_caches = tf.decode_step(
+            cfg,
+            params,
+            batch["tokens"],
+            batch["caches"],
+            batch["cache_index"],
+            positions=batch.get("positions"),
+        )
+        return next_tok, new_caches
+
+    return serve_step

@@ -1,0 +1,86 @@
+"""Deliverable integrity: the committed dry-run artifacts must cover every
+(arch x shape x mesh) cell with zero failures, and the roofline derivation
+must load them.  Skipped when artifacts/ has not been generated yet."""
+import glob
+import json
+import os
+
+import pytest
+
+from repro import configs
+from repro.configs import shapes as shp
+from repro.launch import roofline
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def _cells(mesh):
+    d = os.path.join(ART, mesh)
+    if not os.path.isdir(d):
+        pytest.skip(f"dry-run artifacts not generated for {mesh}")
+    out = {}
+    for p in glob.glob(os.path.join(d, "*.json")):
+        rec = json.load(open(p))
+        if "tag" in rec:  # hillclimb experiment records
+            continue
+        out[(rec["arch"], rec["shape"])] = rec
+    return out
+
+
+@pytest.mark.parametrize("mesh", ["16x16", "2x16x16"])
+def test_all_40_cells_recorded_no_failures(mesh):
+    cells = _cells(mesh)
+    expected = {(a, s) for a in configs.ARCH_IDS for s in shp.SHAPES}
+    assert expected.issubset(set(cells)), expected - set(cells)
+    failures = [(k, v.get("error", "")) for k, v in cells.items() if v["status"] == "failed"]
+    assert not failures, failures
+    skips = [k for k, v in cells.items() if v["status"] == "skipped"]
+    assert len(skips) == 8  # the pure-full-attention long_500k cells
+    for k in skips:
+        assert k[1] == "long_500k"
+
+
+@pytest.mark.parametrize("mesh", ["16x16", "2x16x16"])
+def test_ok_cells_have_full_measurements(mesh):
+    for key, rec in _cells(mesh).items():
+        if rec["status"] != "ok":
+            continue
+        assert rec["hlo"]["flops_corrected"] > 0, key
+        assert rec["hlo"]["hbm_bytes"] > 0, key
+        assert rec["memory"]["per_device_total"] > 0, key
+        assert rec["params"]["total"] > 0, key
+        # every distributed step must carry a coherent collective schedule
+        if key[1] != "long_500k" or key[0] in ("hymba-1.5b", "xlstm-1.3b"):
+            assert rec["hlo"]["collective_bytes"] > 0, key
+
+
+def test_roofline_rows_load():
+    d = os.path.join(ART, "16x16")
+    if not os.path.isdir(d):
+        pytest.skip("no artifacts")
+    rows = roofline.load_rows(d)
+    ok = [r for r in rows if r["status"] == "ok"]
+    assert len(ok) >= 32
+    assert all(r["dominant"] in ("compute", "memory", "collective") for r in ok)
+
+
+def test_multipod_proves_pod_axis_shards():
+    """Per-chip FLOPs on the 512-chip mesh must be ~half the 256-chip mesh
+    for the train cells (the pod axis really shards the work).
+
+    Known documented exception: deepseek-v2's MoE dispatch replicates expert
+    compute across data ranks under the pjit partitioner (EXPERIMENTS.md
+    §Perf K3 — refuted fix, needs a shard_map ragged a2a); its multi-pod
+    ratio reflects that replication rather than a pod-sharding failure.
+    """
+    single = _cells("16x16")
+    multi = _cells("2x16x16")
+    exceptions = {"deepseek-v2-236b"}
+    for arch in configs.ARCH_IDS:
+        k = (arch, "train_4k")
+        if single[k]["status"] != "ok" or multi[k]["status"] != "ok":
+            continue
+        ratio = multi[k]["hlo"]["flops_corrected"] / single[k]["hlo"]["flops_corrected"]
+        if arch in exceptions:
+            continue
+        assert 0.35 < ratio < 0.75, (arch, ratio)

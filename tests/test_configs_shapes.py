@@ -1,0 +1,133 @@
+"""Config registry, shape table, input specs, param counting, roofline math."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.configs import shapes as shp
+from repro.launch import roofline
+from repro.models import common as cm
+from repro.models import transformer as tf
+
+
+def test_all_ten_archs_registered():
+    assert len(configs.ARCH_IDS) == 10
+    for a in configs.ARCH_IDS:
+        cfg = configs.get_config(a)
+        assert cfg.name == a
+
+
+EXPECTED = {
+    # exact numbers from the assignment table
+    "gemma-7b": dict(n_layers=28, d_model=3072, n_heads=16, n_kv_heads=16,
+                     d_ff=24576, vocab=256000, head_dim=256, ffn_kind="geglu"),
+    "llama3-405b": dict(n_layers=126, d_model=16384, n_heads=128, n_kv_heads=8,
+                        d_ff=53248, vocab=128256),
+    "qwen2-0.5b": dict(n_layers=24, d_model=896, n_heads=14, n_kv_heads=2,
+                       d_ff=4864, vocab=151936, qkv_bias=True),
+    "qwen3-4b": dict(n_layers=36, d_model=2560, n_heads=32, n_kv_heads=8,
+                     d_ff=9728, vocab=151936, qk_norm=True),
+    "whisper-small": dict(n_layers=12, d_model=768, n_heads=12, n_kv_heads=12,
+                          d_ff=3072, vocab=51865, enc_layers=12),
+    "kimi-k2-1t-a32b": dict(n_layers=61, d_model=7168, n_heads=64, n_kv_heads=8,
+                            d_ff=2048, vocab=163840),
+    "deepseek-v2-236b": dict(n_layers=60, d_model=5120, n_heads=128,
+                             d_ff=1536, vocab=102400),
+    "hymba-1.5b": dict(n_layers=32, d_model=1600, n_heads=25, n_kv_heads=5,
+                       d_ff=5504, vocab=32001, ssm_state=16),
+    "xlstm-1.3b": dict(n_layers=48, d_model=2048, n_heads=4, d_ff=0, vocab=50304),
+    "qwen2-vl-7b": dict(n_layers=28, d_model=3584, n_heads=28, n_kv_heads=4,
+                        d_ff=18944, vocab=152064, mrope_sections=(16, 24, 24)),
+}
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED))
+def test_configs_match_assignment_table(arch):
+    cfg = configs.get_config(arch)
+    for key, want in EXPECTED[arch].items():
+        assert getattr(cfg, key) == want, (arch, key)
+
+
+def test_moe_configs():
+    kimi = configs.get_config("kimi-k2-1t-a32b")
+    assert kimi.moe.n_experts == 384 and kimi.moe.top_k == 8
+    ds = configs.get_config("deepseek-v2-236b")
+    assert ds.moe.n_experts == 160 and ds.moe.top_k == 6 and ds.moe.n_shared == 2
+    assert ds.mla.kv_lora == 512
+
+
+def test_param_counts_plausible():
+    from repro.launch.dryrun import count_params
+
+    counts = {a: count_params(configs.get_config(a)) for a in configs.ARCH_IDS}
+    assert 6e9 < counts["gemma-7b"]["total"] < 11e9
+    assert 3.8e11 < counts["llama3-405b"]["total"] < 4.4e11
+    assert 3.5e8 < counts["qwen2-0.5b"]["total"] < 7e8
+    assert 0.8e12 < counts["kimi-k2-1t-a32b"]["total"] < 1.2e12
+    assert 2.5e10 < counts["kimi-k2-1t-a32b"]["active"] < 4.5e10  # a32b
+    assert 2.0e11 < counts["deepseek-v2-236b"]["total"] < 2.7e11
+    assert 1.0e9 < counts["xlstm-1.3b"]["total"] < 2.2e9
+    assert 1.2e9 < counts["hymba-1.5b"]["total"] < 2.4e9
+
+
+def test_shape_table_and_skips():
+    assert set(shp.SHAPES) == {"train_4k", "prefill_32k", "decode_32k", "long_500k"}
+    assert shp.SHAPES["long_500k"].seq_len == 524288
+    assert shp.runs_shape(configs.get_config("hymba-1.5b"), "long_500k")
+    assert shp.runs_shape(configs.get_config("xlstm-1.3b"), "long_500k")
+    assert not shp.runs_shape(configs.get_config("gemma-7b"), "long_500k")
+    # 40 cells, 8 long_500k skips
+    cells = [(a, s) for a in configs.ARCH_IDS for s in shp.SHAPES]
+    skips = [c for c in cells if not shp.runs_shape(configs.get_config(c[0]), c[1])]
+    assert len(cells) == 40 and len(skips) == 8
+
+
+@pytest.mark.parametrize("arch", ["gemma-7b", "whisper-small", "qwen2-vl-7b", "xlstm-1.3b"])
+@pytest.mark.parametrize("shape", ["train_4k", "decode_32k"])
+def test_input_specs_are_abstract(arch, shape):
+    cfg = configs.get_config(arch)
+    specs = shp.input_specs(cfg, shape)
+    for leaf in jax.tree.leaves(specs):
+        assert isinstance(leaf, jax.ShapeDtypeStruct), type(leaf)
+    if shape == "train_4k":
+        assert specs["tokens"].shape == (256, 4096)
+        if arch == "whisper-small":
+            assert specs["encoder_frames"].shape == (256, 4096, cfg.d_model)
+        if arch == "qwen2-vl-7b":
+            assert specs["positions"].shape == (3, 256, 4096)
+    else:
+        assert specs["tokens"].shape == (128, 1)
+        assert "caches" in specs
+
+
+def test_roofline_row_math():
+    rec = {
+        "status": "ok",
+        "arch": "x", "shape": "train_4k", "chips": 256,
+        "hlo": {"flops_corrected": 197e12, "hbm_bytes": 819e9 / 2,
+                "collective_bytes": 50e9 / 4},
+        "model_flops": 197e12 * 256 * 0.5,
+        "memory": {"per_device_total": 8 * 2**30},
+    }
+    row = roofline.roofline_row(rec)
+    assert row["compute_s"] == pytest.approx(1.0)
+    assert row["memory_s"] == pytest.approx(0.5)
+    assert row["collective_s"] == pytest.approx(0.25)
+    assert row["dominant"] == "compute"
+    assert row["model_flops_ratio"] == pytest.approx(0.5)
+    assert row["roofline_fraction"] == pytest.approx(0.5)
+    assert row["fits_16g"]
+
+
+def test_smoke_configs_are_reduced_same_family():
+    for a in configs.ARCH_IDS:
+        full = configs.get_config(a)
+        sm = full.smoke()
+        assert sm.family == full.family
+        assert sm.d_model <= 64 and sm.n_layers <= max(2, len(sm.pattern()))
+        if full.moe:
+            assert sm.moe is not None and sm.moe.n_experts == 8
+        if full.mla:
+            assert sm.mla is not None
+        if full.mrope_sections:
+            assert sum(sm.mrope_sections) * 2 == sm.resolved_head_dim

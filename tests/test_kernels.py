@@ -1,0 +1,162 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs pure-jnp oracles."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import digits as dig
+from repro.core import dslr as core_dslr
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------------------
+# dslr_matmul (MSDF digit-plane matmul)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "M,K,N",
+    [(8, 16, 8), (128, 64, 128), (32, 256, 16), (64, 128, 256), (100, 30, 50)],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dslr_matmul_vs_oracle(M, K, N, dtype):
+    rng = np.random.default_rng(M * 1000 + K + N)
+    x = jnp.asarray(rng.standard_normal((M, K)), dtype=dtype)
+    w = jnp.asarray(rng.standard_normal((K, N)), dtype=dtype)
+    got = ops.dslr_matmul(x, w, n_digits=8)
+    q = core_dslr.quantize_msdf(x, 8, "csd")
+    scales = jnp.exp2(-jnp.arange(q.planes.shape[0], dtype=jnp.float32))
+    want = ref.dslr_matmul_planes_ref(q.planes, w, scales) * q.scale
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_dslr_matmul_skip_zero_planes_identical():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((64, 64)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((64, 64)).astype(np.float32))
+    a = ops.dslr_matmul(x, w, skip_zero_planes=True)
+    b = ops.dslr_matmul(x, w, skip_zero_planes=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_dslr_matmul_close_to_float_matmul():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((64, 128)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((128, 32)).astype(np.float32))
+    got = ops.dslr_matmul(x, w, n_digits=12)
+    want = x @ w
+    err = np.abs(np.asarray(got - want)).max()
+    assert err < 0.05 * float(jnp.abs(want).max()) + 0.05
+
+
+def test_dslr_matmul_anytime_precision_monotone():
+    """MSDF semantics: more digits -> monotonically tighter max error."""
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((32, 64)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((64, 32)).astype(np.float32))
+    want = np.asarray(x @ w)
+    errs = []
+    for d in (4, 6, 8, 10):
+        got = np.asarray(ops.dslr_matmul(x, w, n_digits=d))
+        errs.append(np.abs(got - want).max())
+    assert errs == sorted(errs, reverse=True), errs
+    # and the bound of core.dslr.anytime_error_bound holds
+    q = core_dslr.quantize_msdf(x, 10, "csd")
+    bound = float(core_dslr.anytime_error_bound(w, q.scale, 10))
+    assert errs[-1] <= bound + 1e-4
+
+
+# ---------------------------------------------------------------------------
+# msdf_quantize (fused digit decomposition)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(8, 16), (256, 64), (96, 33)])
+@pytest.mark.parametrize("frac_bits", [4, 8, 12])
+def test_msdf_quantize_vs_oracle(shape, frac_bits):
+    rng = np.random.default_rng(shape[0] + frac_bits)
+    x = jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+    scale = jnp.max(jnp.abs(x)) * 1.01
+    got = ops.msdf_quantize(x, scale, frac_bits=frac_bits)
+    want = ref.msdf_quantize_ref(x, scale, frac_bits)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(st.integers(min_value=0, max_value=10**6))
+@settings(max_examples=20, deadline=None)
+def test_msdf_quantize_property_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(-3, 3, size=(16, 8)).astype(np.float32))
+    scale = jnp.max(jnp.abs(x)) * 1.01
+    planes = ops.msdf_quantize(x, scale, frac_bits=8)
+    assert int(jnp.max(jnp.abs(planes))) <= 1
+    back = dig.planes_to_value(planes, scale)
+    assert float(jnp.max(jnp.abs(back - x))) <= float(scale) * 2.0**-8
+
+
+# ---------------------------------------------------------------------------
+# online_sop_exact (bit-exact PE recurrence)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("M,T,fx", [(16, 9, 8), (64, 16, 8), (32, 25, 6), (128, 4, 10)])
+def test_online_sop_kernel_vs_oracle(M, T, fx):
+    rng = np.random.default_rng(M + T)
+    lim = 2**fx - 1
+    x = jnp.asarray(rng.integers(-lim, lim + 1, size=(M, T)).astype(np.int32))
+    y = jnp.asarray(rng.integers(-lim, lim + 1, size=(M, T)).astype(np.int32))
+    y_dig = dig.sd_from_fixed(y, fx)
+    got = ops.online_sop_exact(x, y_dig, frac_bits=fx)
+    want = ref.online_sop_exact_ref(x, y_dig, fx)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=1e-6)
+
+
+def test_kernels_lower_for_tpu_structurally():
+    """BlockSpecs must be consistent: lowering the pallas_call with abstract
+    inputs on CPU-interpret already exercises grid/index-map coherence."""
+    x = jnp.zeros((256, 512), jnp.float32)
+    w = jnp.zeros((512, 256), jnp.float32)
+    out = jax.eval_shape(lambda a, b: ops.dslr_matmul(a, b, interpret=True), x, w)
+    assert out.shape == (256, 256)
+
+
+# ---------------------------------------------------------------------------
+# slstm_sweep (weight-stationary RNN cell kernel)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,S,H,Dh,chunk", [(4, 32, 2, 8, 8), (2, 48, 4, 4, 16), (8, 16, 1, 16, 4)])
+def test_slstm_sweep_vs_oracle(B, S, H, Dh, chunk):
+    rng = np.random.default_rng(B * S)
+    d = H * Dh
+    wx = jnp.asarray(rng.standard_normal((B, S, 4 * d)) * 0.5, jnp.float32)
+    rw = jnp.asarray(rng.standard_normal((H, Dh, 4 * Dh)) * 0.2, jnp.float32)
+    got_h, got_fin = ops.slstm_sweep(wx, rw, n_heads=H, chunk=chunk, block_batch=2)
+    want_h, want_fin = ref.slstm_sweep_ref(wx, rw, H)
+    np.testing.assert_allclose(np.asarray(got_h), np.asarray(want_h), rtol=1e-5, atol=1e-5)
+    for a, b in zip(got_fin, want_fin):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+def test_slstm_sweep_matches_model_cell():
+    """The kernel must agree with the models.ssm sLSTM block's inner cell
+    (same gating math modulo the block's projections/norms)."""
+    from repro.models import common as cmn
+    from repro.models import ssm as ssm_mod
+
+    rng = np.random.default_rng(7)
+    d, H = 32, 4
+    sc = ssm_mod.SlstmConfig(d_model=d, n_heads=H)
+    params = cmn.init_params(ssm_mod.slstm_spec(sc), jax.random.PRNGKey(0))
+    x = jnp.asarray(rng.standard_normal((2, 16, d)) * 0.5, jnp.float32)
+    # model path
+    y_model, _ = ssm_mod.slstm_apply(params, sc, x)
+    # kernel path: reproduce the block around the kernel sweep
+    wx = x @ params["w_in"]["kernel"] + params["w_in"]["bias"]
+    h_seq, _ = ops.slstm_sweep(wx, params["r_in"], n_heads=H, chunk=8, block_batch=2)
+    y_kernel = cmn.rmsnorm(params["norm"], h_seq.astype(x.dtype))
+    y_kernel = cmn.dense(params["out"], y_kernel)
+    np.testing.assert_allclose(
+        np.asarray(y_model), np.asarray(y_kernel), rtol=2e-3, atol=2e-3
+    )

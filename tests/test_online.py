@@ -1,0 +1,221 @@
+"""Property + unit tests for the online (LR/MSDF) arithmetic core.
+
+Verifies the invariants the paper's hardware relies on:
+  * exactness of SD/CSD/binary digit expansions,
+  * LR-SPM (Alg. 1) produces the exact product with residual |w| <= 1/2,
+  * the online adder emits valid digits, preserves value exactly, and has
+    the delta=2 prefix (online-delay) property,
+  * SoP trees are exact for arbitrary reduction widths,
+  * the digit-serial convolution matches the float oracle to quantization.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import digits as dig
+from repro.core import online
+
+FX = 8  # fractional bits used across property tests
+
+
+def rand_fixed(rng, shape, frac_bits=FX):
+    lim = 2**frac_bits - 1
+    return rng.integers(-lim, lim + 1, size=shape).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# digit expansions
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("recoder", ["greedy", "csd", "binary"])
+def test_expansion_exactness_exhaustive(recoder):
+    """Every representable 8-bit fixed-point value round-trips exactly."""
+    f = 8
+    xi = jnp.arange(-(2**f) + 1, 2**f)
+    d = dig._RECODERS[recoder](xi, f)
+    assert d.shape == (xi.shape[0], f + 1)
+    assert int(jnp.max(jnp.abs(d))) <= 1
+    back = dig.digits_to_fixed(d, f)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(xi))
+
+
+def test_csd_nonadjacent_and_sparse():
+    f = 10
+    xi = jnp.arange(-(2**f) + 1, 2**f)
+    d = np.asarray(dig.csd_from_fixed(xi, f))
+    # non-adjacent form: no two consecutive non-zeros
+    nz = d != 0
+    assert not np.any(nz[:, :-1] & nz[:, 1:]), "CSD must be non-adjacent"
+    # expected non-zero density ~1/3 of the f+1 slots
+    density = nz.mean()
+    assert density < 0.40
+
+
+def test_greedy_slot0_zero():
+    f = 8
+    xi = jnp.arange(-(2**f) + 1, 2**f)
+    d = np.asarray(dig.sd_from_fixed(xi, f))
+    assert np.all(d[:, 0] == 0)
+
+
+@given(st.integers(min_value=4, max_value=12))
+@settings(max_examples=8, deadline=None)
+def test_planes_roundtrip(frac_bits):
+    rng = np.random.default_rng(frac_bits)
+    x = jnp.asarray(rng.standard_normal((5, 7)).astype(np.float32))
+    planes, scale = dig.to_planes(x, frac_bits)
+    back = dig.planes_to_value(planes, scale)
+    assert float(jnp.max(jnp.abs(back - x))) <= float(scale) * 2.0**-frac_bits
+
+
+# ---------------------------------------------------------------------------
+# LR-SPM (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=60, deadline=None)
+def test_lr_spm_exact_product(seed):
+    rng = np.random.default_rng(seed)
+    x = rand_fixed(rng, (16,))
+    y = rand_fixed(rng, (16,))
+    y_dig = dig.sd_from_fixed(jnp.asarray(y), FX)
+    n_out = 2 * FX + 2  # enough digits for the exact product
+    p, w = online.lr_spm(jnp.asarray(x), y_dig, FX, n_out)
+    assert int(jnp.max(jnp.abs(p))) <= 1
+    got = np.asarray(dig.digits_to_float(p, jnp.float32))
+    want = (x.astype(np.float64) / 2**FX) * (y.astype(np.float64) / 2**FX)
+    np.testing.assert_allclose(got, want, rtol=0, atol=1e-12)
+    assert float(jnp.max(jnp.abs(w))) <= 0.5 + 1e-12, "residual bound |w|<=1/2"
+
+
+def test_lr_spm_msdf_prefix_accuracy():
+    """MSDF property: after k digits the result is a 2^-k approximation —
+    the 'first digit after delta cycles' claim of Fig. 2/3."""
+    rng = np.random.default_rng(0)
+    x = rand_fixed(rng, (64,))
+    y = rand_fixed(rng, (64,))
+    y_dig = dig.sd_from_fixed(jnp.asarray(y), FX)
+    p, _ = online.lr_spm(jnp.asarray(x), y_dig, FX, 2 * FX + 2)
+    want = (x.astype(np.float64) / 2**FX) * (y.astype(np.float64) / 2**FX)
+    for k in (2, 4, 6, 8):
+        approx = np.asarray(dig.digits_to_float(p[..., : k + 1], jnp.float32))
+        assert np.max(np.abs(approx - want)) <= 2.0**-k, f"k={k}"
+
+
+def test_lr_spm_online_delay_matches_paper():
+    assert online.DELTA_MULT == 2
+    assert online.DELTA_ADD == 2
+
+
+def test_lr_spm_serial_prefix_property():
+    """Output digit t depends only on serial-input digits 0..t+delta."""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rand_fixed(rng, (8,)))
+    y = rand_fixed(rng, (8,))
+    y_dig = np.asarray(dig.sd_from_fixed(jnp.asarray(y), FX))
+    n_out = FX
+    p_full, _ = online.lr_spm(x, jnp.asarray(y_dig), FX, n_out)
+    for cut in range(2, FX):
+        y_trunc = y_dig.copy()
+        y_trunc[..., cut:] = 0
+        p_cut, _ = online.lr_spm(x, jnp.asarray(y_trunc), FX, n_out)
+        # output digit t consumes serial digit t + delta, so truncating the
+        # stream at `cut` leaves exactly digits 0..cut-delta-1 unchanged
+        visible = max(cut - online.DELTA_MULT, 0)
+        np.testing.assert_array_equal(
+            np.asarray(p_full)[..., :visible], np.asarray(p_cut)[..., :visible]
+        )
+
+
+# ---------------------------------------------------------------------------
+# online adder
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=60, deadline=None)
+def test_online_add_exact(seed):
+    rng = np.random.default_rng(seed)
+    a = rand_fixed(rng, (32,))
+    b = rand_fixed(rng, (32,))
+    da = dig.sd_from_fixed(jnp.asarray(a), FX)
+    db = dig.csd_from_fixed(jnp.asarray(b), FX)
+    z = online.online_add(da, db)
+    assert int(jnp.max(jnp.abs(z))) <= 1, "output digits must stay in {-1,0,1}"
+    got = np.asarray(dig.digits_to_float(z, jnp.float32)) * 2.0  # undo /2
+    want = (a.astype(np.float64) + b.astype(np.float64)) / 2**FX
+    np.testing.assert_allclose(got, want, rtol=0, atol=1e-12)
+
+
+def test_online_add_prefix_property():
+    """z_j depends only on input digits up to slot j+1 (delta_add = 2)."""
+    rng = np.random.default_rng(3)
+    a = dig.sd_from_fixed(jnp.asarray(rand_fixed(rng, (16,))), FX)
+    b = dig.sd_from_fixed(jnp.asarray(rand_fixed(rng, (16,))), FX)
+    z_full = np.asarray(online.online_add(a, b))
+    an, bn = np.asarray(a), np.asarray(b)
+    for cut in range(1, FX):
+        at, bt = an.copy(), bn.copy()
+        at[..., cut:] = 0
+        bt[..., cut:] = 0
+        z_cut = np.asarray(online.online_add(jnp.asarray(at), jnp.asarray(bt)))
+        # output slot m uses input slots <= m+1: stable prefix is cut-1 slots
+        keep = max(cut - 1, 0)
+        np.testing.assert_array_equal(z_full[..., :keep], z_cut[..., :keep])
+
+
+# ---------------------------------------------------------------------------
+# SoP tree (the PE) and convolution
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("T", [2, 3, 9, 16, 25])
+def test_online_sop_exact(T):
+    rng = np.random.default_rng(T)
+    x = rand_fixed(rng, (T,))
+    y = rand_fixed(rng, (T,))
+    y_dig = dig.sd_from_fixed(jnp.asarray(y), FX)
+    res = online.online_sop(jnp.asarray(x), y_dig, FX, 2 * FX + 2 + T.bit_length())
+    got = float(online.sop_value(res))
+    want = float(np.sum((x / 2.0**FX) * (y / 2.0**FX)))
+    assert abs(got - want) < 1e-10, (got, want)
+
+
+def test_online_sop_batched_pe_array():
+    """A whole tile of PEs at once: (T_m x T_n-reduction) like Fig. 5."""
+    rng = np.random.default_rng(7)
+    B, T = 4, 16  # T_n = 16 multipliers per PE
+    x = rand_fixed(rng, (B, T))
+    y = rand_fixed(rng, (B, T))
+    y_dig = dig.sd_from_fixed(jnp.asarray(y), FX)
+    res = online.online_sop(jnp.asarray(x), y_dig, FX, 2 * FX + 8)
+    got = np.asarray(online.sop_value(res))
+    want = np.sum((x / 2.0**FX) * (y / 2.0**FX), axis=-1)
+    np.testing.assert_allclose(got, want, atol=1e-10)
+
+
+@pytest.mark.parametrize("k,cin,cout,stride,pad", [(3, 4, 8, 1, 1), (5, 3, 6, 2, 2), (1, 8, 4, 1, 0)])
+def test_dslr_conv2d_matches_oracle(k, cin, cout, stride, pad):
+    rng = np.random.default_rng(k * 100 + cin)
+    x = jnp.asarray(rng.standard_normal((2, 10, 10, cin)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((k, k, cin, cout)).astype(np.float32))
+    got = online.dslr_conv2d(x, w, frac_bits=8, stride=stride, padding=pad)
+    want = online.conv2d_ref(x, w, stride=stride, padding=pad)
+    assert got.shape == want.shape
+    # quantization-limited agreement: 8-bit operands, exact SoP
+    tol = float(jnp.max(jnp.abs(want))) * 0.05 + 0.05
+    assert float(jnp.max(jnp.abs(got - want))) < tol
+
+
+def test_chain_latency_model_fig2():
+    """Fig. 2: online chains hide nearly all serial latency."""
+    cm = __import__("repro.core.cycle_model", fromlist=["cycle_model"])
+    conv = cm.chain_latency_cycles(4, 16, online=False)
+    onl = cm.chain_latency_cycles(4, 16, online=True)
+    assert conv == 4 * 16
+    assert onl == 4 * 3 + 15
+    assert onl < conv
