@@ -1,10 +1,17 @@
-"""Shared benchmark utilities: timing + the name,us_per_call,derived CSV."""
+"""Shared benchmark utilities: timing, the name,us_per_call,derived CSV, and
+the BENCH_*.json artifact the CI smoke job uploads per PR."""
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Callable
 
 import jax
+
+# BENCH_FAST=1 shrinks kernel/conv benchmark shapes and iters to smoke size
+# (the CI bench-smoke job); any value other than "" / "0" enables it.
+FAST = os.environ.get("BENCH_FAST", "") not in ("", "0")
 
 ROWS: list[tuple[str, float, str]] = []
 
@@ -12,6 +19,16 @@ ROWS: list[tuple[str, float, str]] = []
 def emit(name: str, us_per_call: float, derived: str) -> None:
     ROWS.append((name, us_per_call, derived))
     print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def write_json(path: str) -> None:
+    """Dump every emitted row to ``path`` (the per-PR perf-trajectory
+    artifact; rows accrue across all modules run in this process)."""
+    rows = [
+        {"name": n, "us_per_call": us, "derived": d} for n, us, d in ROWS
+    ]
+    with open(path, "w") as f:
+        json.dump({"backend": jax.default_backend(), "rows": rows}, f, indent=1)
 
 
 def time_jax(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:

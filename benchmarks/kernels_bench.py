@@ -11,20 +11,21 @@ import jax.numpy as jnp
 
 from repro.core import dslr as core_dslr
 from repro.kernels import ops
-from .common import emit, time_jax
+from .common import FAST, emit, time_jax
 
 
 def main() -> None:
     rng = np.random.default_rng(0)
-    M, K, N = 256, 512, 256
+    M, K, N = (64, 64, 64) if FAST else (256, 512, 256)
+    iters = 1 if FAST else 3
     x = jnp.asarray(rng.standard_normal((M, K)).astype(np.float32))
     w = jnp.asarray(rng.standard_normal((K, N)).astype(np.float32))
 
-    us_dense = time_jax(lambda: x @ w, iters=3)
-    emit("kernels.dense_matmul_256x512x256", us_dense, "f32 reference")
+    us_dense = time_jax(lambda: x @ w, iters=iters)
+    emit(f"kernels.dense_matmul_{M}x{K}x{N}", us_dense, "f32 reference")
 
     for d in (4, 8):
-        us = time_jax(lambda d=d: ops.dslr_matmul(x, w, n_digits=d), iters=3)
+        us = time_jax(lambda d=d: ops.dslr_matmul(x, w, n_digits=d), iters=iters)
         got = np.asarray(ops.dslr_matmul(x, w, n_digits=d))
         err = np.abs(got - np.asarray(x @ w)).max() / np.abs(np.asarray(x @ w)).max()
         emit(
@@ -37,8 +38,8 @@ def main() -> None:
     emit("kernels.csd_activity_factor", 0.0, f"{act:.3f} nonzero digits (paper ~1/3)")
 
     scale = jnp.max(jnp.abs(x)) * 1.01
-    us = time_jax(lambda: ops.msdf_quantize(x, scale, frac_bits=8), iters=3)
-    emit("kernels.msdf_quantize_256x512", us, "fused single-pass digit decomposition")
+    us = time_jax(lambda: ops.msdf_quantize(x, scale, frac_bits=8), iters=iters)
+    emit(f"kernels.msdf_quantize_{M}x{K}", us, "fused single-pass digit decomposition")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,5 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
-"""Benchmark harness: python -m benchmarks.run [--only <prefix>]
+"""Benchmark harness: python -m benchmarks.run [--only <prefix>] [--json <path>]
 
 One module per paper table/figure:
   table2_synthesis   Table 2  (synthesis constants + critical-path model)
@@ -8,9 +8,15 @@ One module per paper table/figure:
   fig2_pipeline      Fig. 2   (digit-level pipelining latency + sim timing)
   fig12_intensity    Fig. 12  (operational intensity)
   kernels_bench      TPU adaptation (Pallas MSDF matmul vs refs, CPU interpret)
+  conv_bench         conv execution paths: float vs scan-serial vs digit-plane
+
+``--json <path>`` (or env BENCH_JSON) writes every emitted row to a JSON
+artifact — the per-PR perf trajectory CI uploads.  Env BENCH_FAST=1 shrinks
+kernel benchmarks to smoke size.
 """
 from __future__ import annotations
 
+import os
 import sys
 import traceback
 
@@ -21,6 +27,7 @@ MODULES = [
     "fig2_pipeline",
     "fig12_intensity",
     "kernels_bench",
+    "conv_bench",
 ]
 
 
@@ -28,6 +35,9 @@ def main() -> None:
     only = None
     if "--only" in sys.argv:
         only = sys.argv[sys.argv.index("--only") + 1]
+    json_path = os.environ.get("BENCH_JSON")
+    if "--json" in sys.argv:
+        json_path = sys.argv[sys.argv.index("--json") + 1]
     print("name,us_per_call,derived")
     failures = []
     for mod_name in MODULES:
@@ -39,6 +49,11 @@ def main() -> None:
         except Exception:  # keep the harness robust; report at the end
             failures.append(mod_name)
             traceback.print_exc()
+    if json_path:
+        from .common import write_json
+
+        write_json(json_path)
+        print(f"# wrote {json_path}", file=sys.stderr)
     if failures:
         print(f"# FAILED modules: {failures}", file=sys.stderr)
         sys.exit(1)

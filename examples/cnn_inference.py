@@ -1,11 +1,14 @@
-"""Example: the paper's networks end-to-end — DSLR vs float execution.
+"""Example: the paper's networks end-to-end — all three execution modes.
 
   PYTHONPATH=src python examples/cnn_inference.py [--net resnet18] [--width 0.05]
 
 Runs a width-scaled AlexNet/VGG-16/ResNet-18 conv stack on random ImageNet-
-shaped inputs through BOTH execution modes and reports per-layer agreement +
-the cycle-model performance the full-width network would achieve on the
-DSLR-CNN accelerator (Table 4 pipeline).
+shaped inputs through every execution mode (float oracle, bit-exact
+scan-serial DSLR, fast Pallas digit-plane DSLR) via the batched-jit
+``infer_cnn`` entrypoint, reports agreement + the anytime (truncated digit
+budget) behaviour of the planes path, and the cycle-model performance the
+full-width network would achieve on the DSLR-CNN accelerator (Table 4
+pipeline).
 """
 import argparse
 
@@ -15,7 +18,7 @@ import jax.numpy as jnp
 
 from repro.core import cycle_model as cyc
 from repro.models import common as cm
-from repro.models.cnn import CnnConfig, cnn_apply, cnn_spec
+from repro.models.cnn import CnnConfig, cnn_spec, infer_cnn
 
 
 def main():
@@ -23,21 +26,35 @@ def main():
     ap.add_argument("--net", default="resnet18", choices=("alexnet", "vgg16", "resnet18"))
     ap.add_argument("--width", type=float, default=0.05)
     ap.add_argument("--img", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=1)
     args = ap.parse_args()
 
     cfg = CnnConfig(name=args.net, width=args.width)
     params = cm.init_params(cnn_spec(cfg), jax.random.PRNGKey(0))
     x = jnp.asarray(
-        np.random.default_rng(0).standard_normal((1, args.img, args.img, 3)),
+        np.random.default_rng(0).standard_normal((args.batch, args.img, args.img, 3)),
         jnp.float32,
     )
 
-    yf = cnn_apply(cfg, params, x, mode="float")
-    yd = cnn_apply(cfg, params, x, mode="dslr")
-    rel = float(jnp.max(jnp.abs(yf - yd)) / (jnp.max(jnp.abs(yf)) + 1e-9))
-    print(f"[{args.net} width={args.width}] logits float: {np.asarray(yf)[0][:5]}")
-    print(f"[{args.net} width={args.width}] logits dslr : {np.asarray(yd)[0][:5]}")
-    print(f"relative deviation (8-bit digit-serial arithmetic): {rel:.4f}")
+    yf = infer_cnn(cfg, params, x, mode="float")
+    yd = infer_cnn(cfg, params, x, mode="dslr")
+    yp = infer_cnn(cfg, params, x, mode="dslr_planes")
+    ymax = float(jnp.max(jnp.abs(yf))) + 1e-9
+    rel_d = float(jnp.max(jnp.abs(yf - yd))) / ymax
+    rel_p = float(jnp.max(jnp.abs(yf - yp))) / ymax
+    print(f"[{args.net} width={args.width}] logits float      : {np.asarray(yf)[0][:5]}")
+    print(f"[{args.net} width={args.width}] logits dslr       : {np.asarray(yd)[0][:5]}")
+    print(f"[{args.net} width={args.width}] logits dslr_planes: {np.asarray(yp)[0][:5]}")
+    print(f"relative deviation scan-serial  (8-bit digit-serial): {rel_d:.4f}")
+    print(f"relative deviation digit-planes (8-bit digit-plane) : {rel_p:.4f}")
+
+    print("\nanytime inference (dslr_planes digit budget sweep):")
+    for k in (2, 4, 6):
+        yk = infer_cnn(cfg, params, x, mode="dslr_planes", digit_budget=k)
+        rel_k = float(jnp.max(jnp.abs(yf - yk))) / ymax
+        print(f"  budget {k} planes: rel deviation {rel_k:.4f}")
+    # the full budget (9 planes at 8 frac bits) is the unbudgeted run above
+    print(f"  budget 9 planes: rel deviation {rel_p:.4f}")
 
     rep_d = cyc.evaluate_network(args.net, "dslr")
     rep_b = cyc.evaluate_network(args.net, "baseline")

@@ -105,6 +105,63 @@ def dslr_linear(
     return y.astype(x.dtype)
 
 
+# ---------------------------------------------------------------------------
+# convolution digit planes (the DSLR-CNN workload proper)
+# ---------------------------------------------------------------------------
+
+
+def quantize_conv_planes(
+    x: jax.Array, n_digits: int = 8, recoding: str = "csd"
+) -> DslrQuant:
+    """CSD digit-plane quantization of a conv activation map.
+
+    ``x``: (B, H, W, Cin) float.  Returns ``DslrQuant`` with planes of shape
+    (D+1, B, H, W, Cin) int8 in MSDF order — plane j is what every PE's
+    serial activation wire carries at digit cycle j, for the *whole* feature
+    map at once.  Identical digit frame to ``quantize_msdf`` (shared scale),
+    so partial-plane sums inherit the anytime property.
+    """
+    return quantize_msdf(x, n_digits, recoding)
+
+
+def im2col_planes(
+    planes: jax.Array,
+    kernel_size: int,
+    stride: int = 1,
+    padding: int = 0,
+) -> jax.Array:
+    """Per-digit-plane im2col patch extraction.
+
+    ``planes``: (D, B, H, W, Cin) int8 digit planes of the activation.
+    Returns (D, B, Ho, Wo, K*K*Cin) int8 — digit planes of the im2col
+    patches.  Exact because patch extraction is a gather and the implicit
+    padding is zero, so it commutes with the signed-digit decomposition:
+    im2col(planes(x)) == planes(im2col(x)) digit for digit.
+
+    Feature order of the last axis is Cin-major (Cin, K, K) flattened — the
+    XLA ``conv_general_dilated_patches`` convention; weights must be
+    transposed to match (see ``flatten_conv_weights``).
+    """
+    def one_plane(p):
+        return jax.lax.conv_general_dilated_patches(
+            p.astype(jnp.float32),
+            filter_shape=(kernel_size, kernel_size),
+            window_strides=(stride, stride),
+            padding=[(padding, padding), (padding, padding)],
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+
+    return jax.vmap(one_plane)(planes).astype(jnp.int8)
+
+
+def flatten_conv_weights(w: jax.Array) -> jax.Array:
+    """(K, K, Cin, Cout) -> (K*K*Cin, Cout) in the im2col feature order
+    (Cin-major, matching ``im2col_planes``)."""
+    K, K2, Cin, Cout = w.shape
+    assert K == K2, w.shape
+    return jnp.transpose(w, (2, 0, 1, 3)).reshape(K * K * Cin, Cout)
+
+
 def expected_digit_activity(x: jax.Array, n_digits: int = 8, recoding: str = "csd") -> jax.Array:
     """Fraction of non-zero digit-plane entries — drives the energy model and
     the kernel's zero-tile skipping."""

@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: MSDF digit-plane convolution — DSLR-CNN's workload on the MXU.
+
+The paper's accelerator computes conv layers as digit-serial sums of products:
+weights sit bit-parallel in the PEs while activation digits stream MSDF
+through LR-SPMs and an online adder tree (Fig. 5).  The TPU-native analogue
+lowers the convolution to an im2col digit-plane matmul:
+
+    patches(x) quantized to D MSDF planes  ->  planes[d] in {-1,0,1}
+    y[m, n] = scale * sum_d 2**-d * (planes[d][m, :] @ W_flat[:, n])
+
+with the (m, n, d) grid of ``dslr_matmul`` reused: d is the innermost grid
+axis so the f32 accumulator for an (m, n) output tile lives in VMEM across
+all digits and never round-trips to HBM — the memory-system image of the
+paper's digit-level pipelining (partial products never leave the PE).
+
+Conv-specific features on top of the matmul kernel:
+  * the contraction axis is the im2col window T = K*K*Cin, kept whole inside
+    the block (single-pass accumulation over the receptive field, like the
+    PE's adder tree over the window);
+  * M = B*Ho*Wo output pixels is padded internally to the tile size with
+    zero digit rows (they contribute exactly 0 and are sliced off), so any
+    image/stride geometry is accepted;
+  * the MSDF digit budget is the leading ``planes`` extent: truncating it is
+    the paper's runtime precision scaling — fewer planes, proportionally
+    fewer MXU passes, 2**-k bounded output error (anytime inference);
+  * zero-plane skipping: CSD recoding leaves ~2/3 digits zero, and entire
+    all-zero plane tiles skip their MXU dot (signal-activity argument,
+    §V-A item 5).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _dslr_conv2d_kernel(
+    planes_ref,  # (1, bm, T) int8 — digit plane d of the im2col patches
+    w_ref,  # (T, bn) f32 — stationary flattened filter tile
+    scale_ref,  # (1, 1) f32 — 2**-d digit weight of this plane
+    out_ref,  # (bm, bn) f32
+    acc_ref,  # VMEM scratch (bm, bn) f32
+    *,
+    n_digits: int,
+    skip_zero_planes: bool,
+):
+    d = pl.program_id(2)
+
+    @pl.when(d == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    plane = planes_ref[0]
+    scale = scale_ref[0, 0]
+
+    def _accumulate():
+        contrib = jax.lax.dot_general(
+            plane.astype(jnp.float32),
+            w_ref[...],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_ref[...] += scale * contrib
+
+    if skip_zero_planes:
+        jax.lax.cond(jnp.any(plane != 0), _accumulate, lambda: None)
+    else:
+        _accumulate()
+
+    @pl.when(d == n_digits - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...]
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "skip_zero_planes", "interpret"),
+)
+def dslr_conv2d_planes_mxu(
+    planes: jax.Array,  # (D, M, T) int8 MSDF digit planes of im2col patches
+    w_flat: jax.Array,  # (T, N) float — flattened (K*K*Cin, Cout) filters
+    digit_scales: jax.Array,  # (D,) f32, typically 2**-arange(D)
+    block_m: int = 128,
+    block_n: int = 128,
+    skip_zero_planes: bool = True,
+    interpret: bool = False,
+) -> jax.Array:
+    """Digit-plane patch matmul ``sum_d digit_scales[d] * (planes[d] @ w_flat)``.
+
+    Accepts any (M, N); tiles are padded internally with zero rows/columns
+    (zero digit rows contribute nothing) and the (M, N) result is sliced
+    back out.  MSDF accumulation order (d = 0 first) gives the anytime
+    semantics; pass truncated ``planes``/``digit_scales`` for a reduced
+    digit budget.
+    """
+    D, M, T = planes.shape
+    T2, N = w_flat.shape
+    assert T == T2, (planes.shape, w_flat.shape)
+    bm = min(block_m, _round_up(M, 8))
+    bn = min(block_n, _round_up(N, 128 if not interpret else 8))
+    Mp, Np = _round_up(M, bm), _round_up(N, bn)
+    if Mp != M:
+        planes = jnp.pad(planes, ((0, 0), (0, Mp - M), (0, 0)))
+    wf = w_flat.astype(jnp.float32)
+    if Np != N:
+        wf = jnp.pad(wf, ((0, 0), (0, Np - N)))
+
+    out = pl.pallas_call(
+        functools.partial(
+            _dslr_conv2d_kernel, n_digits=D, skip_zero_planes=skip_zero_planes
+        ),
+        grid=(Mp // bm, Np // bn, D),
+        in_specs=[
+            pl.BlockSpec((1, bm, T), lambda m, n, d: (d, m, 0)),
+            pl.BlockSpec((T, bn), lambda m, n, d: (0, n)),
+            pl.BlockSpec((1, 1), lambda m, n, d: (d, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda m, n, d: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(planes, wf, digit_scales.reshape(D, 1).astype(jnp.float32))
+    return out[:M, :N]

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.core import dslr as core_dslr
 
+from . import dslr_conv2d as _dc
 from . import dslr_matmul as _dm
 from . import msdf_quantize as _mq
 from . import online_sop as _os
@@ -51,6 +52,68 @@ def dslr_matmul(
         interpret=interpret,
     )
     return out * q.scale
+
+
+def dslr_conv2d_planes(
+    x: jax.Array,
+    w: jax.Array,
+    n_digits: int = 8,
+    stride: int = 1,
+    padding: int = 0,
+    recoding: str = "csd",
+    digit_budget: int | None = None,
+    block_m: int = 128,
+    block_n: int = 128,
+    skip_zero_planes: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """2-D conv on the MXU as an MSDF digit-plane im2col matmul.
+
+    ``x``: (B, H, W, Cin) float; ``w``: (K, K, Cin, Cout) float (stationary,
+    bit-parallel).  Returns float32 (B, Ho, Wo, Cout).
+
+    ``digit_budget`` (<= n_digits + 1) truncates the MSDF plane stream — the
+    paper's runtime precision knob: the result is a k-MSB approximation with
+    error <= scale * 2**-(k-1) * max ||W_col||_1 (``conv_anytime_error_bound``)
+    at proportionally fewer MXU passes.  Validated bit-for-bit against
+    ``ref.dslr_conv2d_planes_ref`` and within the anytime bound against
+    ``core.online.conv2d_ref``.
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    K = w.shape[0]
+    q = core_dslr.quantize_conv_planes(x, n_digits, recoding)
+    patches = core_dslr.im2col_planes(q.planes, K, stride, padding)
+    if digit_budget is not None:
+        if not 1 <= digit_budget <= patches.shape[0]:
+            raise ValueError(
+                f"digit_budget={digit_budget} outside [1, {patches.shape[0]}]"
+            )
+        patches = patches[:digit_budget]
+    D, B, Ho, Wo, T = patches.shape
+    planes = patches.reshape(D, B * Ho * Wo, T)
+    w_flat = core_dslr.flatten_conv_weights(w)
+    scales = jnp.exp2(-jnp.arange(D, dtype=jnp.float32))
+    out = _dc.dslr_conv2d_planes_mxu(
+        planes,
+        w_flat,
+        scales,
+        block_m=block_m,
+        block_n=block_n,
+        skip_zero_planes=skip_zero_planes,
+        interpret=interpret,
+    )
+    return (out * q.scale).reshape(B, Ho, Wo, w_flat.shape[1])
+
+
+def conv_anytime_error_bound(
+    w: jax.Array, scale: jax.Array, digits_used: int
+) -> jax.Array:
+    """|exact_quantized_conv - partial_k| elementwise bound after k planes:
+    tail mass sum_{j>=k} 2**-j < 2**-(k-1), worst case every tail digit
+    is +/-1 in every patch position."""
+    w_flat = core_dslr.flatten_conv_weights(w)
+    return core_dslr.anytime_error_bound(w_flat, scale, digits_used)
 
 
 def msdf_quantize(

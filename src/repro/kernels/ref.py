@@ -5,6 +5,42 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import digits as dig
+from repro.core import dslr as core_dslr
+
+
+def dslr_conv2d_planes_ref(
+    x: jax.Array,
+    w: jax.Array,
+    n_digits: int = 8,
+    stride: int = 1,
+    padding: int = 0,
+    recoding: str = "csd",
+    digit_budget: int | None = None,
+) -> jax.Array:
+    """Pure-jnp oracle for the digit-plane conv kernel (kernels/dslr_conv2d.py).
+
+    Quantizes + im2cols exactly like the wrapper, then accumulates the digit
+    planes in the same MSDF order (scan over d, f32 `acc += 2**-d * plane @ W`)
+    so the Pallas kernel must match bit-for-bit in interpret mode.
+    """
+    B, H, W, Cin = x.shape
+    K = w.shape[0]
+    q = core_dslr.quantize_conv_planes(x, n_digits, recoding)
+    patches = core_dslr.im2col_planes(q.planes, K, stride, padding)
+    if digit_budget is not None:
+        patches = patches[:digit_budget]
+    D, _, Ho, Wo, T = patches.shape
+    planes = patches.reshape(D, B * Ho * Wo, T)
+    w_flat = core_dslr.flatten_conv_weights(w).astype(jnp.float32)
+    scales = jnp.exp2(-jnp.arange(D, dtype=jnp.float32))
+
+    def body(acc, jp):
+        s, plane = jp
+        return acc + s * (plane.astype(jnp.float32) @ w_flat), None
+
+    zeros = jnp.zeros((B * Ho * Wo, w_flat.shape[1]), jnp.float32)
+    acc, _ = jax.lax.scan(body, zeros, (scales, planes))
+    return (acc * q.scale).reshape(B, Ho, Wo, w_flat.shape[1])
 
 
 def dslr_matmul_planes_ref(

@@ -20,6 +20,26 @@ from .common import ParamSpec
 NEG_INF = -1e30
 
 
+@jax.custom_vjp
+def _grad_transparent_barrier(xs):
+    """optimization_barrier with an identity gradient: the barrier is the
+    identity function, but jax (<= 0.4.x) has no differentiation rule for the
+    primitive, which broke every training test.  The backward pass needs no
+    barrier — the hoisting hazard it guards against is forward-only."""
+    return jax.lax.optimization_barrier(xs)
+
+
+def _gtb_fwd(xs):
+    return _grad_transparent_barrier(xs), None
+
+
+def _gtb_bwd(_, g):
+    return (g,)
+
+
+_grad_transparent_barrier.defvjp(_gtb_fwd, _gtb_bwd)
+
+
 @dataclasses.dataclass(frozen=True)
 class AttnConfig:
     d_model: int
@@ -131,7 +151,7 @@ def blocked_attention(
         # barrier: stops XLA from hoisting the (CPU-backend) bf16->f32 dot
         # legalization convert out of the loop, which would materialize the
         # entire KV cache in f32 (a 2x HBM regression; TPU MXU is unaffected)
-        kj, vj = jax.lax.optimization_barrier((kj, vj))
+        kj, vj = _grad_transparent_barrier((kj, vj))
         kv_pos = j * kv_chunk + jnp.arange(kv_chunk)
         # scores (B, Hkv, rep, Sq, C): bf16 operands, f32 accumulation — an
         # explicit .astype(f32) on kj would get hoisted out of both scans by
@@ -237,7 +257,7 @@ def gqa_apply(
         # barrier: prevents XLA from hoisting this layer's cache read (and
         # the CPU backend's bf16->f32 dot-legalization convert) out of the
         # layer scan, which would materialize the full 28-layer cache in f32
-        ck, cv = jax.lax.optimization_barrier(kv_cache)
+        ck, cv = _grad_transparent_barrier(kv_cache)
         ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, cache_index, 0, 0))
         cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, cache_index, 0, 0))
         out = blocked_attention(

@@ -1,18 +1,24 @@
 """The paper's own networks (AlexNet / VGG-16 / ResNet-18 conv stacks) as
 runnable JAX models with a selectable execution mode:
 
-  * ``mode='float'``  — plain XLA convolutions (oracle)
-  * ``mode='dslr'``   — every conv computed by the bit-exact digit-serial
-                        LR SoP datapath (core.online.dslr_conv2d)
+  * ``mode='float'``       — plain XLA convolutions (oracle)
+  * ``mode='dslr'``        — every conv computed by the bit-exact digit-serial
+                             LR SoP datapath (core.online.dslr_conv2d);
+                             scan-serial, functional-fidelity reference
+  * ``mode='dslr_planes'`` — every conv computed by the Pallas MSDF
+                             digit-plane kernel (kernels.ops.dslr_conv2d_planes);
+                             the fast TPU-native path, with an optional
+                             runtime ``digit_budget`` (anytime inference)
 
 Used by examples/cnn_inference.py and the functional-fidelity tests.  The
-throughput story for these nets is the cycle model (core.cycle_model); this
-module is the *numerical* reproduction.  ``width`` scales channel counts so
-smoke tests stay CPU-sized.
+throughput story for these nets is the cycle model (core.cycle_model) plus
+benchmarks/conv_bench.py; this module is the *numerical* reproduction.
+``width`` scales channel counts so smoke tests stay CPU-sized.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import List, Tuple
 
 import jax
@@ -20,8 +26,11 @@ import jax.numpy as jnp
 
 from repro.core import online
 from repro.core.cycle_model import NETWORKS, ConvLayer
+from repro.kernels import ops as kops
 from . import common as cm
 from .common import ParamSpec
+
+MODES = ("float", "dslr", "dslr_planes")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,8 +63,23 @@ def cnn_spec(cfg: CnnConfig):
     return spec
 
 
-def cnn_apply(cfg: CnnConfig, params, x: jax.Array, mode: str = "float"):
-    """x: (B, H, W, 3).  Returns logits (B, num_classes)."""
+def cnn_apply(
+    cfg: CnnConfig,
+    params,
+    x: jax.Array,
+    mode: str = "float",
+    digit_budget: int | None = None,
+):
+    """x: (B, H, W, 3).  Returns logits (B, num_classes).
+
+    ``digit_budget`` applies to ``mode='dslr_planes'`` only: truncate every
+    conv's MSDF plane stream to the first k digits (runtime precision
+    scaling — the paper's anytime-inference knob).
+    """
+    if mode not in MODES:
+        raise ValueError(f"mode={mode!r} not in {MODES}")
+    if digit_budget is not None and mode != "dslr_planes":
+        raise ValueError(f"digit_budget only applies to mode='dslr_planes', got {mode!r}")
     for l in cfg.layers():
         w = params[l.name]["w"]
         pad = (l.k - 1) // 2
@@ -63,8 +87,31 @@ def cnn_apply(cfg: CnnConfig, params, x: jax.Array, mode: str = "float"):
             x = online.dslr_conv2d(
                 x, w, frac_bits=cfg.frac_bits, stride=l.stride, padding=pad
             )
+        elif mode == "dslr_planes":
+            x = kops.dslr_conv2d_planes(
+                x,
+                w,
+                n_digits=cfg.frac_bits,
+                stride=l.stride,
+                padding=pad,
+                digit_budget=digit_budget,
+            )
         else:
             x = online.conv2d_ref(x, w, stride=l.stride, padding=pad)
         x = jax.nn.relu(x + params[l.name]["b"])
     x = jnp.mean(x, axis=(1, 2))  # global average pool
     return cm.dense(params["head"], x)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "mode", "digit_budget"))
+def infer_cnn(
+    cfg: CnnConfig,
+    params,
+    x: jax.Array,
+    mode: str = "float",
+    digit_budget: int | None = None,
+) -> jax.Array:
+    """Batched jit inference entrypoint: one compiled program per
+    (cfg, mode, digit_budget) triple, shared across batches — what a serving
+    path calls.  ``x``: (B, H, W, 3); returns logits (B, num_classes)."""
+    return cnn_apply(cfg, params, x, mode=mode, digit_budget=digit_budget)
