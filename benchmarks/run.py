@@ -9,6 +9,7 @@ One module per paper table/figure:
   fig12_intensity    Fig. 12  (operational intensity)
   kernels_bench      TPU adaptation (Pallas MSDF matmul vs refs, CPU interpret)
   conv_bench         conv execution paths: float vs scan-serial vs digit-plane
+  engine_bench       compiled engine: build-once vs per-call weight prep
 
 ``--json <path>`` (or env BENCH_JSON) writes every emitted row to a JSON
 artifact — the per-PR perf trajectory CI uploads.  Env BENCH_FAST=1 shrinks
@@ -28,6 +29,7 @@ MODULES = [
     "fig12_intensity",
     "kernels_bench",
     "conv_bench",
+    "engine_bench",
 ]
 
 

@@ -1,16 +1,25 @@
-"""Example: the paper's networks end-to-end — all three execution modes.
+"""Example: the paper's networks end-to-end through the compiled engine.
 
   PYTHONPATH=src python examples/cnn_inference.py [--net resnet18] [--width 0.05]
+  PYTHONPATH=src python examples/cnn_inference.py --net resnet18 \
+      --policy "recoding=csd,n_digits=8,fuse_epilogue=1" \
+      --per-layer-budgets 9,4,4,4,4,4,4,4,4,4,4,4,4,4,4,4,4,6,6,6
 
-Runs a width-scaled AlexNet/VGG-16/ResNet-18 conv stack on random ImageNet-
-shaped inputs through every execution mode (float oracle, bit-exact
-scan-serial DSLR, fast Pallas digit-plane DSLR) via the batched-jit
-``infer_cnn`` entrypoint, reports agreement + the anytime (truncated digit
-budget) behaviour of the planes path, and the cycle-model performance the
-full-width network would achieve on the DSLR-CNN accelerator (Table 4
-pipeline).
+Builds a width-scaled AlexNet/VGG-16/ResNet-18 *faithful* topology graph
+(pooling + residual skips), compiles it once per ``ExecutionPolicy`` via
+``compile_cnn``, and reports agreement between the float oracle, the
+bit-exact scan-serial DSLR simulation, and the fast Pallas digit-plane path
+— including the anytime digit-budget sweep with the per-layer analytic
+error bounds, and the cycle-model performance the full-width network would
+achieve on the DSLR-CNN accelerator (Table 4 pipeline).
+
+``--policy`` takes comma-separated ``key=value`` overrides for
+``ExecutionPolicy`` fields (mode, n_digits, recoding, fuse_epilogue, ...);
+``--per-layer-budgets`` takes one digit budget per conv layer in graph
+order (the paper's per-layer P_i), or a single value broadcast to all.
 """
 import argparse
+import dataclasses
 
 import numpy as np
 import jax
@@ -18,7 +27,41 @@ import jax.numpy as jnp
 
 from repro.core import cycle_model as cyc
 from repro.models import common as cm
-from repro.models.cnn import CnnConfig, cnn_spec, infer_cnn
+from repro.models.engine import compile_cnn
+from repro.models.graph import CnnConfig, ExecutionPolicy, build_graph, graph_spec
+
+
+STR_POLICY_FIELDS = ("mode", "recoding")
+BOOL_POLICY_FIELDS = ("fuse_epilogue", "skip_zero_planes", "interpret")
+INT_POLICY_FIELDS = ("n_digits", "digit_budget", "block_m", "block_n")
+
+
+def parse_policy(spec: str) -> ExecutionPolicy:
+    """'key=value,key=value' overrides on top of the default policy."""
+    if not spec:
+        return ExecutionPolicy()
+    kwargs = {}
+    for item in spec.split(","):
+        key, _, val = item.partition("=")
+        key, val = key.strip(), val.strip()
+        if key in STR_POLICY_FIELDS:
+            kwargs[key] = val
+        elif key in BOOL_POLICY_FIELDS:
+            kwargs[key] = val.lower() in ("1", "true", "yes")
+        elif key in INT_POLICY_FIELDS:
+            try:
+                kwargs[key] = int(val)
+            except ValueError:
+                raise SystemExit(f"--policy: {key} needs an integer, got {val!r}")
+        elif key == "layer_budgets":
+            raise SystemExit("--policy: use --per-layer-budgets for per-layer budgets")
+        else:
+            known = STR_POLICY_FIELDS + BOOL_POLICY_FIELDS + INT_POLICY_FIELDS
+            raise SystemExit(f"--policy: unknown field {key!r} (have {sorted(known)})")
+    try:
+        return ExecutionPolicy(**kwargs)
+    except ValueError as e:
+        raise SystemExit(f"--policy: {e}")
 
 
 def main():
@@ -27,34 +70,65 @@ def main():
     ap.add_argument("--width", type=float, default=0.05)
     ap.add_argument("--img", type=int, default=32)
     ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--policy", default="",
+                    help="comma-separated ExecutionPolicy overrides, "
+                         "e.g. 'recoding=greedy,fuse_epilogue=0'")
+    ap.add_argument("--per-layer-budgets", default="",
+                    help="comma-separated digit budgets, one per conv layer "
+                         "(or one value for all)")
     args = ap.parse_args()
 
     cfg = CnnConfig(name=args.net, width=args.width)
-    params = cm.init_params(cnn_spec(cfg), jax.random.PRNGKey(0))
+    graph = build_graph(cfg)
+    params = cm.init_params(graph_spec(cfg), jax.random.PRNGKey(0))
     x = jnp.asarray(
         np.random.default_rng(0).standard_normal((args.batch, args.img, args.img, 3)),
         jnp.float32,
     )
 
-    yf = infer_cnn(cfg, params, x, mode="float")
-    yd = infer_cnn(cfg, params, x, mode="dslr")
-    yp = infer_cnn(cfg, params, x, mode="dslr_planes")
+    policy = parse_policy(args.policy)
+    if args.per_layer_budgets:
+        budgets = [int(b) for b in args.per_layer_budgets.split(",")]
+        if len(budgets) == 1:
+            budgets = budgets * len(graph.conv_nodes)
+        policy = policy.with_layer_budgets(graph, budgets)
+
+    def with_mode(mode, **kw):
+        return dataclasses.replace(policy, mode=mode, **kw)
+
+    engine_f = compile_cnn(cfg, params, with_mode("float", digit_budget=None, layer_budgets=None))
+    engine_d = compile_cnn(cfg, params, with_mode("dslr", digit_budget=None, layer_budgets=None))
+    engine_p = compile_cnn(cfg, params, with_mode("dslr_planes"))
+
+    yf, yd, yp = engine_f(x), engine_d(x), engine_p(x)
     ymax = float(jnp.max(jnp.abs(yf))) + 1e-9
     rel_d = float(jnp.max(jnp.abs(yf - yd))) / ymax
     rel_p = float(jnp.max(jnp.abs(yf - yp))) / ymax
-    print(f"[{args.net} width={args.width}] logits float      : {np.asarray(yf)[0][:5]}")
-    print(f"[{args.net} width={args.width}] logits dslr       : {np.asarray(yd)[0][:5]}")
-    print(f"[{args.net} width={args.width}] logits dslr_planes: {np.asarray(yp)[0][:5]}")
-    print(f"relative deviation scan-serial  (8-bit digit-serial): {rel_d:.4f}")
-    print(f"relative deviation digit-planes (8-bit digit-plane) : {rel_p:.4f}")
+    tag = f"[{args.net} width={args.width}]"
+    print(f"{tag} graph: {len(graph.nodes)} nodes, {len(graph.conv_nodes)} conv layers, "
+          f"{len(graph.by_op('maxpool'))} maxpool, "
+          f"{len(graph.by_op('residual_add'))} residual adds")
+    print(f"{tag} logits float      : {np.asarray(yf)[0][:5]}")
+    print(f"{tag} logits dslr       : {np.asarray(yd)[0][:5]}")
+    print(f"{tag} logits dslr_planes: {np.asarray(yp)[0][:5]}")
+    print(f"relative deviation scan-serial  (digit-serial): {rel_d:.4f}")
+    print(f"relative deviation digit-planes (digit-plane) : {rel_p:.4f}")
 
-    print("\nanytime inference (dslr_planes digit budget sweep):")
+    print("\nper-layer anytime error bounds at the policy's budgets "
+          "(per unit activation scale):")
+    bounds = engine_p.error_bounds()
+    for node in graph.conv_nodes:
+        k = engine_p.policy.budget_for(node.name) or engine_p.policy.n_planes
+        print(f"  {node.name:8s} budget {k:2d}/{engine_p.policy.n_planes} planes"
+              f"  bound {bounds[node.name]:.4e}")
+
+    print("\nanytime inference (uniform digit budget sweep):")
     for k in (2, 4, 6):
-        yk = infer_cnn(cfg, params, x, mode="dslr_planes", digit_budget=k)
-        rel_k = float(jnp.max(jnp.abs(yf - yk))) / ymax
+        ek = compile_cnn(cfg, params, dataclasses.replace(
+            policy, mode="dslr_planes", digit_budget=k, layer_budgets=None))
+        rel_k = float(jnp.max(jnp.abs(yf - ek(x)))) / ymax
         print(f"  budget {k} planes: rel deviation {rel_k:.4f}")
-    # the full budget (9 planes at 8 frac bits) is the unbudgeted run above
-    print(f"  budget 9 planes: rel deviation {rel_p:.4f}")
+    print(f"  policy budgets   : rel deviation {rel_p:.4f}")
 
     rep_d = cyc.evaluate_network(args.net, "dslr")
     rep_b = cyc.evaluate_network(args.net, "baseline")

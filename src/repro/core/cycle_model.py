@@ -31,7 +31,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Dict, List, Literal, Sequence
+from typing import Dict, List, Literal, Sequence, Tuple
 
 # ---------------------------------------------------------------------------
 # hardware constants (paper Table 2 + §III)
@@ -149,6 +149,34 @@ NETWORKS: Dict[str, List[ConvLayer]] = {
     "vgg16": vgg16_layers(),
     "resnet18": resnet18_layers(),
 }
+
+# ---------------------------------------------------------------------------
+# network topology beyond the conv list (drives models/graph.py)
+# ---------------------------------------------------------------------------
+
+# max-pool (window, stride) inserted after the named conv's activation — the
+# standard AlexNet / VGG-16 / ResNet-18 placements the paper's Table 3 layer
+# shapes already assume (e.g. VGG C3 sees 112x112 because C2 was pooled).
+POOLINGS: Dict[str, Dict[str, Tuple[int, int]]] = {
+    "alexnet": {"C1": (3, 2), "C2": (3, 2), "C5": (3, 2)},
+    "vgg16": {"C2": (2, 2), "C4": (2, 2), "C7": (2, 2), "C10": (2, 2), "C13": (2, 2)},
+    "resnet18": {"C1": (3, 2)},
+}
+
+
+def resnet18_blocks() -> List[Tuple[str, str, bool]]:
+    """ResNet-18 basic blocks as (first_conv, second_conv, needs_downsample).
+
+    Derived from the Table-3 layer list: C2..C17 pair up into 8 two-conv
+    blocks; a block needs a 1x1 projection shortcut when its first conv
+    strides or changes the channel count (the stage transitions).
+    """
+    layers = NETWORKS["resnet18"]
+    blocks = []
+    for i in range(1, len(layers), 2):
+        a, b = layers[i], layers[i + 1]
+        blocks.append((a.name, b.name, a.stride != 1 or a.n != b.m))
+    return blocks
 
 # how the paper aggregates Table 4 "Total Duration" per network (calibrated)
 PAPER_DURATION_MODE: Dict[str, Literal["sum", "mean"]] = {

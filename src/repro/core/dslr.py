@@ -85,6 +85,11 @@ def dslr_matmul_exact_ref(x: jax.Array, w: jax.Array, n_digits: int = 8) -> jax.
     return jnp.tensordot(xq, w.astype(jnp.float32), axes=1)
 
 
+def digit_scales(n_planes: int) -> jax.Array:
+    """MSDF plane weights 2**-j, j = 0..n_planes-1 (slot 0 = integer digit)."""
+    return jnp.exp2(-jnp.arange(n_planes, dtype=jnp.float32))
+
+
 def anytime_error_bound(w: jax.Array, scale: jax.Array, digits_used: int) -> jax.Array:
     """|exact - partial_k| <= scale * 2**-(k) * max_row ||W||_1  (SD tail
     mass sum_{j>k} 2**-j < 2**-k; worst case every tail digit is +/-1)."""

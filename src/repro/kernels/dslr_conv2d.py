@@ -41,12 +41,14 @@ def _dslr_conv2d_kernel(
     planes_ref,  # (1, bm, T) int8 — digit plane d of the im2col patches
     w_ref,  # (T, bn) f32 — stationary flattened filter tile
     scale_ref,  # (1, 1) f32 — 2**-d digit weight of this plane
-    out_ref,  # (bm, bn) f32
-    acc_ref,  # VMEM scratch (bm, bn) f32
-    *,
+    *refs,  # [bias_ref (1, bn) f32 if has_bias,] out_ref (bm, bn), acc_ref scratch
     n_digits: int,
     skip_zero_planes: bool,
+    has_bias: bool,
+    apply_relu: bool,
 ):
+    bias_ref = refs[0] if has_bias else None
+    out_ref, acc_ref = refs[-2], refs[-1]
     d = pl.program_id(2)
 
     @pl.when(d == 0)
@@ -72,7 +74,16 @@ def _dslr_conv2d_kernel(
 
     @pl.when(d == n_digits - 1)
     def _flush():
-        out_ref[...] = acc_ref[...]
+        # fused epilogue: bias add + ReLU ride the flush step, so a
+        # conv+activation layer is one kernel launch and the pre-activation
+        # tile never round-trips to HBM (requires the caller to fold the
+        # activation quantization scale into ``digit_scales``).
+        res = acc_ref[...]
+        if has_bias:
+            res = res + bias_ref[0]
+        if apply_relu:
+            res = jnp.maximum(res, 0.0)
+        out_ref[...] = res
 
 
 def _round_up(x: int, mult: int) -> int:
@@ -81,24 +92,29 @@ def _round_up(x: int, mult: int) -> int:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_m", "block_n", "skip_zero_planes", "interpret"),
+    static_argnames=("block_m", "block_n", "skip_zero_planes", "apply_relu", "interpret"),
 )
 def dslr_conv2d_planes_mxu(
     planes: jax.Array,  # (D, M, T) int8 MSDF digit planes of im2col patches
     w_flat: jax.Array,  # (T, N) float — flattened (K*K*Cin, Cout) filters
     digit_scales: jax.Array,  # (D,) f32, typically 2**-arange(D)
+    bias: jax.Array | None = None,  # (N,) f32 — fused into the flush step
     block_m: int = 128,
     block_n: int = 128,
     skip_zero_planes: bool = True,
+    apply_relu: bool = False,
     interpret: bool = False,
 ) -> jax.Array:
-    """Digit-plane patch matmul ``sum_d digit_scales[d] * (planes[d] @ w_flat)``.
+    """Digit-plane patch matmul ``sum_d digit_scales[d] * (planes[d] @ w_flat)``
+    with an optional fused ``(+ bias, ReLU)`` epilogue in the flush step.
 
     Accepts any (M, N); tiles are padded internally with zero rows/columns
     (zero digit rows contribute nothing) and the (M, N) result is sliced
     back out.  MSDF accumulation order (d = 0 first) gives the anytime
     semantics; pass truncated ``planes``/``digit_scales`` for a reduced
-    digit budget.
+    digit budget.  When fusing the epilogue, fold the activation
+    quantization scale into ``digit_scales`` so the accumulator holds real
+    conv values when the bias lands.
     """
     D, M, T = planes.shape
     T2, N = w_flat.shape
@@ -112,19 +128,33 @@ def dslr_conv2d_planes_mxu(
     if Np != N:
         wf = jnp.pad(wf, ((0, 0), (0, Np - N)))
 
+    has_bias = bias is not None
+    in_specs = [
+        pl.BlockSpec((1, bm, T), lambda m, n, d: (d, m, 0)),
+        pl.BlockSpec((T, bn), lambda m, n, d: (0, n)),
+        pl.BlockSpec((1, 1), lambda m, n, d: (d, 0)),
+    ]
+    operands = [planes, wf, digit_scales.reshape(D, 1).astype(jnp.float32)]
+    if has_bias:
+        b = bias.astype(jnp.float32).reshape(1, N)
+        if Np != N:
+            b = jnp.pad(b, ((0, 0), (0, Np - N)))
+        in_specs.append(pl.BlockSpec((1, bn), lambda m, n, d: (0, n)))
+        operands.append(b)
+
     out = pl.pallas_call(
         functools.partial(
-            _dslr_conv2d_kernel, n_digits=D, skip_zero_planes=skip_zero_planes
+            _dslr_conv2d_kernel,
+            n_digits=D,
+            skip_zero_planes=skip_zero_planes,
+            has_bias=has_bias,
+            apply_relu=apply_relu,
         ),
         grid=(Mp // bm, Np // bn, D),
-        in_specs=[
-            pl.BlockSpec((1, bm, T), lambda m, n, d: (d, m, 0)),
-            pl.BlockSpec((T, bn), lambda m, n, d: (0, n)),
-            pl.BlockSpec((1, 1), lambda m, n, d: (d, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda m, n, d: (m, n)),
         out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
-    )(planes, wf, digit_scales.reshape(D, 1).astype(jnp.float32))
+    )(*operands)
     return out[:M, :N]

@@ -4,10 +4,13 @@ On CPU (this container) the kernels execute with ``interpret=True`` — the
 kernel body runs per grid step in Python/XLA exactly as written, which is
 how we validate them against ``ref.py``.  On TPU backends the same calls
 compile to Mosaic.
+
+Block sizing: odd/prime dims are handled by *padding* the tiled dimension up
+to a block multiple and slicing the result back out (zero rows/digit planes
+contribute exactly nothing), never by shrinking the block — a prime M must
+not degrade the MXU tile to 1.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +27,19 @@ def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
 
 
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def _pad_axis(a: jax.Array, size: int, axis: int) -> jax.Array:
+    """Zero-pad ``axis`` of ``a`` up to ``size``."""
+    if a.shape[axis] == size:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, size - a.shape[axis])
+    return jnp.pad(a, widths)
+
+
 def dslr_matmul(
     x: jax.Array,
     w: jax.Array,
@@ -38,20 +54,23 @@ def dslr_matmul(
     if interpret is None:
         interpret = _on_cpu()
     q = core_dslr.quantize_msdf(x, n_digits, recoding)
-    scales = jnp.exp2(-jnp.arange(q.planes.shape[0], dtype=jnp.float32))
-    M = x.shape[0]
-    bm = _pick_block(M, block_m)
-    bn = _pick_block(w.shape[1], block_n)
+    scales = core_dslr.digit_scales(q.planes.shape[0])
+    M, N = x.shape[0], w.shape[1]
+    bm = min(block_m, _round_up(M, 8))
+    bn = min(block_n, _round_up(N, 8 if interpret else 128))
+    Mp, Np = _round_up(M, bm), _round_up(N, bn)
+    planes = _pad_axis(q.planes, Mp, 1)
+    wf = _pad_axis(w.astype(jnp.float32), Np, 1)
     out = _dm.dslr_matmul_planes(
-        q.planes,
-        w,
+        planes,
+        wf,
         scales,
         block_m=bm,
         block_n=bn,
         skip_zero_planes=skip_zero_planes,
         interpret=interpret,
     )
-    return out * q.scale
+    return out[:M, :N] * q.scale
 
 
 def dslr_conv2d_planes(
@@ -62,6 +81,8 @@ def dslr_conv2d_planes(
     padding: int = 0,
     recoding: str = "csd",
     digit_budget: int | None = None,
+    bias: jax.Array | None = None,
+    relu: bool = False,
     block_m: int = 128,
     block_n: int = 128,
     skip_zero_planes: bool = True,
@@ -78,12 +99,53 @@ def dslr_conv2d_planes(
     at proportionally fewer MXU passes.  Validated bit-for-bit against
     ``ref.dslr_conv2d_planes_ref`` and within the anytime bound against
     ``core.online.conv2d_ref``.
+
+    ``bias``/``relu`` fuse the layer epilogue into the kernel's flush step
+    (one launch for conv + bias + activation; the quantization scale is
+    folded into the per-plane digit scales so the bias lands on real conv
+    values).
     """
+    return dslr_conv2d_planes_flat(
+        x,
+        core_dslr.flatten_conv_weights(w),
+        kernel_size=w.shape[0],
+        n_digits=n_digits,
+        stride=stride,
+        padding=padding,
+        recoding=recoding,
+        digit_budget=digit_budget,
+        bias=bias,
+        relu=relu,
+        block_m=block_m,
+        block_n=block_n,
+        skip_zero_planes=skip_zero_planes,
+        interpret=interpret,
+    )
+
+
+def dslr_conv2d_planes_flat(
+    x: jax.Array,
+    w_flat: jax.Array,
+    kernel_size: int,
+    n_digits: int = 8,
+    stride: int = 1,
+    padding: int = 0,
+    recoding: str = "csd",
+    digit_budget: int | None = None,
+    bias: jax.Array | None = None,
+    relu: bool = False,
+    block_m: int = 128,
+    block_n: int = 128,
+    skip_zero_planes: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """``dslr_conv2d_planes`` with pre-flattened stationary weights
+    ``w_flat``: (K*K*Cin, Cout) — what a compiled engine calls so weight
+    flattening happens once at build time, not per forward pass."""
     if interpret is None:
         interpret = _on_cpu()
-    K = w.shape[0]
     q = core_dslr.quantize_conv_planes(x, n_digits, recoding)
-    patches = core_dslr.im2col_planes(q.planes, K, stride, padding)
+    patches = core_dslr.im2col_planes(q.planes, kernel_size, stride, padding)
     if digit_budget is not None:
         if not 1 <= digit_budget <= patches.shape[0]:
             raise ValueError(
@@ -92,18 +154,26 @@ def dslr_conv2d_planes(
         patches = patches[:digit_budget]
     D, B, Ho, Wo, T = patches.shape
     planes = patches.reshape(D, B * Ho * Wo, T)
-    w_flat = core_dslr.flatten_conv_weights(w)
-    scales = jnp.exp2(-jnp.arange(D, dtype=jnp.float32))
+    fused = bias is not None or relu
+    scales = core_dslr.digit_scales(D)
+    if fused:
+        # fold the activation scale into the digit scales: the accumulator
+        # then holds real conv values, so bias+ReLU fuse into the flush
+        scales = q.scale * scales
     out = _dc.dslr_conv2d_planes_mxu(
         planes,
         w_flat,
         scales,
+        bias=bias,
         block_m=block_m,
         block_n=block_n,
         skip_zero_planes=skip_zero_planes,
+        apply_relu=relu,
         interpret=interpret,
     )
-    return (out * q.scale).reshape(B, Ho, Wo, w_flat.shape[1])
+    if not fused:
+        out = out * q.scale
+    return out.reshape(B, Ho, Wo, w_flat.shape[1])
 
 
 def conv_anytime_error_bound(
@@ -126,14 +196,18 @@ def msdf_quantize(
 ) -> jax.Array:
     if interpret is None:
         interpret = _on_cpu()
-    return _mq.msdf_quantize(
-        x,
+    M = x.shape[0]
+    br = min(block_rows, _round_up(M, 8))
+    Mp = _round_up(M, br)
+    planes = _mq.msdf_quantize(
+        _pad_axis(x, Mp, 0),
         scale,
         frac_bits=frac_bits,
         n_digits=n_digits,
-        block_rows=_pick_block(x.shape[0], block_rows),
+        block_rows=br,
         interpret=interpret,
     )
+    return planes[:, :M]
 
 
 def online_sop_exact(
@@ -146,14 +220,18 @@ def online_sop_exact(
 ) -> jax.Array:
     if interpret is None:
         interpret = _on_cpu()
-    return _os.online_sop_exact(
-        x_fixed,
-        y_digits,
+    M = x_fixed.shape[0]
+    br = min(block_rows, _round_up(M, 8))
+    Mp = _round_up(M, br)
+    out = _os.online_sop_exact(
+        _pad_axis(x_fixed, Mp, 0),
+        _pad_axis(y_digits, Mp, 0),
         frac_bits=frac_bits,
         n_out=n_out,
-        block_rows=_pick_block(x_fixed.shape[0], block_rows),
+        block_rows=br,
         interpret=interpret,
     )
+    return out[:M]
 
 
 def slstm_sweep(
@@ -180,7 +258,12 @@ def slstm_sweep(
 
 
 def _pick_block(dim: int, preferred: int) -> int:
-    """Largest divisor of ``dim`` not exceeding ``preferred``."""
+    """Largest divisor of ``dim`` not exceeding ``preferred``.
+
+    Only for kernels where zero-padding would corrupt state (the sLSTM sweep
+    carries a recurrence across chunks, so padded timesteps would pollute the
+    returned final state).  Everything else pads + slices instead.
+    """
     b = min(preferred, dim)
     while dim % b:
         b -= 1

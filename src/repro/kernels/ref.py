@@ -16,12 +16,16 @@ def dslr_conv2d_planes_ref(
     padding: int = 0,
     recoding: str = "csd",
     digit_budget: int | None = None,
+    bias: jax.Array | None = None,
+    relu: bool = False,
 ) -> jax.Array:
     """Pure-jnp oracle for the digit-plane conv kernel (kernels/dslr_conv2d.py).
 
     Quantizes + im2cols exactly like the wrapper, then accumulates the digit
     planes in the same MSDF order (scan over d, f32 `acc += 2**-d * plane @ W`)
-    so the Pallas kernel must match bit-for-bit in interpret mode.
+    so the Pallas kernel must match bit-for-bit in interpret mode.  With
+    ``bias``/``relu`` it mirrors the fused epilogue: the quantization scale
+    folds into the digit scales, then bias add + ReLU on the accumulator.
     """
     B, H, W, Cin = x.shape
     K = w.shape[0]
@@ -32,7 +36,10 @@ def dslr_conv2d_planes_ref(
     D, _, Ho, Wo, T = patches.shape
     planes = patches.reshape(D, B * Ho * Wo, T)
     w_flat = core_dslr.flatten_conv_weights(w).astype(jnp.float32)
-    scales = jnp.exp2(-jnp.arange(D, dtype=jnp.float32))
+    fused = bias is not None or relu
+    scales = core_dslr.digit_scales(D)
+    if fused:
+        scales = q.scale * scales
 
     def body(acc, jp):
         s, plane = jp
@@ -40,7 +47,13 @@ def dslr_conv2d_planes_ref(
 
     zeros = jnp.zeros((B * Ho * Wo, w_flat.shape[1]), jnp.float32)
     acc, _ = jax.lax.scan(body, zeros, (scales, planes))
-    return (acc * q.scale).reshape(B, Ho, Wo, w_flat.shape[1])
+    if not fused:
+        acc = acc * q.scale
+    if bias is not None:
+        acc = acc + bias.astype(jnp.float32)
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    return acc.reshape(B, Ho, Wo, w_flat.shape[1])
 
 
 def dslr_matmul_planes_ref(

@@ -1,3 +1,6 @@
 """Model substrate: all 10 assigned architectures + the paper's CNNs."""
-from . import attention, cnn, common, config, ffn, moe, ssm, transformer  # noqa: F401
+from . import attention, cnn, common, config, engine, ffn, graph  # noqa: F401
+from . import moe, ssm, transformer  # noqa: F401
 from .config import ArchConfig  # noqa: F401
+from .engine import DslrEngine, compile_cnn  # noqa: F401
+from .graph import CnnConfig, ExecutionPolicy, build_graph, graph_spec  # noqa: F401

@@ -1,66 +1,52 @@
-"""The paper's own networks (AlexNet / VGG-16 / ResNet-18 conv stacks) as
-runnable JAX models with a selectable execution mode:
+"""DEPRECATED string-mode shim over the compiled layer-graph engine.
 
-  * ``mode='float'``       — plain XLA convolutions (oracle)
-  * ``mode='dslr'``        — every conv computed by the bit-exact digit-serial
-                             LR SoP datapath (core.online.dslr_conv2d);
-                             scan-serial, functional-fidelity reference
-  * ``mode='dslr_planes'`` — every conv computed by the Pallas MSDF
-                             digit-plane kernel (kernels.ops.dslr_conv2d_planes);
-                             the fast TPU-native path, with an optional
-                             runtime ``digit_budget`` (anytime inference)
+The CNN execution API now lives in two modules:
 
-Used by examples/cnn_inference.py and the functional-fidelity tests.  The
-throughput story for these nets is the cycle model (core.cycle_model) plus
-benchmarks/conv_bench.py; this module is the *numerical* reproduction.
-``width`` scales channel counts so smoke tests stay CPU-sized.
+  * ``models/graph.py``  — the layer-graph IR, faithful AlexNet / VGG-16 /
+    ResNet-18 builders (pooling + residual skips), and ``ExecutionPolicy``
+    (mode, recoding, per-layer digit budgets, fusion, block shapes).
+  * ``models/engine.py`` — ``compile_cnn(cfg, params, policy)`` -> engine
+    with build-once weight flattening, jit caching, ``serve`` and
+    ``error_bounds``.
+
+``cnn_apply(..., mode=...)`` / ``infer_cnn`` are kept as thin shims that
+translate the old ``mode=`` string + ``digit_budget`` kwarg into an
+``ExecutionPolicy`` and run the same graph executor — migration:
+
+    cnn_apply(cfg, p, x, mode='dslr_planes', digit_budget=k)
+      -> compile_cnn(cfg, p, ExecutionPolicy(mode='dslr_planes',
+                                             digit_budget=k))(x)
+
+They produce bit-identical results (asserted in tests/test_engine.py).
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
-from typing import List, Tuple
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import online
-from repro.core.cycle_model import NETWORKS, ConvLayer
-from repro.kernels import ops as kops
-from . import common as cm
-from .common import ParamSpec
-
-MODES = ("float", "dslr", "dslr_planes")
-
-
-@dataclasses.dataclass(frozen=True)
-class CnnConfig:
-    name: str  # alexnet | vgg16 | resnet18
-    width: float = 1.0  # channel scale for smoke runs
-    num_classes: int = 10
-    frac_bits: int = 8
-
-    def layers(self) -> List[ConvLayer]:
-        def s(c):  # scale channels, keep >= 4
-            return max(4, int(c * self.width))
-
-        out = []
-        for l in NETWORKS[self.name]:
-            n = l.n if l.n == 3 else s(l.n)
-            out.append(ConvLayer(l.name, l.k, s(l.m), n, l.r, l.c, l.stride))
-        return out
+from .engine import compile_cnn, execute_graph  # noqa: F401  (re-export)
+from .graph import (  # noqa: F401  (re-exported compat surface)
+    MODES,
+    CnnConfig,
+    ExecutionPolicy,
+    build_graph,
+    graph_spec,
+)
 
 
 def cnn_spec(cfg: CnnConfig):
-    spec = {}
-    for l in cfg.layers():
-        spec[l.name] = {
-            "w": ParamSpec((l.k, l.k, l.n, l.m), (None, None, None, "mlp"), "normal"),
-            "b": ParamSpec((l.m,), ("mlp",), "zeros"),
-        }
-    last_m = cfg.layers()[-1].m
-    spec["head"] = cm.dense_spec(last_m, cfg.num_classes, (None, None), bias=True)
-    return spec
+    """Deprecated alias for ``graph.graph_spec`` (now includes the ResNet
+    projection-shortcut weights)."""
+    return graph_spec(cfg)
+
+
+def _policy_for(cfg: CnnConfig, mode: str, digit_budget: int | None) -> ExecutionPolicy:
+    if mode not in MODES:
+        raise ValueError(f"mode={mode!r} not in {MODES}")
+    if digit_budget is not None and mode != "dslr_planes":
+        raise ValueError(f"digit_budget only applies to mode='dslr_planes', got {mode!r}")
+    return ExecutionPolicy(mode=mode, n_digits=cfg.frac_bits, digit_budget=digit_budget)
 
 
 def cnn_apply(
@@ -70,37 +56,14 @@ def cnn_apply(
     mode: str = "float",
     digit_budget: int | None = None,
 ):
-    """x: (B, H, W, 3).  Returns logits (B, num_classes).
+    """DEPRECATED — use ``compile_cnn`` + ``ExecutionPolicy``.
 
-    ``digit_budget`` applies to ``mode='dslr_planes'`` only: truncate every
-    conv's MSDF plane stream to the first k digits (runtime precision
-    scaling — the paper's anytime-inference knob).
+    x: (B, H, W, 3).  Returns logits (B, num_classes).  ``digit_budget``
+    applies to ``mode='dslr_planes'`` only (uniform anytime budget; the
+    engine additionally supports per-layer budgets).
     """
-    if mode not in MODES:
-        raise ValueError(f"mode={mode!r} not in {MODES}")
-    if digit_budget is not None and mode != "dslr_planes":
-        raise ValueError(f"digit_budget only applies to mode='dslr_planes', got {mode!r}")
-    for l in cfg.layers():
-        w = params[l.name]["w"]
-        pad = (l.k - 1) // 2
-        if mode == "dslr":
-            x = online.dslr_conv2d(
-                x, w, frac_bits=cfg.frac_bits, stride=l.stride, padding=pad
-            )
-        elif mode == "dslr_planes":
-            x = kops.dslr_conv2d_planes(
-                x,
-                w,
-                n_digits=cfg.frac_bits,
-                stride=l.stride,
-                padding=pad,
-                digit_budget=digit_budget,
-            )
-        else:
-            x = online.conv2d_ref(x, w, stride=l.stride, padding=pad)
-        x = jax.nn.relu(x + params[l.name]["b"])
-    x = jnp.mean(x, axis=(1, 2))  # global average pool
-    return cm.dense(params["head"], x)
+    policy = _policy_for(cfg, mode, digit_budget)
+    return execute_graph(build_graph(cfg), params, x, policy)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "mode", "digit_budget"))
@@ -111,7 +74,7 @@ def infer_cnn(
     mode: str = "float",
     digit_budget: int | None = None,
 ) -> jax.Array:
-    """Batched jit inference entrypoint: one compiled program per
-    (cfg, mode, digit_budget) triple, shared across batches — what a serving
-    path calls.  ``x``: (B, H, W, 3); returns logits (B, num_classes)."""
+    """DEPRECATED batched jit entrypoint (one program per (cfg, mode,
+    digit_budget) triple) — use ``compile_cnn(cfg, params, policy)`` which
+    additionally precomputes the stationary weights once at build time."""
     return cnn_apply(cfg, params, x, mode=mode, digit_budget=digit_budget)

@@ -1,0 +1,262 @@
+"""Compiled layer-graph execution engine for the paper's CNNs.
+
+``compile_cnn(cfg, params, policy)`` walks the faithful topology graph
+(models/graph.py), flattens every conv's stationary weights **once** at
+build time, and returns a ``DslrEngine``:
+
+  * ``engine(x)``            — jit-cached forward (one compiled program per
+                               (graph, policy, shape) — policies are frozen
+                               hashable dataclasses, so the cache is shared
+                               across engines with the same policy),
+  * ``engine.serve(x_batch)`` — the same program with the batch mesh-sharded
+                               across devices (data axis from launch/mesh.py),
+  * ``engine.error_bounds()`` — per-conv-layer anytime error bounds at the
+                               policy's (per-layer) digit budgets.
+
+On the ``dslr_planes`` path each conv + bias + ReLU executes as a *single*
+Pallas kernel launch: the digit-plane accumulation keeps the output tile in
+VMEM across all MSDF planes and the epilogue rides the flush step (the
+memory-system image of the paper's digit-level pipelining into the
+activation stage, cf. DSLOT-NN's pooled MSDF datapath).
+
+``execute_graph`` is the underlying pure function; the deprecated string
+``mode=`` API (models/cnn.py) calls it without precomputation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import dslr as core_dslr
+from repro.core import online
+from repro.kernels import ops as kops
+from . import common as cm
+from .graph import (
+    GRAPH_INPUT,
+    CnnConfig,
+    ExecutionPolicy,
+    LayerGraph,
+    Node,
+    build_graph,
+)
+
+# per-conv-node build-time precomputation: name -> (w_flat (T, Cout), bias (Cout,))
+ConvWeights = Dict[str, Tuple[jax.Array, jax.Array]]
+
+
+# ---------------------------------------------------------------------------
+# node execution
+# ---------------------------------------------------------------------------
+
+
+def _maxpool(x: jax.Array, window: int, stride: int, padding: int) -> jax.Array:
+    # smoke-sized inputs can shrink below the window; the pool then
+    # degenerates to identity instead of emitting an empty feature map
+    if min(x.shape[1], x.shape[2]) < window:
+        return x
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        (1, window, window, 1),
+        (1, stride, stride, 1),
+        [(0, 0), (padding, padding), (padding, padding), (0, 0)],
+    )
+
+
+def _conv_node(
+    node: Node,
+    x: jax.Array,
+    w: jax.Array,
+    w_flat: jax.Array,
+    b: jax.Array,
+    policy: ExecutionPolicy,
+    epilogue: Optional[Node],
+) -> jax.Array:
+    """One conv/downsample layer under the policy.  The planes path consumes
+    the pre-flattened stationary ``w_flat``; float/dslr consume raw ``w``.
+    Returns the *post-epilogue* value when the epilogue fuses into the
+    kernel launch; the caller then skips the bias_relu node."""
+    if policy.mode == "dslr_planes":
+        fuse = policy.fuse_epilogue
+        out = kops.dslr_conv2d_planes_flat(
+            x,
+            w_flat,
+            kernel_size=node.kernel,
+            n_digits=policy.n_digits,
+            stride=node.stride,
+            padding=node.padding,
+            recoding=policy.recoding,
+            digit_budget=policy.budget_for(node.name),
+            bias=b if fuse else None,
+            relu=fuse and (epilogue is not None and epilogue.relu),
+            block_m=policy.block_m,
+            block_n=policy.block_n,
+            skip_zero_planes=policy.skip_zero_planes,
+            interpret=policy.interpret,
+        )
+        if fuse:
+            return out
+    elif policy.mode == "dslr":
+        out = online.dslr_conv2d(
+            x, w, frac_bits=policy.n_digits, stride=node.stride, padding=node.padding
+        )
+    else:  # float oracle
+        out = online.conv2d_ref(x, w, stride=node.stride, padding=node.padding)
+    if node.op == "downsample":  # projection shortcut: bias, no activation
+        out = out + b
+    return out
+
+
+def execute_graph(
+    graph: LayerGraph,
+    params,
+    x: jax.Array,
+    policy: ExecutionPolicy,
+    weights: Optional[ConvWeights] = None,
+) -> jax.Array:
+    """Run the layer graph.  ``weights`` carries the engine's build-time
+    flattened conv weights; without it (the deprecated ``mode=`` shim) they
+    are flattened in-trace — numerically identical, just re-done per call."""
+    vals = {GRAPH_INPUT: x}
+    fused_done = set()
+    for node in graph.nodes:
+        a = vals[node.inputs[0]]
+        if node.op in ("conv", "downsample"):
+            if weights is not None:
+                # engine path: only the flattened stationary copy is used (the
+                # raw 'w' leaves are stripped from the planes-mode param tree)
+                w = None
+                w_flat, b = weights[node.name]
+            elif policy.mode == "dslr_planes":
+                w = params[node.param]["w"]
+                w_flat, b = core_dslr.flatten_conv_weights(w), params[node.param]["b"]
+            else:
+                w = params[node.param]["w"]
+                w_flat, b = None, params[node.param]["b"]
+            epilogue = graph.epilogue_of(node)
+            vals[node.name] = _conv_node(node, a, w, w_flat, b, policy, epilogue)
+            if (
+                policy.mode == "dslr_planes"
+                and policy.fuse_epilogue
+                and epilogue is not None
+            ):
+                fused_done.add(epilogue.name)
+        elif node.op == "bias_relu":
+            if node.name in fused_done:  # already applied inside the kernel
+                vals[node.name] = a
+            else:
+                out = a + params[node.param]["b"]
+                vals[node.name] = jax.nn.relu(out) if node.relu else out
+        elif node.op == "maxpool":
+            vals[node.name] = _maxpool(a, node.kernel, node.stride, node.padding)
+        elif node.op == "avgpool":
+            vals[node.name] = jnp.mean(a, axis=(1, 2))  # kernel=0: global
+        elif node.op == "residual_add":
+            vals[node.name] = jax.nn.relu(a + vals[node.inputs[1]])
+        elif node.op == "dense":
+            vals[node.name] = cm.dense(params[node.param], a)
+        else:
+            raise ValueError(f"unknown node op {node.op!r}")
+    return vals[graph.nodes[-1].name]
+
+
+@functools.partial(jax.jit, static_argnames=("graph", "policy"))
+def _jit_execute(graph: LayerGraph, policy: ExecutionPolicy, params, weights, x):
+    return execute_graph(graph, params, x, policy, weights=weights)
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+
+class DslrEngine:
+    """Compiled CNN: topology graph + build-time weight precomputation +
+    jit-cached execution under one ``ExecutionPolicy``."""
+
+    def __init__(self, cfg: CnnConfig, params, policy: ExecutionPolicy,
+                 graph: Optional[LayerGraph] = None):
+        self.cfg = cfg
+        self.policy = policy
+        self.graph = build_graph(cfg) if graph is None else graph
+        # validate per-layer budget names against this graph
+        conv_names = {n.name for n in self.graph.conv_nodes}
+        for name, _ in policy.layer_budgets or ():
+            if name not in conv_names:
+                raise ValueError(f"budget for unknown conv layer {name!r}")
+        # build-time precompute: flatten/transpose every stationary weight
+        # exactly once — forward passes only quantize the activations
+        self._weights: ConvWeights = {}
+        for node in self.graph.conv_nodes:
+            w = params[node.param]["w"]
+            self._weights[node.name] = (
+                core_dslr.flatten_conv_weights(w),
+                params[node.param]["b"],
+            )
+        if policy.mode == "dslr_planes":
+            # the compiled program reads only the flattened copies: drop the
+            # raw conv 'w' leaves so the weights are not held (and hashed into
+            # the jit call) twice
+            conv_params = {n.param for n in self.graph.conv_nodes}
+            self._exec_params = {
+                k: ({kk: vv for kk, vv in v.items() if kk != "w"}
+                    if k in conv_params else v)
+                for k, v in params.items()
+            }
+            self._exec_weights = self._weights
+        else:
+            self._exec_params = params
+            self._exec_weights = None  # float/dslr consume the raw weights
+        self._serve_sharding = None  # (n_dev, NamedSharding), built lazily
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        """x: (B, H, W, 3) -> logits (B, num_classes).  One compiled program
+        per (graph, policy, input shape)."""
+        return _jit_execute(
+            self.graph, self.policy, self._exec_params, self._exec_weights, x
+        )
+
+    def serve(self, x_batch: jax.Array) -> jax.Array:
+        """Batch-sharded inference: the batch axis spreads across the data
+        axis of a device mesh (rules from launch/mesh.py), everything else is
+        replicated — the CNN serving story's single-program entrypoint.
+        Ragged batches are zero-padded to a device multiple and sliced back
+        (zero rows cannot raise the per-tensor quantization scale)."""
+        if self._serve_sharding is None:
+            from repro.launch import mesh as mesh_lib
+
+            devs = jax.devices()
+            mesh = jax.make_mesh((len(devs), 1), ("data", "model"))
+            batch_axis = mesh_lib.rules_for(mesh)["batch"]
+            self._serve_sharding = (len(devs), NamedSharding(mesh, P(batch_axis)))
+        n_dev, sharding = self._serve_sharding
+        B = x_batch.shape[0]
+        Bp = -(-B // n_dev) * n_dev
+        if Bp != B:
+            x_batch = jnp.pad(x_batch, ((0, Bp - B), (0, 0), (0, 0), (0, 0)))
+        out = self(jax.device_put(x_batch, sharding))
+        return out[:B]
+
+    def error_bounds(self, scale: float = 1.0) -> Dict[str, float]:
+        """Per-conv-layer anytime error bound at the policy's effective digit
+        budget, per unit activation quantization scale (multiply by a layer's
+        actual ``DslrQuant.scale`` for absolute bounds)."""
+        out = {}
+        for node in self.graph.conv_nodes:
+            w_flat, _ = self._weights[node.name]
+            k = self.policy.budget_for(node.name) or self.policy.n_planes
+            out[node.name] = float(
+                core_dslr.anytime_error_bound(w_flat, jnp.float32(scale), k)
+            )
+        return out
+
+
+def compile_cnn(cfg: CnnConfig, params, policy: ExecutionPolicy | None = None) -> DslrEngine:
+    """Build a compiled engine for one of the paper's networks: faithful
+    topology graph, weights flattened once, one jit program per policy."""
+    return DslrEngine(cfg, params, policy if policy is not None else ExecutionPolicy())
