@@ -1,0 +1,107 @@
+"""Budget-planner benchmark: planned vs uniform budgets at equal cycles.
+
+The planner story's measurable claim (ISSUE 3 acceptance): for each of the
+paper's networks, ``plan_budgets(max_cycles=C)`` returns per-layer budgets
+whose *predicted* cycles fit C and whose *measured* output error (vs the
+float oracle) is no worse than the best uniform budget at the same predicted
+cycle count.  The cycle target is set halfway between two uniform levels so
+the planner has real slack to allocate (at a level boundary the plan
+degenerates to the uniform floor by construction).
+
+Emitted rows per network:
+
+  * ``planner.plan_<net>``     — planning wall time; derived records the
+                                 cycle target, the chosen budgets and the
+                                 predicted cycles/error,
+  * ``planner.planned_<net>``  — steady-state planned-engine forward; derived
+                                 records the measured error vs float,
+  * ``planner.uniform_<net>``  — the equal-latency uniform baseline forward +
+                                 its measured error,
+  * ``planner.gain_<net>``     — uniform_err / planned_err (>= 1 demonstrates
+                                 the acceptance criterion) + the pass verdict.
+
+``BENCH_FAST=1`` shrinks widths/iters and uses the analytic-bound frontier
+everywhere but AlexNet (which exercises the measured-probe frontier).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax.numpy as jnp
+import jax
+
+from repro.core import planner as core_planner
+from repro.models import common as cm
+from repro.models.engine import compile_cnn
+from repro.models.graph import CnnConfig, ExecutionPolicy, graph_spec
+from .common import FAST, emit, time_jax
+
+K_UNIFORM = 4  # uniform baseline level; target is halfway to the next level
+
+
+def bench_network(net: str, width: float, img: int, iters: int, method: str) -> None:
+    cfg = CnnConfig(name=net, width=width, num_classes=4)
+    params = cm.init_params(graph_spec(cfg), jax.random.PRNGKey(0))
+    x = jnp.asarray(
+        np.random.default_rng(0).standard_normal((1, img, img, 3)), jnp.float32
+    )
+    engine = compile_cnn(cfg, params)
+    yf = compile_cnn(cfg, params, ExecutionPolicy(mode="float"))(x)
+    ymax = float(jnp.max(jnp.abs(yf))) + 1e-9
+
+    t0 = time.perf_counter()
+    curves = engine.budget_curves(x=x if method == "measured" else None, method=method)
+    lo = sum(c.cycles_at(K_UNIFORM) for c in curves)
+    hi = sum(c.cycles_at(K_UNIFORM + 1) for c in curves)
+    target = (lo + hi) // 2
+    plan = core_planner.plan_budgets(curves, max_cycles=target, network=net)
+    plan_us = (time.perf_counter() - t0) * 1e6
+    assert plan.predicted_cycles <= target, (plan.predicted_cycles, target)
+
+    budgets = ",".join(str(k) for _, k in plan.budgets)
+    emit(
+        f"planner.plan_{net}",
+        plan_us,
+        f"method={method} max_cycles={target} -> predicted {plan.predicted_cycles} "
+        f"cycles err {plan.predicted_error:.3e}; budgets={budgets}",
+    )
+
+    eng_planned = compile_cnn(cfg, params, plan=plan)
+    # best uniform budget at the same predicted cycle count (== K_UNIFORM)
+    ku = core_planner.uniform_budget_for_cycles(curves, target)
+    eng_uniform = compile_cnn(cfg, params, ExecutionPolicy(digit_budget=ku))
+
+    err_p = float(jnp.max(jnp.abs(eng_planned(x) - yf))) / ymax
+    err_u = float(jnp.max(jnp.abs(eng_uniform(x) - yf))) / ymax
+    us_p = time_jax(lambda: eng_planned(x), iters=iters)
+    us_u = time_jax(lambda: eng_uniform(x), iters=iters)
+    emit(f"planner.planned_{net}", us_p, f"rel err vs float {err_p:.4e}")
+    emit(
+        f"planner.uniform_{net}",
+        us_u,
+        f"uniform budget {ku} at same cycle target; rel err {err_u:.4e}",
+    )
+    emit(
+        f"planner.gain_{net}",
+        err_u / max(err_p, 1e-30),
+        f"uniform_err/planned_err at equal predicted cycles; "
+        f"planned<=uniform: {err_p <= err_u}",
+    )
+
+
+def main() -> None:
+    if FAST:
+        width, img, iters = 0.02, 8, 1
+    else:
+        width, img, iters = 0.05, 16, 3
+    for net in ("alexnet", "vgg16", "resnet18"):
+        # AlexNet exercises the measured-probe frontier; the larger nets use
+        # the analytic bound to keep the smoke job fast (FAST) — full runs
+        # measure everywhere
+        method = "bound" if (FAST and net != "alexnet") else "measured"
+        bench_network(net, width, img, iters, method)
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,7 @@ One module per paper table/figure:
   kernels_bench      TPU adaptation (Pallas MSDF matmul vs refs, CPU interpret)
   conv_bench         conv execution paths: float vs scan-serial vs digit-plane
   engine_bench       compiled engine: build-once vs per-call weight prep
+  planner_bench      budget planner: planned vs uniform budgets, equal cycles
 
 ``--json <path>`` (or env BENCH_JSON) writes every emitted row to a JSON
 artifact — the per-PR perf trajectory CI uploads.  Env BENCH_FAST=1 shrinks
@@ -30,6 +31,7 @@ MODULES = [
     "kernels_bench",
     "conv_bench",
     "engine_bench",
+    "planner_bench",
 ]
 
 

@@ -17,6 +17,13 @@ achieve on the DSLR-CNN accelerator (Table 4 pipeline).
 ``ExecutionPolicy`` fields (mode, n_digits, recoding, fuse_epilogue, ...);
 ``--per-layer-budgets`` takes one digit budget per conv layer in graph
 order (the paper's per-layer P_i), or a single value broadcast to all.
+
+``--plan-latency CYCLES`` / ``--plan-error BOUND`` instead ask the budget
+planner (core/planner.py) to *choose* the per-layer budgets on the
+cycle-model/anytime-bound Pareto frontier — under an accelerator cycle
+target or a predicted output-error target — and print the chosen plan;
+``--plan-method`` picks the frontier's error model (measured probes vs the
+analytic bound, see ``DslrEngine.budget_curves``).
 """
 import argparse
 import dataclasses
@@ -76,6 +83,17 @@ def main():
     ap.add_argument("--per-layer-budgets", default="",
                     help="comma-separated digit budgets, one per conv layer "
                          "(or one value for all)")
+    ap.add_argument("--plan-latency", type=int, default=None, metavar="CYCLES",
+                    help="solve per-layer budgets for a total accelerator "
+                         "cycle target (cycle-model Eq. 3)")
+    ap.add_argument("--plan-error", type=float, default=None, metavar="BOUND",
+                    help="solve per-layer budgets for a predicted "
+                         "output-error target")
+    ap.add_argument("--plan-method", default="bound",
+                    choices=("auto", "bound", "measured"),
+                    help="planner frontier error model (default: analytic "
+                         "bound — 'measured' probes every (layer, budget) "
+                         "point first, much slower in interpret mode)")
     args = ap.parse_args()
 
     cfg = CnnConfig(name=args.net, width=args.width)
@@ -87,11 +105,30 @@ def main():
     )
 
     policy = parse_policy(args.policy)
+    planning = args.plan_latency is not None or args.plan_error is not None
     if args.per_layer_budgets:
+        if planning:
+            raise SystemExit("--per-layer-budgets and --plan-* are mutually exclusive")
         budgets = [int(b) for b in args.per_layer_budgets.split(",")]
         if len(budgets) == 1:
             budgets = budgets * len(graph.conv_nodes)
         policy = policy.with_layer_budgets(graph, budgets)
+    if planning:
+        if policy.mode != "dslr_planes":
+            raise SystemExit(
+                f"--plan-*: digit budgets only apply to mode='dslr_planes', "
+                f"got --policy mode={policy.mode!r}"
+            )
+        probe = compile_cnn(cfg, params, dataclasses.replace(
+            policy, digit_budget=None, layer_budgets=None))
+        try:
+            plan = probe.plan(max_cycles=args.plan_latency, max_error=args.plan_error,
+                              x=x if args.plan_method != "bound" else None,
+                              method=args.plan_method)
+        except ValueError as e:
+            raise SystemExit(f"--plan-*: {e}")
+        print(plan.describe())
+        policy = policy.with_plan(plan)
 
     def with_mode(mode, **kw):
         return dataclasses.replace(policy, mode=mode, **kw)

@@ -5,10 +5,13 @@ Layers:
   online       — LR-SPM multiplier (Alg. 1), online adder, SoP tree, conv sim
   dslr         — TPU adaptation: MSDF digit-plane matmul (anytime precision)
   cycle_model  — Eq. (3)/(6) analytical model; Tables 2/4/5, Figs 2/8-12
+  planner      — per-layer digit-budget planner over the (cycles, error)
+                 Pareto curves the cycle model + anytime bound define
 """
-from . import cycle_model, digits, dslr, online  # noqa: F401
+from . import cycle_model, digits, dslr, online, planner  # noqa: F401
 from .digits import csd_from_fixed, quantize, sd_from_fixed, to_planes  # noqa: F401
 from .dslr import dslr_linear, dslr_matmul, quantize_msdf  # noqa: F401
+from .planner import BudgetPlan, LayerCurve, plan_budgets, uniform_plan  # noqa: F401
 from .online import (  # noqa: F401
     DELTA_ADD,
     DELTA_MULT,

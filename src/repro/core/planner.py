@@ -1,0 +1,281 @@
+"""Cycle-model-driven planner for per-layer MSDF digit budgets (P_i).
+
+The paper's headline trade-off — truncating the MSDF digit stream buys
+cycles at a bounded-error cost — is a *per-layer* knob: Eq. (3) makes a conv
+layer's cycle count affine in its streamed precision P_i, and the anytime
+bound (core/dslr.py::anytime_error_bound, derived in docs/NUMERICS.md) makes
+its worst-case output error geometric in the kept digit count.  Combining
+the two gives every layer a (digits -> cycles, error) Pareto curve; this
+module walks those curves to *choose* the budgets, instead of leaving them a
+free knob on ``ExecutionPolicy``.
+
+Model and algorithm:
+
+  * ``LayerCurve`` — one conv layer's frontier: for each budget
+    k = 1..n_planes, predicted accelerator cycles ``dslr_cycles(layer, k)``
+    and the anytime error bound ``2 * scale * 2**-k * row_l1``.
+  * Network-level predictions are first-order additive: total cycles is the
+    sum over layers (the ASIC runs layers back-to-back), and the predicted
+    error is the sum of per-layer bounds (triangle inequality on the output,
+    ignoring inter-layer amplification — a documented, conservative-shape
+    proxy that orders allocations correctly; see docs/NUMERICS.md).
+  * ``plan_budgets`` — greedy marginal-benefit descent anchored at a
+    uniform floor.  Under a latency target (``max_cycles``) the plan starts
+    at the largest uniform budget that fits — so it dominates the
+    equal-latency uniform baseline layer by layer, and per-layer budget
+    monotonicity makes it never worse in *measured* error either — and
+    spends the remaining cycle slack by repeatedly granting the +1-digit
+    increment with the best error reduction per cycle.  Under an error
+    target (``max_error``) it starts at the smallest uniform budget meeting
+    the target and reclaims cycles by revoking the digit that costs the
+    least error per cycle saved.  The anchor matters: the additive error
+    model is first-order, and real truncation errors interact once many
+    layers run at one or two planes, so an unanchored greedy can look
+    better on paper and measure worse (observed on AlexNet).
+
+``DslrEngine.plan`` (models/engine.py) builds the curves from an engine's
+actual flattened weights + its config's layer dims and feeds the resulting
+``BudgetPlan`` back through ``ExecutionPolicy.with_plan``/``compile_cnn``.
+This module stays importable without models/: it depends only on the cycle
+model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+from .cycle_model import ConvLayer, dslr_cycles
+
+
+def anytime_bound(row_l1: float, scale: float, digits_used: int) -> float:
+    """Closed form of ``core.dslr.anytime_error_bound`` on plain floats:
+    |exact - partial_k| <= scale * 2**-(k-1) * max_col ||W||_1."""
+    return float(scale) * 2.0 ** -(digits_used - 1) * float(row_l1)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerCurve:
+    """One conv layer's (digit budget -> predicted cycles, error bound)
+    frontier.  ``budgets`` is always the contiguous range 1..n_planes;
+    ``cycles`` is strictly increasing in the budget (Eq. 3 is affine in P_i
+    with slope = tile count) and ``errors`` strictly decreasing (the bound
+    halves per kept digit)."""
+
+    name: str
+    budgets: Tuple[int, ...]
+    cycles: Tuple[int, ...]
+    errors: Tuple[float, ...]
+
+    def __post_init__(self):
+        if not (len(self.budgets) == len(self.cycles) == len(self.errors)):
+            raise ValueError("budgets/cycles/errors length mismatch")
+        if self.budgets != tuple(range(1, len(self.budgets) + 1)):
+            raise ValueError(f"budgets must be 1..n, got {self.budgets}")
+
+    @property
+    def max_budget(self) -> int:
+        return self.budgets[-1]
+
+    def cycles_at(self, k: int) -> int:
+        return self.cycles[k - 1]
+
+    def error_at(self, k: int) -> float:
+        return self.errors[k - 1]
+
+
+def layer_curve(
+    layer: ConvLayer,
+    row_l1: float,
+    n_planes: int,
+    scale: float = 1.0,
+) -> LayerCurve:
+    """Build one layer's frontier from the cycle model (Eq. 3 at streamed
+    precision k) and the anytime bound at its weights' column-L1 mass."""
+    budgets = tuple(range(1, n_planes + 1))
+    return LayerCurve(
+        name=layer.name,
+        budgets=budgets,
+        cycles=tuple(dslr_cycles(layer, precision=k) for k in budgets),
+        errors=tuple(anytime_bound(row_l1, scale, k) for k in budgets),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class BudgetPlan:
+    """A solved per-layer budget allocation plus its predictions and the
+    frontier it was chosen from (for reporting).  ``budgets`` is ordered like
+    the graph's conv nodes, so it feeds ``ExecutionPolicy.with_plan``
+    directly."""
+
+    network: str
+    budgets: Tuple[Tuple[str, int], ...]
+    predicted_cycles: int
+    predicted_error: float
+    target: str
+    curves: Tuple[LayerCurve, ...]
+
+    @property
+    def budget_dict(self) -> Dict[str, int]:
+        return dict(self.budgets)
+
+    def describe(self) -> str:
+        """Printable plan report: the chosen budgets with each layer's
+        predicted cycles/bound and the network totals."""
+        by_name = {c.name: c for c in self.curves}
+        lines = [
+            f"budget plan [{self.network or 'network'}] target {self.target}: "
+            f"predicted {self.predicted_cycles:,} cycles, "
+            f"error bound {self.predicted_error:.4e}",
+            f"  {'layer':10s} {'budget':>8s} {'cycles':>12s} {'bound':>12s}",
+        ]
+        for name, k in self.budgets:
+            c = by_name[name]
+            lines.append(
+                f"  {name:10s} {k:>4d}/{c.max_budget:<3d} "
+                f"{c.cycles_at(k):>12,} {c.error_at(k):>12.4e}"
+            )
+        return "\n".join(lines)
+
+
+def _totals(curves: Sequence[LayerCurve], k: Dict[str, int]) -> Tuple[int, float]:
+    cycles = sum(c.cycles_at(k[c.name]) for c in curves)
+    error = sum(c.error_at(k[c.name]) for c in curves)
+    return cycles, error
+
+
+def _finish(
+    curves: Tuple[LayerCurve, ...], k: Dict[str, int], target: str, network: str
+) -> BudgetPlan:
+    cycles, error = _totals(curves, k)
+    return BudgetPlan(
+        network=network,
+        budgets=tuple((c.name, k[c.name]) for c in curves),
+        predicted_cycles=cycles,
+        predicted_error=error,
+        target=target,
+        curves=curves,
+    )
+
+
+def plan_budgets(
+    curves: Sequence[LayerCurve],
+    max_cycles: Optional[int] = None,
+    max_error: Optional[float] = None,
+    network: str = "",
+) -> BudgetPlan:
+    """Solve the budget allocation by greedy marginal-benefit descent.
+
+    Exactly one target must be given:
+
+      * ``max_cycles`` — minimize the predicted error subject to total
+        predicted cycles <= max_cycles.  The plan starts at the largest
+        *uniform* budget that fits (so it dominates the equal-latency
+        uniform baseline layer by layer — per-layer budget monotonicity then
+        guarantees it is never worse in measured error either) and spends
+        the remaining cycle slack by greedy ascent: repeatedly grant the
+        +1-digit increment with the best error reduction per cycle.
+      * ``max_error``  — minimize predicted cycles subject to the summed
+        per-layer error <= max_error.  Starts at the smallest uniform budget
+        meeting the target and reclaims cycles by greedy descent: repeatedly
+        revoke the digit whose removal costs the least error per cycle saved
+        while the total stays under the target.
+
+    Anchoring at the uniform floor keeps the allocation balanced — the
+    additive per-layer error model is only first-order, and real truncation
+    errors interact once many layers run at very low budgets, so an
+    unanchored greedy can look better on paper and measure worse.
+
+    Raises ``ValueError`` when the target is infeasible (cycles below the
+    one-plane floor, or an error target tighter than full precision allows).
+    """
+    if (max_cycles is None) == (max_error is None):
+        raise ValueError("set exactly one of max_cycles / max_error")
+    curves = tuple(curves)
+    if not curves:
+        raise ValueError("no layer curves to plan over")
+
+    if max_cycles is not None:
+        min_c = sum(c.cycles_at(1) for c in curves)
+        if min_c > max_cycles:
+            raise ValueError(
+                f"max_cycles={max_cycles:,} infeasible: one plane per layer "
+                f"already needs {min_c:,} cycles"
+            )
+        floor = uniform_budget_for_cycles(curves, max_cycles)
+        k = {c.name: min(floor, c.max_budget) for c in curves}
+        total_c, _ = _totals(curves, k)
+        while True:
+            # candidate +1 increments, best error reduction per cycle first
+            cands = []
+            for c in curves:
+                ki = k[c.name]
+                if ki < c.max_budget:
+                    dc = c.cycles_at(ki + 1) - c.cycles_at(ki)
+                    de = c.error_at(ki) - c.error_at(ki + 1)
+                    cands.append((de / max(dc, 1), c.name, dc))
+            granted = False
+            for _, name, dc in sorted(cands, key=lambda t: (-t[0], t[1])):
+                if total_c + dc <= max_cycles:
+                    k[name] += 1
+                    total_c += dc
+                    granted = True
+                    break
+            if not granted:
+                return _finish(curves, k, f"max_cycles={max_cycles:,}", network)
+
+    _, full_e = _totals(curves, {c.name: c.max_budget for c in curves})
+    if full_e > max_error:
+        raise ValueError(
+            f"max_error={max_error:.4e} infeasible: full precision already "
+            f"bounds at {full_e:.4e}"
+        )
+    floor = next(
+        ku for ku in range(1, max(c.max_budget for c in curves) + 1)
+        if _totals(curves, {c.name: min(ku, c.max_budget) for c in curves})[1]
+        <= max_error
+    )
+    k = {c.name: min(floor, c.max_budget) for c in curves}
+    _, total_e = _totals(curves, k)
+    while True:
+        # candidate -1 decrements, least error cost per cycle saved first
+        cands = []
+        for c in curves:
+            ki = k[c.name]
+            if ki > 1:
+                dc = c.cycles_at(ki) - c.cycles_at(ki - 1)
+                de = c.error_at(ki - 1) - c.error_at(ki)
+                cands.append((de / max(dc, 1), c.name, de))
+        revoked = False
+        for _, name, de in sorted(cands, key=lambda t: (t[0], t[1])):
+            if total_e + de <= max_error:
+                k[name] -= 1
+                total_e += de
+                revoked = True
+                break
+        if not revoked:
+            return _finish(curves, k, f"max_error={max_error:.4e}", network)
+
+
+def uniform_plan(curves: Sequence[LayerCurve], budget: int, network: str = "") -> BudgetPlan:
+    """The uniform-budget baseline as a BudgetPlan (every layer at ``budget``
+    planes) — the comparison point benchmarks/planner_bench.py measures the
+    greedy plan against at equal predicted cycles."""
+    curves = tuple(curves)
+    for c in curves:
+        if not 1 <= budget <= c.max_budget:
+            raise ValueError(f"budget {budget} outside [1, {c.max_budget}] for {c.name}")
+    k = {c.name: budget for c in curves}
+    return _finish(curves, k, f"uniform={budget}", network)
+
+
+def uniform_budget_for_cycles(curves: Sequence[LayerCurve], max_cycles: int) -> int:
+    """Largest uniform budget whose predicted total fits in ``max_cycles``
+    (the equal-latency uniform baseline for a planned allocation)."""
+    curves = tuple(curves)
+    best = 0
+    for budget in range(1, min(c.max_budget for c in curves) + 1):
+        if sum(c.cycles_at(budget) for c in curves) <= max_cycles:
+            best = budget
+    if best == 0:
+        raise ValueError(f"no uniform budget fits in {max_cycles:,} cycles")
+    return best

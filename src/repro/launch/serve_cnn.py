@@ -1,7 +1,8 @@
 """Batched CNN serving driver over the compiled DSLR engine.
 
     PYTHONPATH=src python -m repro.launch.serve_cnn --net resnet18 \
-        --width 0.05 --batch 8 --requests 4 [--budget 4] [--per-layer-budgets ...]
+        --width 0.05 --batch 8 --requests 4 [--budget 4] [--per-layer-budgets ...] \
+        [--plan-latency CYCLES | --plan-error BOUND]
 
 The CNN analogue of launch/serve.py's transformer loop: one engine is
 compiled per policy (weights flattened/stationary once), then every request
@@ -10,7 +11,9 @@ data axis (rules from launch/mesh.py), the compiled program reused across
 batches.  Per-batch latency percentiles are reported together with the
 per-layer anytime error bounds of the serving policy, i.e. the
 accuracy/latency trade-off the digit budget buys (the paper's runtime
-precision scaling as a serving knob).
+precision scaling as a serving knob).  ``--plan-latency``/``--plan-error``
+hand that knob to the budget planner (core/planner.py): budgets are solved
+on the cycle-model/anytime-bound frontier and the chosen plan is printed.
 """
 from __future__ import annotations
 
@@ -37,6 +40,14 @@ def main() -> None:
                     help="uniform digit budget (planes)")
     ap.add_argument("--per-layer-budgets", default="",
                     help="comma-separated per-conv-layer budgets")
+    ap.add_argument("--plan-latency", type=int, default=None, metavar="CYCLES",
+                    help="solve per-layer budgets for an accelerator cycle target")
+    ap.add_argument("--plan-error", type=float, default=None, metavar="BOUND",
+                    help="solve per-layer budgets for a predicted output-error target")
+    ap.add_argument("--plan-method", default="bound",
+                    choices=("auto", "bound", "measured"),
+                    help="planner frontier error model (default: analytic "
+                         "bound — 'measured' probes every layer first)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -50,6 +61,26 @@ def main() -> None:
 
     t0 = time.perf_counter()
     engine = compile_cnn(cfg, params, policy)
+    if args.plan_latency is not None or args.plan_error is not None:
+        if args.per_layer_budgets or args.budget:
+            raise SystemExit("--plan-* and explicit budgets are mutually exclusive")
+        calib = None
+        if args.plan_method != "bound":
+            calib = jnp.asarray(
+                np.random.default_rng(args.seed).standard_normal(
+                    (1, args.img, args.img, 3)
+                ),
+                jnp.float32,
+            )
+        try:
+            plan = engine.plan(
+                max_cycles=args.plan_latency, max_error=args.plan_error,
+                x=calib, method=args.plan_method,
+            )
+        except ValueError as e:
+            raise SystemExit(f"--plan-*: {e}")
+        print(plan.describe(), flush=True)
+        engine = compile_cnn(cfg, params, policy.with_plan(plan))
     build_ms = (time.perf_counter() - t0) * 1e3
 
     rng = np.random.default_rng(args.seed)
@@ -77,10 +108,14 @@ def main() -> None:
     )
     bounds = engine.error_bounds()
     worst = max(bounds, key=bounds.get)
+    if engine.policy.layer_budgets:
+        shown = ",".join(str(k) for _, k in engine.policy.layer_budgets)
+    else:
+        shown = str(args.budget or "full")
     print(
-        f"[serve_cnn] policy: mode={engine.policy.mode} budgets="
-        f"{args.per_layer_budgets or args.budget or 'full'}; worst per-layer "
-        f"anytime bound {worst}={bounds[worst]:.3e} (per unit activation scale)"
+        f"[serve_cnn] policy: mode={engine.policy.mode} budgets={shown}; "
+        f"worst per-layer anytime bound {worst}={bounds[worst]:.3e} "
+        f"(per unit activation scale)"
     )
 
 

@@ -24,15 +24,18 @@ activation stage, cf. DSLOT-NN's pooled MSDF datapath).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core import cycle_model as cyc
 from repro.core import dslr as core_dslr
 from repro.core import online
+from repro.core import planner as core_planner
 from repro.kernels import ops as kops
 from . import common as cm
 from .graph import (
@@ -118,10 +121,13 @@ def execute_graph(
     x: jax.Array,
     policy: ExecutionPolicy,
     weights: Optional[ConvWeights] = None,
+    return_all: bool = False,
 ) -> jax.Array:
     """Run the layer graph.  ``weights`` carries the engine's build-time
     flattened conv weights; without it (the deprecated ``mode=`` shim) they
-    are flattened in-trace — numerically identical, just re-done per call."""
+    are flattened in-trace — numerically identical, just re-done per call.
+    ``return_all`` returns every node's value (planner calibration) instead
+    of just the head's."""
     vals = {GRAPH_INPUT: x}
     fused_done = set()
     for node in graph.nodes:
@@ -162,12 +168,41 @@ def execute_graph(
             vals[node.name] = cm.dense(params[node.param], a)
         else:
             raise ValueError(f"unknown node op {node.op!r}")
+    if return_all:
+        return vals
     return vals[graph.nodes[-1].name]
 
 
 @functools.partial(jax.jit, static_argnames=("graph", "policy"))
 def _jit_execute(graph: LayerGraph, policy: ExecutionPolicy, params, weights, x):
     return execute_graph(graph, params, x, policy, weights=weights)
+
+
+# ---------------------------------------------------------------------------
+# cycle-model dims for every weight-carrying graph node (planner input)
+# ---------------------------------------------------------------------------
+
+
+def conv_layers_for_graph(cfg: CnnConfig, graph: LayerGraph) -> Dict[str, cyc.ConvLayer]:
+    """Cycle-model ``ConvLayer`` dims for each conv/downsample node.
+
+    Named conv nodes take the config's (width-scaled) Table-3 dims directly.
+    A ResNet projection shortcut ``Ca.ds`` is a 1x1 conv over the block's
+    input (``Ca``'s input channels) striding like ``Ca``, so it shares
+    ``Ca``'s output extent.  At ``width=1.0`` the totals reproduce the
+    paper's Eq.-3 conv cycle counts exactly.
+    """
+    layers = {l.name: l for l in cfg.layers()}
+    out: Dict[str, cyc.ConvLayer] = {}
+    for node in graph.conv_nodes:
+        if node.op == "conv":
+            out[node.name] = layers[node.name]
+        else:  # downsample "Ca.ds"
+            la = layers[node.name.removesuffix(".ds")]
+            out[node.name] = cyc.ConvLayer(
+                node.name, 1, node.features, la.n, la.r, la.c, la.stride
+            )
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -255,8 +290,187 @@ class DslrEngine:
             )
         return out
 
+    def _weight_gain(self, name: str, param: str, op: str) -> float:
+        """Induced ∞-norm (max column L1) of a weight-carrying node."""
+        if op in ("conv", "downsample"):
+            w = self._weights[name][0]
+        else:  # dense ({"kernel", "bias"} leaves, see common.dense_spec)
+            w = self._exec_params[param]["kernel"]
+        return float(jnp.max(jnp.sum(jnp.abs(w.astype(jnp.float32)), axis=0)))
 
-def compile_cnn(cfg: CnnConfig, params, policy: ExecutionPolicy | None = None) -> DslrEngine:
+    def node_gains(self) -> Dict[str, float]:
+        """First-order ∞-norm sensitivity of the network output to a
+        perturbation at each node's *output*: one reverse graph walk.
+        conv/downsample/dense consumers amplify by their induced ∞-norm;
+        bias add, ReLU, max/avg pooling are 1-Lipschitz; a residual add sums
+        the gains of its two branches."""
+        gains: Dict[str, float] = {n.name: 0.0 for n in self.graph.nodes}
+        gains[self.graph.nodes[-1].name] = 1.0
+        for node in reversed(self.graph.nodes):
+            local = (
+                self._weight_gain(node.name, node.param, node.op)
+                if node.op in ("conv", "downsample", "dense")
+                else 1.0
+            )
+            for src in node.inputs:
+                if src != GRAPH_INPUT:
+                    gains[src] += gains[node.name] * local
+        return gains
+
+    def calibration_scales(self, x: jax.Array) -> Dict[str, float]:
+        """Per-conv-layer activation quantization scale observed on a
+        calibration batch: one (eager) forward under this engine's policy,
+        then the same amax-based formula ``digits.to_planes`` applies
+        (``amax * (1 + 2**-n_digits)``) at every conv/downsample input."""
+        vals = execute_graph(
+            self.graph, self._exec_params, x, self.policy,
+            weights=self._exec_weights, return_all=True,
+        )
+        f = self.policy.n_digits
+        out = {}
+        for node in self.graph.conv_nodes:
+            amax = float(jnp.max(jnp.abs(vals[node.inputs[0]])))
+            out[node.name] = max(amax, 1e-30) * (1.0 + 2.0 ** -f)
+        return out
+
+    def probe_sensitivities(
+        self, x: jax.Array, budgets: Optional[Sequence[int]] = None
+    ) -> Dict[str, Tuple[float, ...]]:
+        """Measured per-layer anytime sensitivity sweep: for each conv layer
+        and each probed budget, the max-abs logit deviation when THAT layer
+        alone is truncated while every other layer stays at full precision.
+        One eager full-network forward per (layer, budget) pair plus the
+        full-precision reference — use a small calibration batch; in
+        interpret mode on CPU this costs seconds per network, which is why
+        the CLIs default to the analytic ``bound`` frontier.  The payoff:
+        probes see the true activation scales *and* the true (not
+        worst-case) downstream error propagation; the worst-case Lipschitz
+        composition (``node_gains``) can overestimate deep layers' gains by
+        orders of magnitude (see docs/NUMERICS.md).  Returns, per layer, one
+        error per entry of ``budgets`` (default: every budget 1..n_planes;
+        the full budget probes as exactly 0 without a forward)."""
+        if self.policy.mode != "dslr_planes":
+            raise ValueError("probe_sensitivities needs a dslr_planes-mode engine")
+        n_planes = self.policy.n_planes
+        budgets = tuple(budgets) if budgets is not None else tuple(range(1, n_planes + 1))
+        base = dataclasses.replace(self.policy, digit_budget=None, layer_budgets=None)
+        y_full = execute_graph(
+            self.graph, self._exec_params, x, base, weights=self._exec_weights
+        )
+        out = {}
+        for node in self.graph.conv_nodes:
+            errs = []
+            for k in budgets:
+                if k >= n_planes:  # full precision: identical by construction
+                    errs.append(0.0)
+                    continue
+                probed = dataclasses.replace(base, layer_budgets=((node.name, int(k)),))
+                y = execute_graph(
+                    self.graph, self._exec_params, x, probed, weights=self._exec_weights
+                )
+                errs.append(float(jnp.max(jnp.abs(y - y_full))))
+            out[node.name] = tuple(errs)
+        return out
+
+    def budget_curves(
+        self,
+        x: Optional[jax.Array] = None,
+        scale: float = 1.0,
+        method: str = "auto",
+    ) -> Tuple[core_planner.LayerCurve, ...]:
+        """Per-conv-layer (digit budget -> predicted cycles, error) Pareto
+        frontier — the planner's input, ordered like ``graph.conv_nodes``.
+        Cycles always come from Eq. (3) at this config's layer dims; the
+        error side depends on ``method``:
+
+          * ``"bound"`` — the analytic anytime bound at the layer's actual
+            weight column-L1 mass (exactly ``error_bounds``'s model), per
+            unit activation ``scale``, or at calibrated per-layer scales
+            when ``x`` is given (``calibration_scales``).
+          * ``"measured"`` — the probed per-(layer, budget) logit deviations
+            (``probe_sensitivities``), made non-increasing in the budget by
+            a reverse running-minimum envelope (raw probes can wiggle where
+            CSD tails cancel).  Needs ``x``.
+          * ``"auto"`` — ``"measured"`` when ``x`` is given, else ``"bound"``.
+        """
+        if method == "auto":
+            method = "measured" if x is not None else "bound"
+        dims = conv_layers_for_graph(self.cfg, self.graph)
+        n_planes = self.policy.n_planes
+        if method == "measured":
+            if x is None:
+                raise ValueError("method='measured' needs a calibration batch x")
+            sens = self.probe_sensitivities(x)
+            budgets = tuple(range(1, n_planes + 1))
+            curves = []
+            for node in self.graph.conv_nodes:
+                raw = sens[node.name]
+                # non-increasing envelope, right to left: a budget is charged
+                # at least any larger budget's measured error (raw probes can
+                # wiggle upward where CSD tails happen to cancel)
+                env, ceil = [], 0.0
+                for e in reversed(raw):
+                    ceil = max(ceil, e)
+                    env.append(ceil)
+                curves.append(
+                    core_planner.LayerCurve(
+                        name=node.name,
+                        budgets=budgets,
+                        cycles=tuple(
+                            cyc.dslr_cycles(dims[node.name], precision=k)
+                            for k in budgets
+                        ),
+                        errors=tuple(reversed(env)),
+                    )
+                )
+            return tuple(curves)
+        if method != "bound":
+            raise ValueError(f"method={method!r} not in ('auto', 'bound', 'measured')")
+        scales = self.calibration_scales(x) if x is not None else None
+        curves = []
+        for node in self.graph.conv_nodes:
+            row_l1 = self._weight_gain(node.name, node.param, node.op)
+            s = scales[node.name] if scales is not None else scale
+            curves.append(
+                core_planner.layer_curve(dims[node.name], row_l1, n_planes, scale=s)
+            )
+        return tuple(curves)
+
+    def plan(
+        self,
+        max_cycles: Optional[int] = None,
+        max_error: Optional[float] = None,
+        x: Optional[jax.Array] = None,
+        scale: float = 1.0,
+        method: str = "auto",
+    ) -> core_planner.BudgetPlan:
+        """Solve per-layer digit budgets on this engine's frontier under a
+        latency target (``max_cycles``, accelerator cycles) or an error
+        target (``max_error``, predicted output error).  ``x`` is an
+        optional calibration batch; with it the frontier is measured
+        (``method='measured'``), without it analytic (``method='bound'`` —
+        see ``budget_curves``).  Apply the result with
+        ``compile_cnn(cfg, params, policy.with_plan(plan))`` or
+        ``compile_cnn(..., plan=plan)``."""
+        return core_planner.plan_budgets(
+            self.budget_curves(x=x, scale=scale, method=method),
+            max_cycles=max_cycles,
+            max_error=max_error,
+            network=self.cfg.name,
+        )
+
+
+def compile_cnn(
+    cfg: CnnConfig,
+    params,
+    policy: ExecutionPolicy | None = None,
+    plan: core_planner.BudgetPlan | None = None,
+) -> DslrEngine:
     """Build a compiled engine for one of the paper's networks: faithful
-    topology graph, weights flattened once, one jit program per policy."""
-    return DslrEngine(cfg, params, policy if policy is not None else ExecutionPolicy())
+    topology graph, weights flattened once, one jit program per policy.
+    ``plan`` (a planner ``BudgetPlan``) installs its per-layer digit budgets
+    on the policy via ``ExecutionPolicy.with_plan``."""
+    policy = policy if policy is not None else ExecutionPolicy()
+    if plan is not None:
+        policy = policy.with_plan(plan)
+    return DslrEngine(cfg, params, policy)

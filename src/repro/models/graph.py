@@ -194,6 +194,15 @@ class ExecutionPolicy:
             pairs = tuple((n.name, int(k)) for n, k in zip(convs, budgets))
         return dataclasses.replace(self, layer_budgets=pairs)
 
+    def with_plan(self, plan):
+        """Policy copy taking its per-layer budgets from a solved planner
+        ``BudgetPlan`` (core/planner.py) — equivalent to
+        ``with_layer_budgets(graph, plan.budget_dict)`` since plans carry
+        their budgets in graph conv order.  Layer names are validated against
+        the graph when the engine is built."""
+        pairs = tuple((str(name), int(k)) for name, k in plan.budgets)
+        return dataclasses.replace(self, layer_budgets=pairs)
+
 
 # ---------------------------------------------------------------------------
 # graph builders (faithful topologies, dims from cycle_model.NETWORKS)

@@ -1,0 +1,30 @@
+"""The docs contract: every ``>>>`` example in docs/*.md runs (doctest) and
+every intra-repo markdown link in README/docs resolves — the same check the
+CI `docs` job runs via tools/check_docs.py."""
+import os
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def test_docs_exist():
+    assert (ROOT / "docs" / "ARCHITECTURE.md").is_file()
+    assert (ROOT / "docs" / "NUMERICS.md").is_file()
+
+
+def test_check_docs_passes():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (str(ROOT / "src"), env.get("PYTHONPATH", "")) if p
+    )
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "check_docs.py")],
+        cwd=ROOT,
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr

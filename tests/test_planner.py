@@ -1,0 +1,250 @@
+"""The cycle-model-driven per-layer digit-budget planner (core/planner.py +
+the DslrEngine integration).
+
+Checks, in interpret mode on CPU:
+  * per-layer curves: cycles strictly increasing and errors non-increasing
+    in the budget, for both the analytic-bound and measured-probe frontiers,
+  * plans respect their targets (predicted cycles <= max_cycles, predicted
+    error <= max_error) and beat/equal the uniform baseline at equal cycles,
+  * monotonicity: a larger cycle budget never increases the predicted error,
+    and the planned budgets dominate the uniform floor layer by layer,
+  * infeasible / ill-formed targets raise,
+  * ``ExecutionPolicy.with_plan`` round-trips through ``compile_cnn``
+    bit-identically to passing the same budgets via ``with_layer_budgets``
+    (and via the ``compile_cnn(..., plan=)`` kwarg),
+  * ``conv_layers_for_graph`` reproduces the paper's Eq.-3 cycles at
+    width=1.0 (named convs) and derives the projection-shortcut dims.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import cycle_model as cyc
+from repro.core import planner as pl
+from repro.models import common as cm
+from repro.models.engine import compile_cnn, conv_layers_for_graph
+from repro.models.graph import CnnConfig, ExecutionPolicy, build_graph, graph_spec
+
+
+def setup(name, width=0.05, classes=4, seed=0, B=2, img=16):
+    cfg = CnnConfig(name=name, width=width, num_classes=classes)
+    params = cm.init_params(graph_spec(cfg), jax.random.PRNGKey(seed))
+    x = jnp.asarray(
+        np.random.default_rng(seed).standard_normal((B, img, img, 3)), jnp.float32
+    )
+    return cfg, params, x
+
+
+@pytest.fixture(scope="module")
+def alexnet_engine():
+    cfg, params, x = setup("alexnet")
+    return cfg, params, x, compile_cnn(cfg, params)
+
+
+# ---------------------------------------------------------------------------
+# curves
+# ---------------------------------------------------------------------------
+
+
+def test_bound_curves_shape_and_monotonicity(alexnet_engine):
+    _, _, _, engine = alexnet_engine
+    curves = engine.budget_curves()  # analytic bound, per unit scale
+    assert [c.name for c in curves] == [n.name for n in engine.graph.conv_nodes]
+    for c in curves:
+        assert c.budgets == tuple(range(1, engine.policy.n_planes + 1))
+        assert list(c.cycles) == sorted(c.cycles) and len(set(c.cycles)) == len(c.cycles)
+        assert all(a > b for a, b in zip(c.errors, c.errors[1:]))  # halves per digit
+
+
+def test_measured_curves_monotone_envelope(alexnet_engine):
+    _, _, x, engine = alexnet_engine
+    curves = engine.budget_curves(x=x)  # probe method
+    for c in curves:
+        assert all(a >= b for a, b in zip(c.errors, c.errors[1:]))
+        assert c.errors[-1] == 0.0  # full precision probes as exactly zero
+        assert c.errors[0] > 0.0
+
+
+def test_bound_curve_matches_error_bounds(alexnet_engine):
+    """The analytic frontier's error column is exactly the engine's
+    per-layer anytime bound at each budget."""
+    cfg, params, _, engine = alexnet_engine
+    curves = {c.name: c for c in engine.budget_curves()}
+    for k in (2, 5):
+        eng_k = compile_cnn(cfg, params, ExecutionPolicy(digit_budget=k))
+        for name, b in eng_k.error_bounds().items():
+            np.testing.assert_allclose(curves[name].error_at(k), b, rtol=1e-5)
+
+
+def test_calibrated_bound_curves_scale_the_analytic_frontier(alexnet_engine):
+    """method='bound' with a calibration batch: each layer's curve is the
+    per-unit analytic curve multiplied by its observed activation scale."""
+    _, _, x, engine = alexnet_engine
+    unit = engine.budget_curves(method="bound")
+    calib = engine.budget_curves(x=x, method="bound")
+    scales = engine.calibration_scales(x)
+    assert set(scales) == {c.name for c in unit}
+    assert all(s > 0 for s in scales.values())
+    for cu, cc in zip(unit, calib):
+        assert cu.cycles == cc.cycles
+        np.testing.assert_allclose(
+            np.array(cc.errors), np.array(cu.errors) * scales[cu.name], rtol=1e-6
+        )
+
+
+def test_node_gains_reverse_walk():
+    """node_gains: positive on every contributing node, residual adds sum
+    their branches (block output gain >= either branch's path alone)."""
+    cfg, params, _ = setup("resnet18")
+    engine = compile_cnn(cfg, params)
+    gains = engine.node_gains()
+    assert gains[engine.graph.nodes[-1].name] == 1.0
+    for node in engine.graph.conv_nodes:
+        assert gains[node.name] > 0.0, node.name
+    # the add is 1-Lipschitz into each branch: its dedicated input (the
+    # block's bias node, sole consumer = the add) inherits the add's gain
+    # exactly, while a shared skip producer accumulates at least as much
+    g = engine.graph
+    for add in (n for n in g.nodes if n.op == "residual_add"):
+        assert gains[add.inputs[0]] == gains[add.name]
+        assert gains[add.inputs[1]] >= gains[add.name]
+
+
+def test_conv_layers_for_graph_full_width_matches_paper():
+    cfg = CnnConfig(name="alexnet", width=1.0)
+    dims = conv_layers_for_graph(cfg, build_graph(cfg))
+    want = {l.name: l for l in cyc.alexnet_layers()}
+    assert dims == want
+    # ResNet projection shortcuts: 1x1, block-input channels, strided extent
+    cfg = CnnConfig(name="resnet18", width=1.0)
+    dims = conv_layers_for_graph(cfg, build_graph(cfg))
+    ds = dims["C6.ds"]
+    assert (ds.k, ds.n, ds.m, ds.stride) == (1, 64, 128, 2)
+    assert (ds.r, ds.c) == (28, 28)
+
+
+# ---------------------------------------------------------------------------
+# plans: targets, monotonicity, uniform dominance
+# ---------------------------------------------------------------------------
+
+
+def test_plan_respects_cycle_target_and_dominates_uniform(alexnet_engine):
+    _, _, _, engine = alexnet_engine
+    curves = engine.budget_curves()
+    for ku in (2, 4, 6):
+        uni = pl.uniform_plan(curves, ku)
+        target = int(uni.predicted_cycles * 1.05)
+        plan = pl.plan_budgets(curves, max_cycles=target)
+        assert plan.predicted_cycles <= target
+        assert plan.predicted_error <= uni.predicted_error
+        # anchored at the uniform floor: dominates it layer by layer
+        assert all(k >= ku for k in plan.budget_dict.values())
+
+
+def test_plan_error_monotone_in_cycle_budget(alexnet_engine):
+    _, _, _, engine = alexnet_engine
+    curves = engine.budget_curves()
+    lo = sum(c.cycles_at(1) for c in curves)
+    hi = sum(c.cycles_at(c.max_budget) for c in curves)
+    targets = range(lo, hi + 1, max(1, (hi - lo) // 23))
+    errs = [pl.plan_budgets(curves, max_cycles=t).predicted_error for t in targets]
+    assert all(a >= b - 1e-12 for a, b in zip(errs, errs[1:])), errs
+
+
+def test_plan_respects_error_target(alexnet_engine):
+    _, _, _, engine = alexnet_engine
+    curves = engine.budget_curves()
+    full_cycles = sum(c.cycles_at(c.max_budget) for c in curves)
+    for ku in (3, 6):
+        e_target = pl.uniform_plan(curves, ku).predicted_error
+        plan = pl.plan_budgets(curves, max_error=e_target)
+        assert plan.predicted_error <= e_target
+        assert plan.predicted_cycles <= pl.uniform_plan(curves, ku).predicted_cycles
+        assert plan.predicted_cycles <= full_cycles
+
+
+def test_infeasible_and_illformed_targets(alexnet_engine):
+    _, _, _, engine = alexnet_engine
+    curves = engine.budget_curves()
+    with pytest.raises(ValueError):
+        pl.plan_budgets(curves, max_cycles=1)  # below the one-plane floor
+    with pytest.raises(ValueError):
+        pl.plan_budgets(curves, max_error=-1.0)  # tighter than full precision
+    with pytest.raises(ValueError):
+        pl.plan_budgets(curves)  # no target
+    with pytest.raises(ValueError):
+        pl.plan_budgets(curves, max_cycles=10**9, max_error=1.0)  # both
+    with pytest.raises(ValueError):
+        pl.plan_budgets(())  # no curves
+    with pytest.raises(ValueError):
+        pl.uniform_plan(curves, 99)
+    with pytest.raises(ValueError):
+        pl.uniform_budget_for_cycles(curves, 1)
+    with pytest.raises(ValueError):
+        engine.budget_curves(method="nope")
+    with pytest.raises(ValueError):
+        engine.budget_curves(method="measured")  # needs x
+
+
+def test_layer_curve_validation():
+    with pytest.raises(ValueError):
+        pl.LayerCurve("x", (1, 3), (1, 2), (1.0, 0.5))  # non-contiguous budgets
+    with pytest.raises(ValueError):
+        pl.LayerCurve("x", (1, 2), (1,), (1.0, 0.5))  # length mismatch
+
+
+# ---------------------------------------------------------------------------
+# with_plan round-trip through compile_cnn (bit-identical)
+# ---------------------------------------------------------------------------
+
+
+def test_with_plan_roundtrips_bit_identically(alexnet_engine):
+    cfg, params, x, engine = alexnet_engine
+    curves = engine.budget_curves()
+    target = int(pl.uniform_plan(curves, 4).predicted_cycles * 1.05)
+    plan = pl.plan_budgets(curves, max_cycles=target, network=cfg.name)
+    g = build_graph(cfg)
+    via_with_plan = compile_cnn(cfg, params, ExecutionPolicy().with_plan(plan))
+    via_budgets = compile_cnn(
+        cfg, params, ExecutionPolicy().with_layer_budgets(g, plan.budget_dict)
+    )
+    via_kwarg = compile_cnn(cfg, params, plan=plan)
+    assert via_with_plan.policy == via_budgets.policy == via_kwarg.policy
+    got = via_with_plan(x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(via_budgets(x)))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(via_kwarg(x)))
+    # the plan's budgets genuinely bind: differs from the uniform floor
+    uniform = compile_cnn(cfg, params, ExecutionPolicy(digit_budget=4))
+    assert bool(jnp.any(got != uniform(x)))
+
+
+def test_planned_measured_error_beats_uniform_at_equal_cycles(alexnet_engine):
+    """The acceptance property, suite-sized: at a cycle target between two
+    uniform levels, the planned engine's measured error vs the float oracle
+    is no worse than the best uniform budget fitting the same target."""
+    cfg, params, x, engine = alexnet_engine
+    yf = compile_cnn(cfg, params, ExecutionPolicy(mode="float"))(x)
+    curves = engine.budget_curves(x=x)
+    lo = sum(c.cycles_at(4) for c in curves)
+    hi = sum(c.cycles_at(5) for c in curves)
+    target = (lo + hi) // 2
+    plan = pl.plan_budgets(curves, max_cycles=target, network=cfg.name)
+    assert plan.predicted_cycles <= target
+    ku = pl.uniform_budget_for_cycles(curves, target)
+    err_p = float(jnp.max(jnp.abs(compile_cnn(cfg, params, plan=plan)(x) - yf)))
+    err_u = float(
+        jnp.max(jnp.abs(compile_cnn(cfg, params, ExecutionPolicy(digit_budget=ku))(x) - yf))
+    )
+    assert err_p <= err_u, (err_p, err_u)
+
+
+def test_plan_describe_and_engine_plan(alexnet_engine):
+    cfg, _, _, engine = alexnet_engine
+    plan = engine.plan(max_cycles=10**7)  # loose: everything at full precision
+    assert plan.network == cfg.name
+    assert all(k == engine.policy.n_planes for k in plan.budget_dict.values())
+    text = plan.describe()
+    assert "max_cycles" in text
+    for name, _ in plan.budgets:
+        assert name in text

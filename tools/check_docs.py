@@ -1,0 +1,64 @@
+#!/usr/bin/env python
+"""Docs checker (the CI `docs` job): doctests + intra-repo link validation.
+
+  * Runs every ``>>>`` example in ``docs/*.md`` through doctest (the worked
+    numerics example must actually hold against the code).
+  * Validates relative markdown links in README.md and docs/*.md: a link
+    that resolves inside the repo must point at an existing file (anchors
+    are stripped; http(s)/mailto and GitHub-web links that escape the repo
+    root, like the CI badge, are skipped).
+
+Run locally:  PYTHONPATH=src python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import doctest
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def check_links(md: pathlib.Path) -> list[str]:
+    errors = []
+    for target in LINK_RE.findall(md.read_text()):
+        if "://" in target or target.startswith(("#", "mailto:")):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        resolved = (md.parent / path).resolve()
+        try:
+            resolved.relative_to(ROOT)
+        except ValueError:
+            continue  # escapes the repo: a GitHub-web relative link (badge)
+        if not resolved.exists():
+            errors.append(f"{md.relative_to(ROOT)}: broken link -> {target}")
+    return errors
+
+
+def main() -> int:
+    docs = sorted((ROOT / "docs").glob("*.md"))
+    failures: list[str] = []
+    for md in [ROOT / "README.md", *docs]:
+        failures += check_links(md)
+        print(f"links   {md.relative_to(ROOT)}: checked")
+    for md in docs:
+        res = doctest.testfile(
+            str(md),
+            module_relative=False,
+            optionflags=doctest.ELLIPSIS | doctest.NORMALIZE_WHITESPACE,
+        )
+        print(f"doctest {md.relative_to(ROOT)}: {res.attempted} examples, "
+              f"{res.failed} failed")
+        if res.failed:
+            failures.append(f"{md.relative_to(ROOT)}: {res.failed} doctest failure(s)")
+    for f in failures:
+        print(f"FAIL: {f}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
