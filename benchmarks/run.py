@@ -11,6 +11,7 @@ One module per paper table/figure:
   conv_bench         conv execution paths: float vs scan-serial vs digit-plane
   engine_bench       compiled engine: build-once vs per-call weight prep
   planner_bench      budget planner: planned vs uniform budgets, equal cycles
+  serve_bench        request-level server: mixed-SLO latency, scale decoupling
 
 ``--json <path>`` (or env BENCH_JSON) writes every emitted row to a JSON
 artifact — the per-PR perf trajectory CI uploads.  Env BENCH_FAST=1 shrinks
@@ -32,6 +33,7 @@ MODULES = [
     "conv_bench",
     "engine_bench",
     "planner_bench",
+    "serve_bench",
 ]
 
 

@@ -1,0 +1,134 @@
+"""Request-level serving benchmark: DslrServer under mixed SLO traffic.
+
+The serving story's measurable claims:
+
+  * **latency/throughput** — after warmup, mixed-SLO request waves dispatch
+    through the (bucket, policy) program cache with no re-tracing: per-wave
+    latency percentiles (p50/p99) and end-to-end throughput are reported,
+    plus the total number of compiled programs (bounded by
+    buckets x tiers, however ragged the traffic).
+  * **per-sample vs per-tensor scale error** — a batch with one
+    large-magnitude outlier image: under per-tensor scales the outlier
+    raises the shared quantization amax and corrupts its batchmates
+    (non-zero deviation vs serving each alone); under per-sample scales the
+    deviation is exactly zero.  ``serve.scale_decoupling`` records both.
+
+Emitted rows:
+  * ``serve.warmup``       — one-off compile cost of every (bucket, tier)
+                             program,
+  * ``serve.wave_p50`` / ``serve.wave_p99`` — steady-state per-wave latency,
+                             derived carries throughput + program count,
+  * ``serve.anytime``      — one request asking for k-digit partials; derived
+                             records measured error <= reported bound,
+  * ``serve.scale_err_per_tensor`` / ``serve.scale_err_per_sample`` — max
+                             batchmate deviation vs solo serving (outlier
+                             batch), per scale mode,
+  * ``serve.scale_decoupling`` — the pass verdict (per_sample == 0 and
+                             per_tensor > 0).
+
+CPU interpret-mode timings are functional comparisons only.  ``BENCH_FAST=1``
+shrinks shapes/request counts to smoke size.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models.engine import compile_cnn
+from repro.models.graph import CnnConfig, ExecutionPolicy, graph_spec
+from repro.serve import DslrServer
+from .common import FAST, emit
+
+
+def main() -> None:
+    if FAST:
+        net, width, img, waves, wave = "alexnet", 0.02, 8, 2, 3
+        buckets = (1, 2)
+    else:
+        net, width, img, waves, wave = "alexnet", 0.05, 16, 4, 6
+        buckets = (1, 2, 4, 8)
+    tag = f"{net}_w{width}_i{img}"
+    cfg = CnnConfig(name=net, width=width, num_classes=4)
+    params = cm.init_params(graph_spec(cfg), jax.random.PRNGKey(0))
+    engine = compile_cnn(cfg, params, ExecutionPolicy())
+    server = DslrServer(engine, buckets=buckets)
+    tiers = sorted(server.slos)
+
+    t0 = time.perf_counter()
+    warmed = server.warmup((img, img, 3))
+    emit(
+        f"serve.warmup_{tag}",
+        (time.perf_counter() - t0) * 1e6,
+        f"{warmed} (bucket, tier) programs compiled up front",
+    )
+
+    rng = np.random.default_rng(0)
+    wave_us = []
+    for w in range(waves):
+        imgs = rng.standard_normal((wave, img, img, 3))
+        t0 = time.perf_counter()
+        handles = [
+            server.submit(jnp.asarray(imgs[i], jnp.float32),
+                          slo=tiers[(w * wave + i) % len(tiers)])
+            for i in range(wave)
+        ]
+        server.flush()
+        jax.block_until_ready([h.result() for h in handles])
+        wave_us.append((time.perf_counter() - t0) * 1e6)
+    total_s = sum(wave_us) / 1e6
+    derived = (
+        f"mixed-SLO waves of {wave}; throughput "
+        f"{waves * wave / max(total_s, 1e-9):.1f} img/s; "
+        f"programs={len(server.program_keys)} stats={server.stats}"
+    )
+    emit(f"serve.wave_p50_{tag}", float(np.percentile(wave_us, 50)), derived)
+    emit(
+        f"serve.wave_p99_{tag}",
+        float(np.percentile(wave_us, 99)),
+        f"p99 of {waves} steady-state waves (post-warmup: no jit in the loop)",
+    )
+
+    # anytime channel: partial errors vs their reported bounds
+    h = server.submit(
+        jnp.asarray(rng.standard_normal((img, img, 3)), jnp.float32),
+        slo="exact",
+        anytime=(2, 4),
+    )
+    t0 = time.perf_counter()
+    full = h.result()
+    anytime_us = (time.perf_counter() - t0) * 1e6
+    checks = []
+    for p in h.partials:
+        err = float(jnp.max(jnp.abs(p.logits - full)))
+        checks.append(f"k={p.budget}: err {err:.3e} <= bound {p.bound:.3e}: "
+                      f"{err <= p.bound}")
+    emit(f"serve.anytime_{tag}", anytime_us, "; ".join(checks))
+
+    # per-sample vs per-tensor: outlier batchmate corruption
+    xb = jnp.asarray(rng.standard_normal((4, img, img, 3)), jnp.float32)
+    xb = xb.at[0].multiply(1000.0)
+    errs = {}
+    for mode, per_sample in (("per_tensor", False), ("per_sample", True)):
+        eng = engine.with_policy(ExecutionPolicy(per_sample_scales=per_sample))
+        batch = eng(xb)
+        alone = jnp.concatenate([eng(xb[i : i + 1]) for i in range(4)])
+        errs[mode] = float(jnp.max(jnp.abs(batch[1:] - alone[1:])))
+        emit(
+            f"serve.scale_err_{mode}_{tag}",
+            errs[mode],
+            "max batchmate deviation vs solo serving (one 1000x outlier in batch)",
+        )
+    decoupled = errs["per_sample"] == 0.0 and errs["per_tensor"] > 0.0
+    emit(
+        f"serve.scale_decoupling_{tag}",
+        1.0 if decoupled else 0.0,
+        f"1=decoupled (per_sample err exactly 0, per_tensor {errs['per_tensor']:.3e})",
+    )
+
+
+if __name__ == "__main__":
+    main()

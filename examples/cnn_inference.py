@@ -24,6 +24,12 @@ cycle-model/anytime-bound Pareto frontier — under an accelerator cycle
 target or a predicted output-error target — and print the chosen plan;
 ``--plan-method`` picks the frontier's error model (measured probes vs the
 analytic bound, see ``DslrEngine.budget_curves``).
+
+The final section serves the same network through the request-level runtime
+(``repro.serve.DslrServer``): three requests at different SLO classes, one
+of them asking for anytime (k-digit prefix) partial results with their
+error bounds — the paper's left-to-right property as an API (skip with
+``--no-serve``).
 """
 import argparse
 import dataclasses
@@ -36,6 +42,7 @@ from repro.core import cycle_model as cyc
 from repro.models import common as cm
 from repro.models.engine import compile_cnn
 from repro.models.graph import CnnConfig, ExecutionPolicy, build_graph, graph_spec
+from repro.serve import DslrServer
 
 
 STR_POLICY_FIELDS = ("mode", "recoding")
@@ -94,6 +101,8 @@ def main():
                     help="planner frontier error model (default: analytic "
                          "bound — 'measured' probes every (layer, budget) "
                          "point first, much slower in interpret mode)")
+    ap.add_argument("--no-serve", action="store_true",
+                    help="skip the request-level DslrServer demo section")
     args = ap.parse_args()
 
     cfg = CnnConfig(name=args.net, width=args.width)
@@ -180,6 +189,29 @@ def main():
             f"    {lr.layer.name:4s} K={lr.layer.k} {lr.layer.r}x{lr.layer.c}"
             f" cycles={lr.cycles:>9,} perf={lr.tops:5.2f} TOPS"
         )
+
+    if args.no_serve:
+        return
+    print("\nrequest-level serving (repro.serve.DslrServer):")
+    server = DslrServer(engine_p, buckets=(1, 2, 4))
+    rng = np.random.default_rng(1)
+    imgs = rng.standard_normal((3, args.img, args.img, 3))
+    handles = [
+        server.submit(jnp.asarray(imgs[i], jnp.float32), slo=slo,
+                      anytime=(2, 4) if slo == "exact" else ())
+        for i, slo in enumerate(("fast", "balanced", "exact"))
+    ]
+    for h in handles:  # first .result() flushes the queue (bucketed dispatch)
+        pol = server.policy_for(h.slo)
+        budgets = (",".join(str(k) for _, k in pol.layer_budgets)
+                   if pol.layer_budgets else "full")
+        print(f"  request {h.request_id} slo={h.slo:9s} top1={h.top1} "
+              f"budgets={budgets}")
+    for p in handles[2].partials:
+        print(f"  anytime k={p.budget}: top1={p.top1} "
+              f"|partial-full| bound {p.bound:.3e}")
+    print(f"  {server.stats}, programs={len(server.program_keys)} "
+          f"(one per (bucket, policy))")
 
 
 if __name__ == "__main__":

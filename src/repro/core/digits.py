@@ -168,37 +168,60 @@ def digits_to_float(d: jax.Array, dtype=jnp.float32) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("frac_bits", "n_digits", "recoding"))
+@functools.partial(
+    jax.jit, static_argnames=("frac_bits", "n_digits", "recoding", "per_sample")
+)
 def to_planes(
     x: jax.Array,
     frac_bits: int,
     n_digits: int | None = None,
     recoding: Recoding = "greedy",
+    per_sample: bool = False,
 ) -> Tuple[jax.Array, jax.Array]:
     """Decompose a real tensor into MSDF digit planes.
 
     Returns ``(planes, scale)`` with ``planes`` int8 of shape
     ``(n_digits + 1,) + x.shape`` (axis 0 is MSDF digit index, slot 0 =
-    weight 2**0) and per-tensor ``scale`` such that
+    weight 2**0) and ``scale`` such that
 
         x ~= scale * sum_j planes[j] * 2**-j        (exact after quantize)
+
+    ``per_sample=False`` (default) uses one per-tensor scale (scalar amax).
+    ``per_sample=True`` treats axis 0 of ``x`` as a batch of independent
+    samples and computes one scale per row (``scale`` has shape
+    ``(x.shape[0],)``): sample i's digits depend only on sample i, so an
+    outlier batchmate cannot degrade anyone else's digit resolution and
+    zero-padded rows are exactly zero planes — the decoupling the serving
+    path needs.
 
     This is the bridge from the paper's digit-serial streams to whole-tensor
     MXU work: plane j is what every PE's serial input wire carries at cycle j.
     """
     if n_digits is None:
         n_digits = frac_bits
-    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-30)
-    scale = amax * (1.0 + 2.0**-frac_bits)  # keep strictly inside (-1, 1)
-    xi = quantize(x / scale, frac_bits)
+    if per_sample:
+        axes = tuple(range(1, x.ndim))
+        amax = jnp.maximum(jnp.max(jnp.abs(x), axis=axes), 1e-30)  # (B,)
+        scale = amax * (1.0 + 2.0**-frac_bits)
+        xi = quantize(x / scale.reshape((-1,) + (1,) * (x.ndim - 1)), frac_bits)
+    else:
+        amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-30)
+        scale = amax * (1.0 + 2.0**-frac_bits)  # keep strictly inside (-1, 1)
+        xi = quantize(x / scale, frac_bits)
     d = _RECODERS[recoding](xi, frac_bits, n_digits)
     return jnp.moveaxis(d, -1, 0), scale.astype(x.dtype)
 
 
 def planes_to_value(planes: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """Inverse of ``to_planes``.  ``scale`` is the per-tensor scalar or the
+    per-sample ``(B,)`` vector (broadcast over the sample's trailing axes)."""
     n = planes.shape[0] - 1
     w = jnp.asarray([2.0**-j for j in range(n + 1)], dtype=dtype)
-    return jnp.tensordot(w, planes.astype(dtype), axes=1) * scale.astype(dtype)
+    val = jnp.tensordot(w, planes.astype(dtype), axes=1)
+    s = scale.astype(dtype)
+    if s.ndim:
+        s = s.reshape(s.shape + (1,) * (val.ndim - s.ndim))
+    return val * s
 
 
 def nonzero_digit_fraction(planes: jax.Array) -> jax.Array:

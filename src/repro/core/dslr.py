@@ -39,9 +39,15 @@ class DslrQuant(NamedTuple):
 
 
 def quantize_msdf(
-    x: jax.Array, n_digits: int = 8, recoding: str = "csd"
+    x: jax.Array, n_digits: int = 8, recoding: str = "csd", per_sample: bool = False
 ) -> DslrQuant:
-    planes, scale = dig.to_planes(x, frac_bits=n_digits, n_digits=n_digits, recoding=recoding)
+    """Digit-plane quantization.  ``per_sample=True`` gives every row of
+    axis 0 its own scale (``scale`` shape ``(B,)``) so batchmates cannot
+    couple through a shared amax — see ``digits.to_planes``."""
+    planes, scale = dig.to_planes(
+        x, frac_bits=n_digits, n_digits=n_digits, recoding=recoding,
+        per_sample=per_sample,
+    )
     return DslrQuant(planes, scale)
 
 
@@ -116,7 +122,7 @@ def dslr_linear(
 
 
 def quantize_conv_planes(
-    x: jax.Array, n_digits: int = 8, recoding: str = "csd"
+    x: jax.Array, n_digits: int = 8, recoding: str = "csd", per_sample: bool = False
 ) -> DslrQuant:
     """CSD digit-plane quantization of a conv activation map.
 
@@ -125,8 +131,14 @@ def quantize_conv_planes(
     serial activation wire carries at digit cycle j, for the *whole* feature
     map at once.  Identical digit frame to ``quantize_msdf`` (shared scale),
     so partial-plane sums inherit the anytime property.
+
+    ``per_sample=True`` quantizes each batch row against its own amax
+    (``scale`` shape ``(B,)``): one outlier image no longer coarsens every
+    batchmate's digit grid, and an all-zero padding row quantizes to exactly
+    zero planes — request-level serving composes batches from independent
+    requests, so this is its default.
     """
-    return quantize_msdf(x, n_digits, recoding)
+    return quantize_msdf(x, n_digits, recoding, per_sample=per_sample)
 
 
 def im2col_planes(

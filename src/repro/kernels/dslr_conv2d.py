@@ -41,13 +41,16 @@ def _dslr_conv2d_kernel(
     planes_ref,  # (1, bm, T) int8 — digit plane d of the im2col patches
     w_ref,  # (T, bn) f32 — stationary flattened filter tile
     scale_ref,  # (1, 1) f32 — 2**-d digit weight of this plane
-    *refs,  # [bias_ref (1, bn) f32 if has_bias,] out_ref (bm, bn), acc_ref scratch
+    *refs,  # [row_scale_ref (bm, 1) if has_row_scale,] [bias_ref (1, bn) if
+    #        has_bias,] out_ref (bm, bn), acc_ref scratch
     n_digits: int,
     skip_zero_planes: bool,
+    has_row_scale: bool,
     has_bias: bool,
     apply_relu: bool,
 ):
-    bias_ref = refs[0] if has_bias else None
+    row_scale_ref = refs[0] if has_row_scale else None
+    bias_ref = refs[1] if (has_row_scale and has_bias) else refs[0] if has_bias else None
     out_ref, acc_ref = refs[-2], refs[-1]
     d = pl.program_id(2)
 
@@ -56,7 +59,15 @@ def _dslr_conv2d_kernel(
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     plane = planes_ref[0]
+    # the activation quantization scale reaches the accumulator inside the
+    # per-plane step — folded into ``digit_scales`` (per-tensor: one scalar)
+    # or via ``row_scale`` (per-sample: each output row carries its own
+    # sample's scale, broadcast (bm, 1) x (bm, bn)) — so the flush step is a
+    # pure add/max epilogue in both cases and holds real conv values when
+    # the bias lands
     scale = scale_ref[0, 0]
+    if has_row_scale:
+        scale = scale * row_scale_ref[...]
 
     def _accumulate():
         contrib = jax.lax.dot_general(
@@ -76,8 +87,7 @@ def _dslr_conv2d_kernel(
     def _flush():
         # fused epilogue: bias add + ReLU ride the flush step, so a
         # conv+activation layer is one kernel launch and the pre-activation
-        # tile never round-trips to HBM (requires the caller to fold the
-        # activation quantization scale into ``digit_scales``).
+        # tile never round-trips to HBM
         res = acc_ref[...]
         if has_bias:
             res = res + bias_ref[0]
@@ -99,6 +109,7 @@ def dslr_conv2d_planes_mxu(
     w_flat: jax.Array,  # (T, N) float — flattened (K*K*Cin, Cout) filters
     digit_scales: jax.Array,  # (D,) f32, typically 2**-arange(D)
     bias: jax.Array | None = None,  # (N,) f32 — fused into the flush step
+    row_scale: jax.Array | None = None,  # (M,) f32 — per-row flush scale
     block_m: int = 128,
     block_n: int = 128,
     skip_zero_planes: bool = True,
@@ -112,9 +123,10 @@ def dslr_conv2d_planes_mxu(
     (zero digit rows contribute nothing) and the (M, N) result is sliced
     back out.  MSDF accumulation order (d = 0 first) gives the anytime
     semantics; pass truncated ``planes``/``digit_scales`` for a reduced
-    digit budget.  When fusing the epilogue, fold the activation
-    quantization scale into ``digit_scales`` so the accumulator holds real
-    conv values when the bias lands.
+    digit budget.  When fusing the epilogue, the activation quantization
+    scale must reach the accumulator before the bias: fold a per-tensor
+    scalar into ``digit_scales``, or pass per-sample scales as ``row_scale``
+    (one value per output row, multiplied in at the flush step).
     """
     D, M, T = planes.shape
     T2, N = w_flat.shape
@@ -128,6 +140,7 @@ def dslr_conv2d_planes_mxu(
     if Np != N:
         wf = jnp.pad(wf, ((0, 0), (0, Np - N)))
 
+    has_row_scale = row_scale is not None
     has_bias = bias is not None
     in_specs = [
         pl.BlockSpec((1, bm, T), lambda m, n, d: (d, m, 0)),
@@ -135,6 +148,12 @@ def dslr_conv2d_planes_mxu(
         pl.BlockSpec((1, 1), lambda m, n, d: (d, 0)),
     ]
     operands = [planes, wf, digit_scales.reshape(D, 1).astype(jnp.float32)]
+    if has_row_scale:
+        rs = row_scale.astype(jnp.float32).reshape(M, 1)
+        if Mp != M:
+            rs = jnp.pad(rs, ((0, Mp - M), (0, 0)))
+        in_specs.append(pl.BlockSpec((bm, 1), lambda m, n, d: (m, 0)))
+        operands.append(rs)
     if has_bias:
         b = bias.astype(jnp.float32).reshape(1, N)
         if Np != N:
@@ -147,6 +166,7 @@ def dslr_conv2d_planes_mxu(
             _dslr_conv2d_kernel,
             n_digits=D,
             skip_zero_planes=skip_zero_planes,
+            has_row_scale=has_row_scale,
             has_bias=has_bias,
             apply_relu=apply_relu,
         ),

@@ -23,7 +23,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 def _quantize_kernel(
     x_ref,  # (bm, C) f32 input tile (same tile revisited for every d)
-    inv_scale_ref,  # (1, 1) f32
+    inv_scale_ref,  # (1, 1) f32 per-tensor, or (bm, 1) f32 per-row
     planes_ref,  # (1, bm, C) int8 — digit plane d out
     w_ref,  # VMEM scratch (bm, C) int32 — greedy remainder state
     *,
@@ -34,7 +34,7 @@ def _quantize_kernel(
 
     @pl.when(d == 0)
     def _load():
-        scaled = x_ref[...] * inv_scale_ref[0, 0] * float(2**frac_bits)
+        scaled = x_ref[...] * inv_scale_ref[...] * float(2**frac_bits)
         lim = float(2**frac_bits - 1)
         w_ref[...] = jnp.clip(jnp.round(scaled), -lim, lim).astype(jnp.int32)
 
@@ -65,26 +65,38 @@ def _quantize_kernel(
 )
 def msdf_quantize(
     x: jax.Array,  # (M, C) float
-    scale: jax.Array,  # scalar: planes represent x / scale
+    scale: jax.Array,  # scalar (per-tensor) or (M,) (per-row): planes = x / scale
     frac_bits: int = 8,
     n_digits: int | None = None,
     block_rows: int = 256,
     interpret: bool = False,
 ) -> jax.Array:
-    """Fused greedy-SD digit-plane decomposition: (M, C) -> (D, M, C) int8."""
+    """Fused greedy-SD digit-plane decomposition: (M, C) -> (D, M, C) int8.
+
+    ``scale`` may be a scalar (one shared quantization grid) or a per-row
+    vector of shape (M,) — each row is scaled against its own amax, which is
+    what decouples batchmates when rows belong to different requests.
+    """
     if n_digits is None:
         n_digits = frac_bits + 1
     M, C = x.shape
     bm = min(block_rows, M)
     assert M % bm == 0
 
-    inv = (1.0 / scale).reshape(1, 1).astype(jnp.float32)
+    per_row = jnp.ndim(scale) == 1
+    if per_row:
+        assert scale.shape[0] == M, (scale.shape, M)
+        inv = (1.0 / scale).reshape(M, 1).astype(jnp.float32)
+        scale_spec = pl.BlockSpec((bm, 1), lambda m, d: (m, 0))
+    else:
+        inv = (1.0 / scale).reshape(1, 1).astype(jnp.float32)
+        scale_spec = pl.BlockSpec((1, 1), lambda m, d: (0, 0))
     return pl.pallas_call(
         functools.partial(_quantize_kernel, frac_bits=frac_bits, n_digits=n_digits),
         grid=(M // bm, n_digits),
         in_specs=[
             pl.BlockSpec((bm, C), lambda m, d: (m, 0)),
-            pl.BlockSpec((1, 1), lambda m, d: (0, 0)),
+            scale_spec,
         ],
         out_specs=pl.BlockSpec((1, bm, C), lambda m, d: (d, m, 0)),
         out_shape=jax.ShapeDtypeStruct((n_digits, M, C), jnp.int8),

@@ -83,6 +83,7 @@ def dslr_conv2d_planes(
     digit_budget: int | None = None,
     bias: jax.Array | None = None,
     relu: bool = False,
+    per_sample: bool = False,
     block_m: int = 128,
     block_n: int = 128,
     skip_zero_planes: bool = True,
@@ -101,9 +102,14 @@ def dslr_conv2d_planes(
     ``core.online.conv2d_ref``.
 
     ``bias``/``relu`` fuse the layer epilogue into the kernel's flush step
-    (one launch for conv + bias + activation; the quantization scale is
-    folded into the per-plane digit scales so the bias lands on real conv
+    (one launch for conv + bias + activation; the quantization scale reaches
+    the accumulator before the bias — folded into the per-plane digit scales,
+    or per output row when ``per_sample`` — so the bias lands on real conv
     values).
+
+    ``per_sample`` quantizes every batch row against its own amax: sample
+    i's output is a function of sample i alone, so batch composition (and
+    zero padding) cannot perturb it — the request-level serving contract.
     """
     return dslr_conv2d_planes_flat(
         x,
@@ -116,6 +122,7 @@ def dslr_conv2d_planes(
         digit_budget=digit_budget,
         bias=bias,
         relu=relu,
+        per_sample=per_sample,
         block_m=block_m,
         block_n=block_n,
         skip_zero_planes=skip_zero_planes,
@@ -134,6 +141,7 @@ def dslr_conv2d_planes_flat(
     digit_budget: int | None = None,
     bias: jax.Array | None = None,
     relu: bool = False,
+    per_sample: bool = False,
     block_m: int = 128,
     block_n: int = 128,
     skip_zero_planes: bool = True,
@@ -144,7 +152,7 @@ def dslr_conv2d_planes_flat(
     flattening happens once at build time, not per forward pass."""
     if interpret is None:
         interpret = _on_cpu()
-    q = core_dslr.quantize_conv_planes(x, n_digits, recoding)
+    q = core_dslr.quantize_conv_planes(x, n_digits, recoding, per_sample=per_sample)
     patches = core_dslr.im2col_planes(q.planes, kernel_size, stride, padding)
     if digit_budget is not None:
         if not 1 <= digit_budget <= patches.shape[0]:
@@ -156,24 +164,33 @@ def dslr_conv2d_planes_flat(
     planes = patches.reshape(D, B * Ho * Wo, T)
     fused = bias is not None or relu
     scales = core_dslr.digit_scales(D)
-    if fused:
+    row_scale = None
+    if fused and not per_sample:
         # fold the activation scale into the digit scales: the accumulator
         # then holds real conv values, so bias+ReLU fuse into the flush
         scales = q.scale * scales
+    elif fused:
+        # per-sample: one scale per output row (every row of a sample's
+        # Ho*Wo pixel block shares its sample's scale), multiplied into the
+        # accumulator at the flush step before the bias lands
+        row_scale = jnp.repeat(q.scale.astype(jnp.float32), Ho * Wo)
     out = _dc.dslr_conv2d_planes_mxu(
         planes,
         w_flat,
         scales,
         bias=bias,
+        row_scale=row_scale,
         block_m=block_m,
         block_n=block_n,
         skip_zero_planes=skip_zero_planes,
         apply_relu=relu,
         interpret=interpret,
     )
+    out = out.reshape(B, Ho, Wo, w_flat.shape[1])
     if not fused:
-        out = out * q.scale
-    return out.reshape(B, Ho, Wo, w_flat.shape[1])
+        s = q.scale.reshape(-1, 1, 1, 1) if per_sample else q.scale
+        out = out * s
+    return out
 
 
 def conv_anytime_error_bound(
@@ -194,11 +211,17 @@ def msdf_quantize(
     block_rows: int = 256,
     interpret: bool | None = None,
 ) -> jax.Array:
+    """``scale`` is a scalar (per-tensor grid) or an (M,) per-row vector —
+    the per-request quantization grids the serving path uses."""
     if interpret is None:
         interpret = _on_cpu()
     M = x.shape[0]
     br = min(block_rows, _round_up(M, 8))
     Mp = _round_up(M, br)
+    if jnp.ndim(scale) == 1 and Mp != M:
+        # pad rows carry scale 1 (not 0: 1/0 would turn the padded zero rows
+        # into NaNs); they are sliced off below either way
+        scale = jnp.concatenate([scale, jnp.ones((Mp - M,), scale.dtype)])
     planes = _mq.msdf_quantize(
         _pad_axis(x, Mp, 0),
         scale,

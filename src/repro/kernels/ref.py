@@ -18,6 +18,7 @@ def dslr_conv2d_planes_ref(
     digit_budget: int | None = None,
     bias: jax.Array | None = None,
     relu: bool = False,
+    per_sample: bool = False,
 ) -> jax.Array:
     """Pure-jnp oracle for the digit-plane conv kernel (kernels/dslr_conv2d.py).
 
@@ -25,11 +26,13 @@ def dslr_conv2d_planes_ref(
     planes in the same MSDF order (scan over d, f32 `acc += 2**-d * plane @ W`)
     so the Pallas kernel must match bit-for-bit in interpret mode.  With
     ``bias``/``relu`` it mirrors the fused epilogue: the quantization scale
-    folds into the digit scales, then bias add + ReLU on the accumulator.
+    reaches the accumulator before the bias — folded into the digit scales
+    (per-tensor) or multiplied per output row (``per_sample``) — then bias
+    add + ReLU on the accumulator.
     """
     B, H, W, Cin = x.shape
     K = w.shape[0]
-    q = core_dslr.quantize_conv_planes(x, n_digits, recoding)
+    q = core_dslr.quantize_conv_planes(x, n_digits, recoding, per_sample=per_sample)
     patches = core_dslr.im2col_planes(q.planes, K, stride, padding)
     if digit_budget is not None:
         patches = patches[:digit_budget]
@@ -38,17 +41,26 @@ def dslr_conv2d_planes_ref(
     w_flat = core_dslr.flatten_conv_weights(w).astype(jnp.float32)
     fused = bias is not None or relu
     scales = core_dslr.digit_scales(D)
-    if fused:
+    if fused and not per_sample:
         scales = q.scale * scales
+    row_scale = None
+    if fused and per_sample:
+        # mirror the kernel: the per-row sample scale multiplies each plane's
+        # digit scale inside the accumulation step (not the accumulator at
+        # the end), so the flush epilogue is a pure add on both sides
+        row_scale = jnp.repeat(q.scale.astype(jnp.float32), Ho * Wo)[:, None]
 
     def body(acc, jp):
         s, plane = jp
+        if row_scale is not None:
+            s = s * row_scale
         return acc + s * (plane.astype(jnp.float32) @ w_flat), None
 
     zeros = jnp.zeros((B * Ho * Wo, w_flat.shape[1]), jnp.float32)
     acc, _ = jax.lax.scan(body, zeros, (scales, planes))
     if not fused:
-        acc = acc * q.scale
+        s = q.scale.astype(jnp.float32)
+        acc = acc * (jnp.repeat(s, Ho * Wo)[:, None] if per_sample else s)
     if bias is not None:
         acc = acc + bias.astype(jnp.float32)
     if relu:
@@ -69,11 +81,15 @@ def dslr_matmul_planes_ref(
 def msdf_quantize_ref(
     x: jax.Array, scale: jax.Array, frac_bits: int, n_digits: int | None = None
 ) -> jax.Array:
+    """``scale``: scalar, or (M,) per-row (one quantization grid per row)."""
     if n_digits is None:
         n_digits = frac_bits + 1
     # multiply by the reciprocal exactly like the kernel does, so round-half
     # ties fall identically
-    xi = dig.quantize(x * (1.0 / scale), frac_bits)
+    inv = 1.0 / scale
+    if jnp.ndim(inv) == 1:
+        inv = inv[:, None]
+    xi = dig.quantize(x * inv, frac_bits)
     d = dig.sd_from_fixed(xi, frac_bits, frac_bits)  # (..., frac_bits + 1)
     return jnp.moveaxis(d[..., :n_digits], -1, 0)
 

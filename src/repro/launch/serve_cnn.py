@@ -1,19 +1,24 @@
-"""Batched CNN serving driver over the compiled DSLR engine.
+"""Request-level CNN serving driver over ``repro.serve.DslrServer``.
 
     PYTHONPATH=src python -m repro.launch.serve_cnn --net resnet18 \
-        --width 0.05 --batch 8 --requests 4 [--budget 4] [--per-layer-budgets ...] \
-        [--plan-latency CYCLES | --plan-error BOUND]
+        --width 0.05 --requests 12 [--slo balanced | --mixed-slo] \
+        [--buckets 1,2,4,8] [--wave 5] [--anytime 2,4] \
+        [--budget 4 | --per-layer-budgets ... | --plan-latency CYCLES | --plan-error BOUND]
 
-The CNN analogue of launch/serve.py's transformer loop: one engine is
-compiled per policy (weights flattened/stationary once), then every request
-batch runs through ``engine.serve`` — the batch axis mesh-sharded across the
-data axis (rules from launch/mesh.py), the compiled program reused across
-batches.  Per-batch latency percentiles are reported together with the
-per-layer anytime error bounds of the serving policy, i.e. the
-accuracy/latency trade-off the digit budget buys (the paper's runtime
-precision scaling as a serving knob).  ``--plan-latency``/``--plan-error``
-hand that knob to the budget planner (core/planner.py): budgets are solved
-on the cycle-model/anytime-bound frontier and the chosen plan is printed.
+The CNN analogue of launch/serve.py's transformer loop, rewritten over the
+request-level runtime: requests arrive one image at a time (in waves of
+``--wave``), the server forms micro-batches by size bucket with one compiled
+program per (bucket, policy), per-sample quantization scales keep every
+request's result independent of its batchmates, and SLO classes map to
+planner-solved per-layer digit budgets.  ``--anytime`` additionally asks
+each request for k-digit partial results (the MSDF prefix budgets) and
+prints their error bounds.
+
+Explicit budgets (``--budget`` / ``--per-layer-budgets``) or a planner
+target (``--plan-latency`` / ``--plan-error``) install a single ``custom``
+tier instead of the SLO classes.  All (bucket, policy) programs are warmed
+up before the timed waves, so the latency percentiles exclude jit
+trace/compile cost.
 """
 from __future__ import annotations
 
@@ -27,19 +32,31 @@ import jax.numpy as jnp
 from repro.models import common as cm
 from repro.models.engine import compile_cnn
 from repro.models.graph import CnnConfig, ExecutionPolicy, build_graph, graph_spec
+from repro.serve import DslrServer
 
 
-def main() -> None:
+def parse_args(argv=None) -> argparse.Namespace:
     ap = argparse.ArgumentParser()
     ap.add_argument("--net", default="resnet18", choices=("alexnet", "vgg16", "resnet18"))
     ap.add_argument("--width", type=float, default=0.05)
     ap.add_argument("--img", type=int, default=32)
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=12, help="total request count")
+    ap.add_argument("--wave", type=int, default=5,
+                    help="requests arriving between flushes (micro-batch source)")
+    ap.add_argument("--buckets", default="1,2,4,8",
+                    help="comma-separated batch-size buckets")
+    ap.add_argument("--slo", default="balanced",
+                    help="SLO class for all requests (fast|balanced|exact)")
+    ap.add_argument("--mixed-slo", action="store_true",
+                    help="round-robin fast/balanced/exact traffic")
+    ap.add_argument("--anytime", default="",
+                    help="comma-separated k-digit partial budgets per request")
+    ap.add_argument("--per-tensor-scales", action="store_true",
+                    help="disable per-sample quantization scales (couples batchmates)")
     ap.add_argument("--budget", type=int, default=None,
-                    help="uniform digit budget (planes)")
+                    help="uniform digit budget (planes) — installs a 'custom' tier")
     ap.add_argument("--per-layer-budgets", default="",
-                    help="comma-separated per-conv-layer budgets")
+                    help="comma-separated per-conv-layer budgets — 'custom' tier")
     ap.add_argument("--plan-latency", type=int, default=None, metavar="CYCLES",
                     help="solve per-layer budgets for an accelerator cycle target")
     ap.add_argument("--plan-error", type=float, default=None, metavar="BOUND",
@@ -49,74 +66,131 @@ def main() -> None:
                     help="planner frontier error model (default: analytic "
                          "bound — 'measured' probes every layer first)")
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
+    # validate flag combinations BEFORE any engine is compiled: a conflicting
+    # invocation must fail in milliseconds, not after a full compile
+    if args.requests < 1 or args.wave < 1:
+        ap.error("--requests and --wave must be >= 1")
+    planning = args.plan_latency is not None or args.plan_error is not None
+    if planning and (args.per_layer_budgets or args.budget):
+        ap.error("--plan-* and explicit budgets (--budget/--per-layer-budgets) "
+                 "are mutually exclusive")
+    if args.budget and args.per_layer_budgets:
+        ap.error("--budget and --per-layer-budgets are mutually exclusive")
+    return args
+
+
+def main() -> None:
+    args = parse_args()
+    planning = args.plan_latency is not None or args.plan_error is not None
+    custom = planning or bool(args.per_layer_budgets) or args.budget is not None
 
     cfg = CnnConfig(name=args.net, width=args.width)
     graph = build_graph(cfg)
     params = cm.init_params(graph_spec(cfg), jax.random.PRNGKey(args.seed))
-    policy = ExecutionPolicy(digit_budget=args.budget)
-    if args.per_layer_budgets:
-        budgets = [int(b) for b in args.per_layer_budgets.split(",")]
-        policy = policy.with_layer_budgets(graph, budgets)
 
     t0 = time.perf_counter()
-    engine = compile_cnn(cfg, params, policy)
-    if args.plan_latency is not None or args.plan_error is not None:
-        if args.per_layer_budgets or args.budget:
-            raise SystemExit("--plan-* and explicit budgets are mutually exclusive")
-        calib = None
-        if args.plan_method != "bound":
-            calib = jnp.asarray(
-                np.random.default_rng(args.seed).standard_normal(
-                    (1, args.img, args.img, 3)
-                ),
-                jnp.float32,
-            )
-        try:
-            plan = engine.plan(
-                max_cycles=args.plan_latency, max_error=args.plan_error,
-                x=calib, method=args.plan_method,
-            )
-        except ValueError as e:
-            raise SystemExit(f"--plan-*: {e}")
-        print(plan.describe(), flush=True)
-        engine = compile_cnn(cfg, params, policy.with_plan(plan))
+    engine = compile_cnn(cfg, params, ExecutionPolicy())
+    policies = {}
+    if custom:
+        policy = ExecutionPolicy(digit_budget=args.budget)
+        if args.per_layer_budgets:
+            budgets = [int(b) for b in args.per_layer_budgets.split(",")]
+            policy = policy.with_layer_budgets(graph, budgets)
+        if planning:
+            calib = None
+            if args.plan_method != "bound":
+                calib = jnp.asarray(
+                    np.random.default_rng(args.seed).standard_normal(
+                        (1, args.img, args.img, 3)
+                    ),
+                    jnp.float32,
+                )
+            try:
+                plan = engine.plan(
+                    max_cycles=args.plan_latency, max_error=args.plan_error,
+                    x=calib, method=args.plan_method,
+                )
+            except ValueError as e:
+                raise SystemExit(f"--plan-*: {e}")
+            print(plan.describe(), flush=True)
+            policy = policy.with_plan(plan)
+        policies["custom"] = policy
+
+    buckets = tuple(int(b) for b in args.buckets.split(","))
+    server = DslrServer(
+        engine,
+        buckets=buckets,
+        per_sample_scales=not args.per_tensor_scales,
+        policies=policies,
+    )
     build_ms = (time.perf_counter() - t0) * 1e3
 
-    rng = np.random.default_rng(args.seed)
-    warm = jnp.asarray(rng.standard_normal((args.batch, args.img, args.img, 3)), jnp.float32)
-    jax.block_until_ready(engine.serve(warm))  # compile once
+    if custom:
+        tiers = ["custom"]
+    elif args.mixed_slo:
+        tiers = sorted(server.slos)
+    else:
+        tiers = [args.slo]
+    anytime = tuple(int(k) for k in args.anytime.split(",")) if args.anytime else ()
 
-    lat = []
-    for _ in range(args.requests):
-        xb = jnp.asarray(
-            rng.standard_normal((args.batch, args.img, args.img, 3)), jnp.float32
-        )
+    # warm every (bucket, tier) program — including the anytime prefix
+    # programs requests will hit — so the percentiles below measure
+    # steady-state dispatch, not jit trace/compile
+    t0 = time.perf_counter()
+    warmed = server.warmup((args.img, args.img, 3), slos=tiers, anytime=anytime)
+    warm_ms = (time.perf_counter() - t0) * 1e3
+
+    rng = np.random.default_rng(args.seed)
+    lat: list[float] = []
+    handles = []
+    sent = 0
+    while sent < args.requests:
+        wave = min(args.wave, args.requests - sent)
+        imgs = rng.standard_normal((wave, args.img, args.img, 3))
         t0 = time.perf_counter()
-        logits = engine.serve(xb)
-        jax.block_until_ready(logits)
-        lat.append(time.perf_counter() - t0)
+        wave_handles = [
+            server.submit(
+                jnp.asarray(imgs[i], jnp.float32),
+                slo=tiers[(sent + i) % len(tiers)],
+                anytime=anytime,
+            )
+            for i in range(wave)
+        ]
+        server.flush()
+        jax.block_until_ready([h.result() for h in wave_handles])
+        dt = time.perf_counter() - t0
+        lat.extend([dt] * wave)  # every request in the wave saw this latency
+        handles.extend(wave_handles)
+        sent += wave
 
     lat_ms = np.array(lat) * 1e3
     n_dev = len(jax.devices())
+    total_s = float(np.sum(lat_ms[:: args.wave])) / 1e3 if args.wave else 1e-9
     print(
-        f"[serve_cnn] {args.net} width={args.width} batch={args.batch} on {n_dev} "
-        f"device(s): build {build_ms:.1f} ms, p50 {np.percentile(lat_ms, 50):.1f} ms "
-        f"p95 {np.percentile(lat_ms, 95):.1f} ms, "
-        f"throughput {args.batch * len(lat) / max(sum(lat), 1e-9):.1f} img/s",
+        f"[serve_cnn] {args.net} width={args.width} requests={args.requests} "
+        f"wave={args.wave} buckets={buckets} on {n_dev} device(s): "
+        f"build {build_ms:.1f} ms, warmup {warmed} programs {warm_ms:.1f} ms, "
+        f"p50 {np.percentile(lat_ms, 50):.1f} ms p99 {np.percentile(lat_ms, 99):.1f} ms, "
+        f"throughput {args.requests / max(total_s, 1e-9):.1f} img/s",
         flush=True,
     )
-    bounds = engine.error_bounds()
-    worst = max(bounds, key=bounds.get)
-    if engine.policy.layer_budgets:
-        shown = ",".join(str(k) for _, k in engine.policy.layer_budgets)
-    else:
-        shown = str(args.budget or "full")
-    print(
-        f"[serve_cnn] policy: mode={engine.policy.mode} budgets={shown}; "
-        f"worst per-layer anytime bound {worst}={bounds[worst]:.3e} "
-        f"(per unit activation scale)"
-    )
+    print(f"[serve_cnn] stats: {server.stats} programs={len(server.program_keys)}")
+    for tier in tiers:
+        pol = server.policy_for(tier)
+        if pol.layer_budgets:
+            shown = ",".join(str(k) for _, k in pol.layer_budgets)
+        else:
+            shown = str(pol.digit_budget or "full")
+        print(f"[serve_cnn] tier {tier!r}: budgets={shown} "
+              f"per_sample_scales={pol.per_sample_scales}")
+    if anytime:
+        h = handles[0]
+        parts = ", ".join(
+            f"k={p.budget}: top1={p.top1} bound={p.bound:.3e}" for p in h.partials
+        )
+        print(f"[serve_cnn] anytime partials of request 0 ({h.slo}): {parts}; "
+              f"final top1={h.top1}")
 
 
 if __name__ == "__main__":

@@ -22,6 +22,7 @@ They produce bit-identical results (asserted in tests/test_engine.py).
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 
@@ -49,6 +50,16 @@ def _policy_for(cfg: CnnConfig, mode: str, digit_budget: int | None) -> Executio
     return ExecutionPolicy(mode=mode, n_digits=cfg.frac_bits, digit_budget=digit_budget)
 
 
+def _warn_deprecated(name: str) -> None:
+    warnings.warn(
+        f"{name} (the string mode= shim) is deprecated; build an "
+        f"ExecutionPolicy and use compile_cnn (models/engine.py) — same "
+        f"results, weights flattened once, jit cached per policy",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
 def cnn_apply(
     cfg: CnnConfig,
     params,
@@ -62,11 +73,17 @@ def cnn_apply(
     applies to ``mode='dslr_planes'`` only (uniform anytime budget; the
     engine additionally supports per-layer budgets).
     """
+    _warn_deprecated("cnn_apply")
     policy = _policy_for(cfg, mode, digit_budget)
     return execute_graph(build_graph(cfg), params, x, policy)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "mode", "digit_budget"))
+def _infer_cnn_jit(cfg, params, x, mode, digit_budget):
+    policy = _policy_for(cfg, mode, digit_budget)
+    return execute_graph(build_graph(cfg), params, x, policy)
+
+
 def infer_cnn(
     cfg: CnnConfig,
     params,
@@ -77,4 +94,5 @@ def infer_cnn(
     """DEPRECATED batched jit entrypoint (one program per (cfg, mode,
     digit_budget) triple) — use ``compile_cnn(cfg, params, policy)`` which
     additionally precomputes the stationary weights once at build time."""
-    return cnn_apply(cfg, params, x, mode=mode, digit_budget=digit_budget)
+    _warn_deprecated("infer_cnn")  # eager, so it fires on cached calls too
+    return _infer_cnn_jit(cfg, params, x, mode, digit_budget)

@@ -8,8 +8,13 @@ build time, and returns a ``DslrEngine``:
                                (graph, policy, shape) — policies are frozen
                                hashable dataclasses, so the cache is shared
                                across engines with the same policy),
-  * ``engine.serve(x_batch)`` — the same program with the batch mesh-sharded
-                               across devices (data axis from launch/mesh.py),
+  * ``engine.serve(x_batch)`` — batch-level thin shim: the same program with
+                               the batch mesh-sharded across devices (data
+                               axis from launch/mesh.py); request-level
+                               serving lives in ``repro.serve.DslrServer``,
+  * ``engine.with_policy(p)`` — derived engine sharing this engine's
+                               flattened weights (how the server builds one
+                               engine per SLO tier from a single build),
   * ``engine.error_bounds()`` — per-conv-layer anytime error bounds at the
                                policy's (per-layer) digit budgets.
 
@@ -26,6 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
@@ -97,6 +103,7 @@ def _conv_node(
             digit_budget=policy.budget_for(node.name),
             bias=b if fuse else None,
             relu=fuse and (epilogue is not None and epilogue.relu),
+            per_sample=policy.per_sample_scales,
             block_m=policy.block_m,
             block_n=policy.block_n,
             skip_zero_planes=policy.skip_zero_planes,
@@ -215,7 +222,8 @@ class DslrEngine:
     jit-cached execution under one ``ExecutionPolicy``."""
 
     def __init__(self, cfg: CnnConfig, params, policy: ExecutionPolicy,
-                 graph: Optional[LayerGraph] = None):
+                 graph: Optional[LayerGraph] = None,
+                 weights: Optional[ConvWeights] = None):
         self.cfg = cfg
         self.policy = policy
         self.graph = build_graph(cfg) if graph is None else graph
@@ -224,15 +232,26 @@ class DslrEngine:
         for name, _ in policy.layer_budgets or ():
             if name not in conv_names:
                 raise ValueError(f"budget for unknown conv layer {name!r}")
-        # build-time precompute: flatten/transpose every stationary weight
-        # exactly once — forward passes only quantize the activations
-        self._weights: ConvWeights = {}
-        for node in self.graph.conv_nodes:
-            w = params[node.param]["w"]
-            self._weights[node.name] = (
-                core_dslr.flatten_conv_weights(w),
-                params[node.param]["b"],
-            )
+        # raw tree kept BY REFERENCE for with_policy derivations (including
+        # cross-mode ones, which need the unflattened conv 'w' leaves): no
+        # arrays are copied, so this costs nothing while the caller also
+        # holds params — the pruned _exec_params below is what keeps the raw
+        # leaves out of the jit call signature
+        self._params = params
+        if weights is not None:
+            # derived engine (with_policy): share the already-flattened
+            # stationary weights, re-flatten nothing
+            self._weights = weights
+        else:
+            # build-time precompute: flatten/transpose every stationary weight
+            # exactly once — forward passes only quantize the activations
+            self._weights = {}
+            for node in self.graph.conv_nodes:
+                w = params[node.param]["w"]
+                self._weights[node.name] = (
+                    core_dslr.flatten_conv_weights(w),
+                    params[node.param]["b"],
+                )
         if policy.mode == "dslr_planes":
             # the compiled program reads only the flattened copies: drop the
             # raw conv 'w' leaves so the weights are not held (and hashed into
@@ -256,12 +275,25 @@ class DslrEngine:
             self.graph, self.policy, self._exec_params, self._exec_weights, x
         )
 
-    def serve(self, x_batch: jax.Array) -> jax.Array:
-        """Batch-sharded inference: the batch axis spreads across the data
-        axis of a device mesh (rules from launch/mesh.py), everything else is
-        replicated — the CNN serving story's single-program entrypoint.
-        Ragged batches are zero-padded to a device multiple and sliced back
-        (zero rows cannot raise the per-tensor quantization scale)."""
+    def with_policy(self, policy: ExecutionPolicy) -> "DslrEngine":
+        """Derived engine under a different policy, sharing this engine's
+        already-flattened stationary weights (re-flattens nothing) — how the
+        request-level server (serve/) materializes one engine per SLO class
+        from a single weight build."""
+        return DslrEngine(
+            self.cfg, self._params, policy, graph=self.graph, weights=self._weights
+        )
+
+    def serve(self, x_batch: jax.Array, pad_to: Optional[int] = None) -> jax.Array:
+        """Batch-sharded inference — kept as a thin batch-level shim over
+        ``__call__`` (request-level serving lives in ``repro.serve``).  The
+        batch axis spreads across the data axis of a device mesh (rules from
+        launch/mesh.py), everything else is replicated.  Ragged batches are
+        zero-padded up to ``pad_to`` (default: the device count) rounded to a
+        device multiple, then sliced back: zero rows cannot raise the
+        per-tensor quantization scale, and under per-sample scales every row
+        quantizes independently, so the padding is exact by construction
+        either way."""
         if self._serve_sharding is None:
             from repro.launch import mesh as mesh_lib
 
@@ -270,8 +302,9 @@ class DslrEngine:
             batch_axis = mesh_lib.rules_for(mesh)["batch"]
             self._serve_sharding = (len(devs), NamedSharding(mesh, P(batch_axis)))
         n_dev, sharding = self._serve_sharding
+        mult = n_dev if pad_to is None else math.lcm(int(pad_to), n_dev)
         B = x_batch.shape[0]
-        Bp = -(-B // n_dev) * n_dev
+        Bp = -(-B // mult) * mult
         if Bp != B:
             x_batch = jnp.pad(x_batch, ((0, Bp - B), (0, 0), (0, 0), (0, 0)))
         out = self(jax.device_put(x_batch, sharding))

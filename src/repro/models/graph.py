@@ -134,12 +134,22 @@ class ExecutionPolicy:
     block_m: int = 128
     block_n: int = 128
     skip_zero_planes: bool = True
+    # per-batch-row activation quantization scales: each sample's digit grid
+    # depends on that sample alone, so batch composition (an outlier
+    # batchmate, bucket zero-padding) cannot perturb a sample's output —
+    # the request-level serving contract (serve/).
+    per_sample_scales: bool = False
 
     def __post_init__(self):
         if self.mode not in MODES:
             raise ValueError(f"mode={self.mode!r} not in {MODES}")
         if self.recoding not in RECODINGS:
             raise ValueError(f"recoding={self.recoding!r} not in {RECODINGS}")
+        if self.per_sample_scales and self.mode != "dslr_planes":
+            raise ValueError(
+                f"per_sample_scales only applies to mode='dslr_planes', "
+                f"got {self.mode!r}"
+            )
         if self.digit_budget is not None:
             if self.mode != "dslr_planes":
                 raise ValueError(

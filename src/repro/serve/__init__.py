@@ -1,0 +1,11 @@
+"""Request-level serving for the DSLR-CNN engine.
+
+``DslrServer`` turns the batch-level ``DslrEngine`` into a request-native
+runtime: Future-style ``submit``, size-bucket micro-batching with one
+compiled program per (bucket, policy), planner-solved SLO classes, exact
+per-sample quantization scales, and the MSDF anytime channel (k-digit
+partial results with sound error bounds).  See serve/server.py for the
+lifecycle and docs/ARCHITECTURE.md#the-serving-runtime for the diagram.
+"""
+from .server import AnytimeResult, DslrServer, ResultHandle  # noqa: F401
+from .slo import DEFAULT_SLOS, SloClass, resolve_policy, slo_table  # noqa: F401

@@ -1,0 +1,343 @@
+"""Request-level serving runtime over the compiled DSLR engine.
+
+``DslrEngine.serve`` is batch-level: the caller owns batching, and a
+per-tensor activation scale couples whoever lands in the same batch.
+``DslrServer`` is request-native:
+
+  * ``submit(image, slo=..., anytime=...)`` returns a Future-style
+    ``ResultHandle`` immediately; nothing runs until a flush.
+  * The queue forms micro-batches by **size bucket**: pending requests of
+    one SLO class are chunked, each chunk zero-padded up to the smallest
+    configured bucket that fits, and dispatched through one jit program per
+    ``(bucket, policy)`` — a mixed stream of ragged request counts touches
+    only ``len(buckets) x len(slos)`` compiled programs, ever.
+  * Per-sample quantization scales (``ExecutionPolicy.per_sample_scales``,
+    on by default here) make that composition *exact*: each request is
+    quantized against its own amax, so its logits are bitwise identical to
+    serving it alone — bucket padding rows and outlier batchmates cannot
+    perturb it.
+  * SLO classes resolve to planner-solved per-layer digit budgets
+    (serve/slo.py) — precision/latency as a per-request knob.
+  * The **anytime channel**: a request may ask for ``k``-digit partial
+    results.  MSDF evaluation makes a ``k``-plane prefix a valid
+    bounded-error answer, so the server runs the cheap prefix-budget
+    programs and reports, per partial, the top-1 class and a sound error
+    bound versus the request's full-budget logits (per-layer anytime tail
+    bounds at calibrated activation scales, amplified through the
+    downstream Lipschitz gains — conservative, see docs/NUMERICS.md).
+
+Everything is synchronous and deterministic: ``flush()`` drains the queue in
+arrival order; ``handle.result()`` flushes on demand.  The batch-level
+``engine.serve`` remains as a thin shim for callers that already hold a
+batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, NamedTuple, Optional, Sequence, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.engine import DslrEngine
+from repro.models.graph import ExecutionPolicy
+
+from .slo import DEFAULT_SLOS, SloClass, resolve_policy, slo_table
+
+
+class AnytimeResult(NamedTuple):
+    """One ``k``-digit partial answer: the prefix-budget logits, their top-1
+    class, and a conservative bound on ``max|partial - full|`` (worst-case
+    Lipschitz composition of the per-layer anytime tails at the dispatch
+    batch's calibrated activation scales — see ``DslrServer._anytime_bounds``
+    for the derivation and its one approximation)."""
+
+    budget: int
+    logits: jax.Array  # (num_classes,)
+    top1: int
+    bound: float
+
+
+class ResultHandle:
+    """Future-style handle for one submitted request.  ``result()`` flushes
+    the server's queue if the request is still pending."""
+
+    def __init__(self, server: "DslrServer", request_id: int, slo: str):
+        self._server = server
+        self.request_id = request_id
+        self.slo = slo
+        self._logits: Optional[jax.Array] = None
+        self._partials: Tuple[AnytimeResult, ...] = ()
+
+    @property
+    def done(self) -> bool:
+        return self._logits is not None
+
+    def result(self) -> jax.Array:
+        """The request's logits (num_classes,) under its SLO's policy."""
+        if not self.done:
+            self._server.flush()
+        assert self._logits is not None
+        return self._logits
+
+    @property
+    def top1(self) -> int:
+        return int(jnp.argmax(self.result()))
+
+    @property
+    def partials(self) -> Tuple[AnytimeResult, ...]:
+        """The anytime partial results (one per requested budget, ascending),
+        available once the request has been dispatched."""
+        self.result()
+        return self._partials
+
+
+@dataclasses.dataclass
+class _Request:
+    image: jax.Array  # (H, W, C)
+    slo: str
+    anytime: Tuple[int, ...]
+    handle: ResultHandle
+
+
+class DslrServer:
+    """Request-level serving runtime: micro-batching by size bucket, one
+    compiled program per (bucket, policy), SLO classes solved by the budget
+    planner, per-sample quantization scales, anytime partial results."""
+
+    def __init__(
+        self,
+        engine: DslrEngine,
+        slos: Sequence[SloClass] = DEFAULT_SLOS,
+        buckets: Sequence[int] = (1, 2, 4, 8),
+        per_sample_scales: bool = True,
+        policies: Optional[Dict[str, ExecutionPolicy]] = None,
+    ):
+        """``policies`` adds named tiers with *explicit* ExecutionPolicies
+        (e.g. hand-set or externally-planned budgets) next to the
+        planner-solved ``slos``; ``per_sample_scales`` is applied to them
+        like to everything else."""
+        if engine.policy.mode != "dslr_planes":
+            raise ValueError(
+                f"DslrServer needs a dslr_planes-mode engine, got {engine.policy.mode!r}"
+            )
+        buckets = tuple(int(b) for b in buckets)
+        if not buckets or list(buckets) != sorted(set(buckets)) or buckets[0] < 1:
+            raise ValueError(f"buckets must be ascending positive ints, got {buckets}")
+        self.buckets = buckets
+        self.slos = slo_table(slos)
+        self._base_policy = dataclasses.replace(
+            engine.policy, per_sample_scales=per_sample_scales
+        )
+        self._donor = engine  # weight donor: with_policy shares flat weights
+        self._engines: Dict[ExecutionPolicy, DslrEngine] = {}
+        self._slo_policies: Dict[str, ExecutionPolicy] = {}
+        for name, pol in (policies or {}).items():
+            if name in self.slos:
+                raise ValueError(f"explicit policy {name!r} shadows an SLO class")
+            self._slo_policies[name] = dataclasses.replace(
+                pol, per_sample_scales=per_sample_scales
+            )
+        self._queue: list[_Request] = []
+        self._next_id = 0
+        self._gains: Optional[Dict[str, float]] = None
+        self._row_l1: Optional[Dict[str, float]] = None
+        # every (bucket, policy) this server has dispatched — the program
+        # cache keyspace (jax's jit cache holds the programs themselves)
+        self.program_keys: Set[Tuple[int, ExecutionPolicy]] = set()
+        self.stats = {"requests": 0, "dispatches": 0, "padded_rows": 0}
+
+    # -- policy / engine resolution -----------------------------------------
+
+    def policy_for(self, slo: str) -> ExecutionPolicy:
+        """The solved ExecutionPolicy of an SLO class (planner budgets for
+        planned tiers, full precision for exact tiers)."""
+        if slo not in self._slo_policies:
+            if slo not in self.slos:
+                have = sorted(set(self.slos) | set(self._slo_policies))
+                raise ValueError(f"unknown SLO class {slo!r} (have {have})")
+            self._slo_policies[slo] = resolve_policy(
+                self._donor, self.slos[slo], self._base_policy
+            )
+        return self._slo_policies[slo]
+
+    def _engine_for(self, policy: ExecutionPolicy) -> DslrEngine:
+        if policy not in self._engines:
+            self._engines[policy] = self._donor.with_policy(policy)
+        return self._engines[policy]
+
+    def _prefix_policy(self, policy: ExecutionPolicy, k: int) -> ExecutionPolicy:
+        """The ``k``-plane prefix of a policy's budgets (the anytime
+        channel's program): every layer budget clips to ``min(k, budget)``.
+        Returns ``policy`` itself when the prefix changes nothing, so the
+        partial reuses the full program (and is exactly the full result)."""
+        if policy.layer_budgets is not None:
+            pairs = tuple((n, min(k, b)) for n, b in policy.layer_budgets)
+            if pairs == policy.layer_budgets:
+                return policy
+            return dataclasses.replace(policy, layer_budgets=pairs)
+        full = policy.digit_budget or policy.n_planes
+        if k >= full:
+            return policy
+        return dataclasses.replace(policy, digit_budget=k, layer_budgets=None)
+
+    # -- submission ----------------------------------------------------------
+
+    def submit(
+        self,
+        image: jax.Array,
+        slo: str = "balanced",
+        anytime: Sequence[int] = (),
+    ) -> ResultHandle:
+        """Enqueue one request.  ``image``: (H, W, C) float.  ``anytime``
+        asks for k-digit partial results (MSDF prefix budgets) alongside the
+        full answer.  Returns immediately; ``handle.result()`` (or an
+        explicit ``flush()``) dispatches the queue."""
+        image = jnp.asarray(image, jnp.float32)
+        if image.ndim != 3:
+            raise ValueError(f"image must be (H, W, C), got shape {image.shape}")
+        policy = self.policy_for(slo)  # validates the SLO name eagerly
+        anytime = tuple(sorted(int(k) for k in anytime))
+        for k in anytime:
+            if not 1 <= k <= policy.n_planes:
+                raise ValueError(
+                    f"anytime budget {k} outside [1, {policy.n_planes}]"
+                )
+        handle = ResultHandle(self, self._next_id, slo)
+        self._next_id += 1
+        self._queue.append(_Request(image, slo, anytime, handle))
+        self.stats["requests"] += 1
+        return handle
+
+    # -- dispatch ------------------------------------------------------------
+
+    def _bucket_for(self, n: int) -> int:
+        for b in self.buckets:
+            if b >= n:
+                return b
+        return self.buckets[-1]
+
+    def flush(self) -> None:
+        """Drain the queue: group by (SLO, image shape) in arrival order,
+        chunk to the largest bucket, pad each chunk to its bucket, dispatch."""
+        queue, self._queue = self._queue, []
+        groups: Dict[Tuple[str, Tuple[int, ...]], list[_Request]] = {}
+        for r in queue:
+            groups.setdefault((r.slo, r.image.shape), []).append(r)
+        for (slo, _shape), reqs in groups.items():
+            policy = self.policy_for(slo)
+            while reqs:
+                chunk, reqs = reqs[: self.buckets[-1]], reqs[self.buckets[-1]:]
+                self._dispatch(policy, chunk)
+
+    def _dispatch(self, policy: ExecutionPolicy, chunk: list[_Request]) -> None:
+        engine = self._engine_for(policy)
+        bucket = self._bucket_for(len(chunk))
+        xb = jnp.stack([r.image for r in chunk])
+        if bucket > len(chunk):
+            xb = jnp.pad(
+                xb, ((0, bucket - len(chunk)), (0, 0), (0, 0), (0, 0))
+            )
+            self.stats["padded_rows"] += bucket - len(chunk)
+        self.program_keys.add((bucket, policy))
+        logits = engine(xb)
+        self.stats["dispatches"] += 1
+
+        # anytime channel: one prefix program per distinct requested budget
+        # in this chunk (per-sample scales make the grouping invisible to
+        # each request's values)
+        ks = sorted({k for r in chunk for k in r.anytime})
+        partials_by_k: Dict[int, jax.Array] = {}
+        bounds_by_k: Dict[int, float] = {}
+        if ks:
+            bounds_by_k = self._anytime_bounds(engine, xb, ks)
+            for k in ks:
+                pk = self._prefix_policy(policy, k)
+                if pk == policy:
+                    partials_by_k[k] = logits
+                    bounds_by_k[k] = 0.0
+                else:
+                    self.program_keys.add((bucket, pk))
+                    partials_by_k[k] = self._engine_for(pk)(xb)
+
+        for i, r in enumerate(chunk):
+            r.handle._logits = logits[i]
+            r.handle._partials = tuple(
+                AnytimeResult(
+                    budget=k,
+                    logits=partials_by_k[k][i],
+                    top1=int(jnp.argmax(partials_by_k[k][i])),
+                    bound=bounds_by_k[k],
+                )
+                for k in r.anytime
+            )
+
+    # -- anytime error bounds --------------------------------------------------
+
+    def _anytime_bounds(
+        self, engine: DslrEngine, xb: jax.Array, ks: Sequence[int]
+    ) -> Dict[int, float]:
+        """Conservative bound on ``max|partial_k - full|`` per requested
+        budget: each conv layer truncated below its policy budget
+        contributes its anytime tail bound (2 * scale * 2**-k_eff *
+        ||W_col||_1, at the batch's calibrated activation scale — an upper
+        bound on any single sample's scale), amplified by the layer output's
+        downstream worst-case Lipschitz gain (``engine.node_gains``), summed
+        over layers.  One approximation: the calibration scales come from
+        the full-budget forward, and truncation can in principle raise a
+        downstream layer's input amax above that — a second-order effect,
+        dwarfed in practice by the orders-of-magnitude slack of the
+        worst-case gain composition (docs/NUMERICS.md measures probes far
+        below Lipschitz; dominance over the measured error is asserted in
+        tests and the serve benchmark)."""
+        if self._gains is None:
+            self._gains = engine.node_gains()
+            self._row_l1 = {
+                n.name: float(
+                    jnp.max(jnp.sum(jnp.abs(engine._weights[n.name][0]), axis=0))
+                )
+                for n in engine.graph.conv_nodes
+            }
+        scales = engine.calibration_scales(xb)
+        pol = engine.policy
+        out: Dict[int, float] = {}
+        for k in ks:
+            total = 0.0
+            for node in engine.graph.conv_nodes:
+                full = pol.budget_for(node.name) or pol.n_planes
+                k_eff = min(int(k), full)
+                if k_eff < full:
+                    tail = 2.0 * scales[node.name] * 2.0 ** -k_eff
+                    total += self._gains[node.name] * tail * self._row_l1[node.name]
+            out[k] = total
+        return out
+
+    # -- warmup ----------------------------------------------------------------
+
+    def warmup(
+        self,
+        image_shape: Tuple[int, int, int],
+        slos: Optional[Sequence[str]] = None,
+        buckets: Optional[Sequence[int]] = None,
+        anytime: Sequence[int] = (),
+    ) -> int:
+        """Trace/compile every (bucket, SLO policy) program up front with
+        zero images so steady-state latency percentiles exclude jit cost.
+        ``anytime`` additionally warms the k-plane prefix programs that
+        requests asking for those partial budgets will hit.  Returns the
+        number of programs warmed (shared programs counted once)."""
+        n = 0
+        if slos is None:
+            slos = sorted(set(self.slos) | set(self._slo_policies))
+        for slo in slos:
+            policy = self.policy_for(slo)
+            policies = {policy}
+            policies.update(self._prefix_policy(policy, int(k)) for k in anytime)
+            for pol in policies:
+                engine = self._engine_for(pol)
+                for b in buckets if buckets is not None else self.buckets:
+                    xb = jnp.zeros((b,) + tuple(image_shape), jnp.float32)
+                    jax.block_until_ready(engine(xb))
+                    self.program_keys.add((b, pol))
+                    n += 1
+        return n

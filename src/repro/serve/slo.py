@@ -1,0 +1,85 @@
+"""SLO classes for request-level serving: named latency tiers -> solved budgets.
+
+A serving request does not pick digit budgets — it picks a *service level*:
+
+  * ``"exact"``    — every MSDF plane, the full-precision digit-plane result;
+  * ``"balanced"`` — the planner solves per-layer budgets for a cycle target
+                     at ~60% of the full-precision Eq.-3 cycle count;
+  * ``"fast"``     — the same, at ~35%.
+
+The mapping runs through the budget planner (core/planner.py): the engine's
+per-layer (digits -> cycles, error) Pareto frontier is solved under the SLO's
+cycle target via ``DslrEngine.plan`` and installed with
+``ExecutionPolicy.with_plan`` — so an SLO class is exactly a planner-solved
+``BudgetPlan``, not a hand-tuned constant.  This is the paper's runtime
+precision scaling surfaced as a serving knob: MSDF arithmetic makes
+precision/latency a per-request decision, the planner makes it a *solved*
+one.
+
+``SloClass.cycle_fraction`` is the knob; define your own tiers by passing a
+custom mapping to ``DslrServer(slos=...)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+from repro.core import planner as core_planner
+from repro.models.graph import ExecutionPolicy
+
+
+@dataclasses.dataclass(frozen=True)
+class SloClass:
+    """One service level: a name plus the fraction of the full-precision
+    predicted cycle count the planner may spend (``None`` = full precision,
+    no planning)."""
+
+    name: str
+    cycle_fraction: Optional[float]
+
+    def __post_init__(self):
+        if self.cycle_fraction is not None and not 0.0 < self.cycle_fraction <= 1.0:
+            raise ValueError(
+                f"cycle_fraction={self.cycle_fraction} outside (0, 1]"
+            )
+
+
+DEFAULT_SLOS: Tuple[SloClass, ...] = (
+    SloClass("fast", 0.35),
+    SloClass("balanced", 0.60),
+    SloClass("exact", None),
+)
+
+
+def slo_table(slos=DEFAULT_SLOS) -> Dict[str, SloClass]:
+    table = {}
+    for s in slos:
+        if s.name in table:
+            raise ValueError(f"duplicate SLO class {s.name!r}")
+        table[s.name] = s
+    return table
+
+
+def resolve_policy(engine, slo: SloClass, base: ExecutionPolicy) -> ExecutionPolicy:
+    """The ``ExecutionPolicy`` an SLO class executes under, derived from
+    ``base`` (the server's policy: mode/recoding/fusion/per-sample scales).
+
+    ``"exact"``-style classes (``cycle_fraction is None``) clear every budget;
+    planned classes solve per-layer budgets on the engine's analytic frontier
+    under ``cycle_fraction x`` the full-precision predicted cycle count,
+    clamped up to the one-plane-per-layer floor (the fastest feasible plan —
+    an aggressive tier on a tiny network degrades to the floor instead of
+    raising).
+    """
+    base = dataclasses.replace(base, digit_budget=None, layer_budgets=None)
+    if slo.cycle_fraction is None:
+        return base
+    curves = engine.budget_curves(method="bound")
+    full_cycles = sum(c.cycles_at(c.max_budget) for c in curves)
+    floor_cycles = sum(c.cycles_at(1) for c in curves)
+    plan = core_planner.plan_budgets(
+        curves,
+        max_cycles=max(int(slo.cycle_fraction * full_cycles), floor_cycles),
+        network=engine.cfg.name,
+    )
+    return base.with_plan(plan)

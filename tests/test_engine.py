@@ -195,6 +195,19 @@ def test_shim_rejects_bad_mode_and_budget():
         cnn_apply(cfg, params, x, mode="dslr", digit_budget=2)
 
 
+def test_mode_shim_emits_deprecation_warning():
+    """The mode= shim's docstrings have claimed deprecation since the engine
+    landed; the runtime must actually say so."""
+    cfg, params, x = setup("alexnet", width=0.02)
+    with pytest.warns(DeprecationWarning, match="compile_cnn"):
+        cnn_apply(cfg, params, x, mode="float")
+    with pytest.warns(DeprecationWarning, match="compile_cnn"):
+        infer_cnn(cfg, params, x, mode="float")
+    # warns on cached (already-traced) calls too: the warning is eager
+    with pytest.warns(DeprecationWarning, match="compile_cnn"):
+        infer_cnn(cfg, params, x, mode="float")
+
+
 # ---------------------------------------------------------------------------
 # build-once semantics
 # ---------------------------------------------------------------------------
@@ -217,6 +230,11 @@ def test_compile_flattens_weights_exactly_once(monkeypatch):
     jax.block_until_ready(engine(x))
     jax.block_until_ready(engine(x))
     assert calls["n"] == 0  # forward passes re-flatten nothing
+    # derived engines (the server's per-SLO policies) share the flat weights
+    derived = engine.with_policy(ExecutionPolicy(digit_budget=4))
+    jax.block_until_ready(derived(x))
+    assert calls["n"] == 0
+    assert derived._weights is engine._weights
 
 
 # ---------------------------------------------------------------------------
