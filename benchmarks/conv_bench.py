@@ -9,7 +9,11 @@ columns report what the DSLR story rests on:
   * the anytime error per budget (max |planes_k - float| and the analytic
     2**-(k-1) bound),
   * the CSD activity factor of the im2col patches (~1/3 non-zero digits —
-    the zero-plane-skipping/energy argument).
+    the zero-plane-skipping/energy argument),
+  * bytes moved / operational intensity per budget (the paper's Fig. 12
+    axes): operand bytes from the kernel traffic model
+    (kernels/traffic.py — exact block-fetch counts under Pallas's
+    grid-revisiting rule) next to XLA's own ``cost_analysis`` figure.
 
 CPU interpret-mode timings are functional comparisons only; on a TPU backend
 the same calls compile to Mosaic.  ``BENCH_FAST=1`` shrinks shapes/iters for
@@ -24,8 +28,21 @@ import jax.numpy as jnp
 from repro.core import digits as dig
 from repro.core import dslr as core_dslr
 from repro.core import online
-from repro.kernels import ops
+from repro.kernels import ops, tuning
+from repro.kernels import traffic as ktraffic
 from .common import FAST, emit, time_jax
+
+
+def xla_bytes_accessed(fn, *args) -> float:
+    """XLA's 'bytes accessed' for a jitted callable, -1.0 when the backend's
+    cost model does not report it (list/dict API both handled)."""
+    try:
+        ca = jax.jit(fn).lower(*args).compile().cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0] if ca else {}
+        return float(ca.get("bytes accessed", ca.get("bytes_accessed", -1.0)))
+    except Exception:
+        return -1.0
 
 
 def main() -> None:
@@ -61,19 +78,54 @@ def main() -> None:
     q = core_dslr.quantize_conv_planes(x, 8)
     full = q.planes.shape[0]  # 9 planes at 8 fractional bits
     budgets = (2, 4, full) if FAST else (2, 4, 6, full)
+    # quantize/pack/im2col + the activity bitmap once (inside
+    # conv_traffic_for_input); each budget's traffic only differs by
+    # truncating the digit axis, i.e. a bitmap column slice.  The block
+    # shape is resolved once and used for BOTH the timed launch and the
+    # traffic model, so the bytes/OI column describes the launch that ran.
+    interp = jax.default_backend() == "cpu"
+    Ho = (H + 2 * pad - K) // stride + 1
+    M, T = B * Ho * Ho, K * K * Cin
+    blk_m, blk_n = tuning.autotune_conv_blocks(M, Cout, T, full, interpret=interp)
+    tr_full = ktraffic.conv_traffic_for_input(
+        x, w, n_digits=8, stride=stride, padding=pad,
+        block_m=blk_m, block_n=blk_n, interpret=interp,
+    )
+    act_full = tr_full["activity"]
     for k in budgets:
         fn = lambda k=k: ops.dslr_conv2d_planes(
-            x, w, n_digits=8, stride=stride, padding=pad, digit_budget=k
+            x, w, n_digits=8, stride=stride, padding=pad, digit_budget=k,
+            block_m=blk_m, block_n=blk_n,
         )
         us = time_jax(fn, iters=iters)
         yk = fn()
         err = float(jnp.max(jnp.abs(yk - yf)))
         bound = float(ops.conv_anytime_error_bound(w, q.scale, k))
+        # bytes-moved / operational-intensity column: modelled operand
+        # traffic of the packed launch (the default path) + MXU flops of the
+        # k digit planes -> ops/byte, the paper's Fig. 12 metric
+        tr = ktraffic.conv_planes_traffic(
+            M, Cout, T, k, packed=True, activity=act_full[:, :k],
+            block_m=blk_m, block_n=blk_n, interpret=interp,
+        )
+        flops = 2 * M * T * Cout * k
+        oi = flops / tr.total_bytes
         emit(
             f"conv.dslr_planes_b{k}_{shape_tag}",
             us,
-            f"mxu_pass_mult={k}/{full} anytime_err={err:.3e} bound={bound:.3e}",
+            f"mxu_pass_mult={k}/{full} anytime_err={err:.3e} bound={bound:.3e} "
+            f"bytes_moved={tr.total_bytes} oi={oi:.2f}",
         )
+    ca_bytes = xla_bytes_accessed(
+        lambda x: ops.dslr_conv2d_planes(x, w, n_digits=8, stride=stride, padding=pad),
+        x,
+    )
+    emit(
+        f"conv.dslr_planes_xla_bytes_{shape_tag}",
+        0.0,
+        f"value={ca_bytes:.0f} cost_analysis 'bytes accessed' (whole program, "
+        f"-1 = backend does not report)",
+    )
 
     patches = core_dslr.im2col_planes(q.planes, K, stride, pad)
     act = float(dig.nonzero_digit_fraction(patches))

@@ -9,6 +9,7 @@ One module per paper table/figure:
   fig12_intensity    Fig. 12  (operational intensity)
   kernels_bench      TPU adaptation (Pallas MSDF matmul vs refs, CPU interpret)
   conv_bench         conv execution paths: float vs scan-serial vs digit-plane
+  packed_bench       packed 2-bit digit interchange: traffic ratio, OI, skips
   engine_bench       compiled engine: build-once vs per-call weight prep
   planner_bench      budget planner: planned vs uniform budgets, equal cycles
   serve_bench        request-level server: mixed-SLO latency, scale decoupling
@@ -31,6 +32,7 @@ MODULES = [
     "fig12_intensity",
     "kernels_bench",
     "conv_bench",
+    "packed_bench",
     "engine_bench",
     "planner_bench",
     "serve_bench",

@@ -46,7 +46,7 @@ from repro.serve import DslrServer
 
 
 STR_POLICY_FIELDS = ("mode", "recoding")
-BOOL_POLICY_FIELDS = ("fuse_epilogue", "skip_zero_planes", "interpret")
+BOOL_POLICY_FIELDS = ("fuse_epilogue", "skip_zero_planes", "interpret", "packed")
 INT_POLICY_FIELDS = ("n_digits", "digit_budget", "block_m", "block_n")
 
 

@@ -228,3 +228,98 @@ def nonzero_digit_fraction(planes: jax.Array) -> jax.Array:
     """Fraction of non-zero digits — the activity factor the paper's energy
     argument rests on (CSD -> ~1/3)."""
     return jnp.mean((planes != 0).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# packed digit planes (2-bit signed digits, 4 MSDF digits per int8 byte)
+# ---------------------------------------------------------------------------
+#
+# A digit in {-1, 0, 1} carries 2 bits of information; storing it in a whole
+# int8 wastes 4x the HBM traffic the conv path's dominant operand (the im2col
+# patch planes) pays.  The packed interchange format keeps the digit stream
+# narrow across the HBM boundary — the TPU image of L2R-CIPU/DSLOT-NN keeping
+# serial digit wires narrow between units — and only widens inside VMEM:
+#
+#     byte b of packed[g] holds digits 4g .. 4g+3 (MSDF order), digit j in
+#     bits 2*(j%4) .. 2*(j%4)+1 as its 2-bit two's complement
+#     (0 -> 0b00, +1 -> 0b01, -1 -> 0b11; 0b10 never occurs).
+#
+# Properties the pipeline relies on:
+#   * the zero digit encodes as 0b00, so an all-zero byte is the zero digit
+#     group — zero padding (im2col halos, tile padding) commutes with packing
+#     byte-for-byte, and ``packed == 0`` witnesses a dead digit group;
+#   * packing is a bijection on digit tensors (unpack . pack == id), so every
+#     numerical statement about planes applies verbatim to packed planes;
+#   * the digit axis packs leading-major: truncating to a digit budget k is
+#     the leading-axis slice ``packed[: (k + 3) // 4]`` (nibble granularity) —
+#     residual digits in the last byte are simply never unpacked.
+
+PACK_DIGITS_PER_BYTE = 4
+
+
+def packed_group_count(n_digits: int) -> int:
+    """Number of int8 bytes per element for ``n_digits`` packed digits."""
+    return -(-n_digits // PACK_DIGITS_PER_BYTE)
+
+
+def pack_planes(planes: jax.Array) -> jax.Array:
+    """Pack signed-digit planes (D, ...) int8 in {-1, 0, 1} into
+    (ceil(D/4), ...) int8 bytes, 4 MSDF digits per byte (digit-axis packing).
+
+    The tail group of a D not divisible by 4 is padded with zero digits, so
+    ``pack_planes(planes[:k])`` and ``pack_planes(planes)[: ceil(k/4)]``
+    agree on every digit < k (see ``unpack_planes``).
+    """
+    D = planes.shape[0]
+    G = packed_group_count(D)
+    if D != 4 * G:
+        planes = jnp.concatenate(
+            [planes, jnp.zeros((4 * G - D,) + planes.shape[1:], planes.dtype)]
+        )
+    codes = (planes.astype(jnp.int32) & 3).reshape((G, 4) + planes.shape[1:])
+    val = (
+        codes[:, 0]
+        | (codes[:, 1] << 2)
+        | (codes[:, 2] << 4)
+        | (codes[:, 3] << 6)
+    )
+    # bytes >= 128 are negative int8; wrap explicitly (portable, no bitcast)
+    return jnp.where(val >= 128, val - 256, val).astype(jnp.int8)
+
+
+def unpack_planes(packed: jax.Array, n_digits: int) -> jax.Array:
+    """Exact inverse of ``pack_planes``: (G, ...) int8 bytes -> (n_digits, ...)
+    int8 digits in {-1, 0, 1}.  ``n_digits`` may be any count <= 4*G —
+    residual bits of the last byte beyond ``n_digits`` are ignored, which is
+    what makes digit-budget truncation commute with packing."""
+    G = packed.shape[0]
+    if not 1 <= n_digits <= 4 * G:
+        raise ValueError(f"n_digits={n_digits} outside [1, {4 * G}]")
+    j = np.arange(n_digits)
+    grp = jnp.asarray(j // 4)
+    shift = jnp.asarray(2 * (j % 4)).reshape((-1,) + (1,) * (packed.ndim - 1))
+    v = (packed[grp].astype(jnp.int32) >> shift) & 3
+    return (v - ((v & 2) << 1)).astype(jnp.int8)  # 2-bit sign extension
+
+
+def packed_plane_activity(packed: jax.Array, n_digits: int, tile_rows: int) -> jax.Array:
+    """Per-(row tile, digit) nonzero-activity bitmap of a packed plane matrix.
+
+    ``packed``: (G, M, T) packed digit planes with M divisible by
+    ``tile_rows``.  Returns (M // tile_rows, n_digits) int32, entry 1 iff
+    digit plane d of row tile m has any non-zero digit — exactly the
+    ``jnp.any(plane != 0)`` predicate of the zero-plane-skipping kernel,
+    hoisted out of the kernel so a dead (tile, digit) is known *before* its
+    bytes would be DMA'd into VMEM.  The hoist is not free — the kernel
+    wrapper runs this (XLA-fused) reduce over the packed operand once per
+    launch — but it reads the 4x-narrower packed bytes, where the in-kernel
+    probe it replaces DMA'd every unpacked tile just to test it.
+    """
+    G, M, T = packed.shape
+    if M % tile_rows:
+        raise ValueError(f"M={M} not a multiple of tile_rows={tile_rows}")
+    j = np.arange(n_digits)
+    shift = jnp.asarray(2 * (j % 4)).reshape(-1, 1, 1, 1)
+    tiles = packed[jnp.asarray(j // 4)].reshape(n_digits, M // tile_rows, tile_rows, T)
+    live = ((tiles.astype(jnp.int32) >> shift) & 3) != 0
+    return jnp.any(live, axis=(2, 3)).astype(jnp.int32).T

@@ -51,13 +51,16 @@ def quantize_msdf(
     return DslrQuant(planes, scale)
 
 
-@functools.partial(jax.jit, static_argnames=("n_digits", "recoding", "keep_partials"))
+@functools.partial(
+    jax.jit, static_argnames=("n_digits", "recoding", "keep_partials", "per_sample")
+)
 def dslr_matmul(
     x: jax.Array,
     w: jax.Array,
     n_digits: int = 8,
     recoding: str = "csd",
     keep_partials: bool = False,
+    per_sample: bool = False,
 ) -> jax.Array:
     """MSDF digit-plane matmul: ``x @ w`` with activations digit-serialized.
 
@@ -66,8 +69,16 @@ def dslr_matmul(
 
     Returns (..., N) float32, or (D+1, ..., N) MSDF partials if
     ``keep_partials`` (partial k includes planes 0..k — the anytime series).
+
+    ``per_sample=True`` mirrors the conv path's request-level contract for
+    the scan-serial mode: axis 0 of ``x`` (which must then be >= 2-D) is a
+    batch of independent samples, each quantized against its own amax.  Row
+    i's digits — and therefore its output — depend on row i alone, so an
+    outlier batchmate or zero-padding row cannot perturb it (bitwise).
     """
-    q = quantize_msdf(x, n_digits, recoding)
+    if per_sample and x.ndim < 2:
+        raise ValueError("per_sample needs a batch axis (x.ndim >= 2)")
+    q = quantize_msdf(x, n_digits, recoding, per_sample=per_sample)
     wf = w.astype(jnp.float32)
 
     def body(acc, jk):
@@ -79,9 +90,16 @@ def dslr_matmul(
     zeros = jnp.zeros(x.shape[:-1] + (w.shape[-1],), jnp.float32)
     js = jnp.arange(q.planes.shape[0])
     acc, partials = jax.lax.scan(body, zeros, (js, q.planes))
+    # per-sample: scale is (B,), broadcast over each sample's trailing axes
+    # (the multiply is elementwise per row, so batch decoupling is exact)
+    s = q.scale
     if keep_partials:
-        return partials * q.scale
-    return acc * q.scale
+        if per_sample:
+            s = s.reshape((1, -1) + (1,) * (partials.ndim - 2))
+        return partials * s
+    if per_sample:
+        s = s.reshape((-1,) + (1,) * (acc.ndim - 1))
+    return acc * s
 
 
 def dslr_matmul_exact_ref(x: jax.Array, w: jax.Array, n_digits: int = 8) -> jax.Array:

@@ -13,6 +13,24 @@ axis so the f32 accumulator for an (m, n) output tile lives in VMEM across
 all digits and never round-trips to HBM — the memory-system image of the
 paper's digit-level pipelining (partial products never leave the PE).
 
+Two interchange formats feed the kernel:
+
+  * **unpacked** (``dslr_conv2d_planes_mxu``): one int8 per digit — simple,
+    but the dominant operand (the im2col patch planes) pays 8 bits of HBM
+    traffic for 2 bits of information, and the zero-plane skip must DMA a
+    tile in to discover it was dead;
+  * **packed** (``dslr_conv2d_planes_packed_mxu``): 4 MSDF digits per int8
+    byte (core/digits.pack_planes), ~4x less HBM traffic on the dominant
+    operand.  The BlockSpec carries packed bytes into VMEM; the kernel
+    widens the current digit with shift/mask VPU ops right before the MXU
+    dot.  A scalar-prefetched per-(tile, digit) activity bitmap replaces the
+    in-kernel ``jnp.any(plane != 0)``: the *index map* consults it, so a
+    dead digit group issues **no tile load at all** (the grid-revisiting
+    rule: an unchanged block index between consecutive steps is not
+    re-fetched), and the kernel skips the MXU pass without ever touching
+    the bytes.  Both variants are bitwise identical — packing is a
+    bijection and the f32 accumulation sequence is unchanged.
+
 Conv-specific features on top of the matmul kernel:
   * the contraction axis is the im2col window T = K*K*Cin, kept whole inside
     the block (single-pass accumulation over the receptive field, like the
@@ -22,10 +40,11 @@ Conv-specific features on top of the matmul kernel:
     image/stride geometry is accepted;
   * the MSDF digit budget is the leading ``planes`` extent: truncating it is
     the paper's runtime precision scaling — fewer planes, proportionally
-    fewer MXU passes, 2**-k bounded output error (anytime inference);
-  * zero-plane skipping: CSD recoding leaves ~2/3 digits zero, and entire
-    all-zero plane tiles skip their MXU dot (signal-activity argument,
-    §V-A item 5).
+    fewer MXU passes, 2**-k bounded output error (anytime inference); on the
+    packed path the truncation is a nibble-granularity leading-axis slice;
+  * the stationary weight tile's index map depends only on the n grid axis,
+    so it is never re-fetched across the digit axis (asserted by the traffic
+    model in kernels/traffic.py).
 """
 from __future__ import annotations
 
@@ -35,6 +54,22 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import digits as dig
+
+from . import tuning
+
+
+def _epilogue(acc, bias_ref, apply_relu: bool):
+    """Fused flush epilogue: bias add + ReLU ride the last digit step, so a
+    conv+activation layer is one kernel launch and the pre-activation tile
+    never round-trips to HBM."""
+    res = acc
+    if bias_ref is not None:
+        res = res + bias_ref[0]
+    if apply_relu:
+        res = jnp.maximum(res, 0.0)
+    return res
 
 
 def _dslr_conv2d_kernel(
@@ -85,19 +120,7 @@ def _dslr_conv2d_kernel(
 
     @pl.when(d == n_digits - 1)
     def _flush():
-        # fused epilogue: bias add + ReLU ride the flush step, so a
-        # conv+activation layer is one kernel launch and the pre-activation
-        # tile never round-trips to HBM
-        res = acc_ref[...]
-        if has_bias:
-            res = res + bias_ref[0]
-        if apply_relu:
-            res = jnp.maximum(res, 0.0)
-        out_ref[...] = res
-
-
-def _round_up(x: int, mult: int) -> int:
-    return -(-x // mult) * mult
+        out_ref[...] = _epilogue(acc_ref[...], bias_ref, apply_relu)
 
 
 @functools.partial(
@@ -131,9 +154,7 @@ def dslr_conv2d_planes_mxu(
     D, M, T = planes.shape
     T2, N = w_flat.shape
     assert T == T2, (planes.shape, w_flat.shape)
-    bm = min(block_m, _round_up(M, 8))
-    bn = min(block_n, _round_up(N, 128 if not interpret else 8))
-    Mp, Np = _round_up(M, bm), _round_up(N, bn)
+    bm, bn, Mp, Np = tuning.conv_tile_dims(M, N, block_m, block_n, interpret)
     if Mp != M:
         planes = jnp.pad(planes, ((0, 0), (0, Mp - M), (0, 0)))
     wf = w_flat.astype(jnp.float32)
@@ -177,4 +198,184 @@ def dslr_conv2d_planes_mxu(
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(*operands)
+    return out[:M, :N]
+
+
+# ---------------------------------------------------------------------------
+# packed variant: 2-bit digits across the HBM boundary, bitmap-driven skip
+# ---------------------------------------------------------------------------
+
+
+def plane_fetch_indices(activity: jax.Array, n_digits: int) -> jax.Array:
+    """Byte-group block index the packed plane BlockSpec should have resident
+    at each (row tile, digit) grid step.
+
+    ``activity``: (Mt, D) per-(tile, digit) nonzero bitmap
+    (``digits.packed_plane_activity``).  Digit d lives in byte group d // 4;
+    a group that is dead (all four digits zero) for a tile maps to the *most
+    recent live* group instead of its own, so consecutive grid steps keep an
+    unchanged block index and Pallas's grid-revisiting rule issues no DMA for
+    it.  A dead prefix clamps to group 0 (the first step of a tile always
+    loads one block; the kernel's activity guard never reads it).  Shared
+    with kernels/traffic.py so the traffic model counts exactly the fetches
+    the kernel performs.
+    """
+    Mt, D = activity.shape
+    assert D == n_digits, (activity.shape, n_digits)
+    G = dig.packed_group_count(n_digits)
+    pad = 4 * G - n_digits
+    act = jnp.pad(activity, ((0, 0), (0, pad))) if pad else activity
+    group_live = act.reshape(Mt, G, 4).any(axis=2)
+    live_idx = jnp.where(group_live, jnp.arange(G)[None, :], -1)
+    fetch_g = jax.lax.cummax(live_idx, axis=1)
+    fetch = jnp.maximum(fetch_g, 0)[:, jnp.arange(n_digits) // 4]
+    return fetch.astype(jnp.int32)
+
+
+def _dslr_conv2d_packed_kernel(
+    act_ref,  # SMEM (Mt, D) int32 — per-(tile, digit) nonzero bitmap
+    fetch_ref,  # SMEM (Mt, D) int32 — resident byte group per step (index map)
+    packed_ref,  # (1, bm, T) int8 — byte group fetch[m, d] of the patches
+    w_ref,  # (T, bn) f32 — stationary flattened filter tile
+    scale_ref,  # (1, 1) f32 — 2**-d digit weight of this plane
+    *refs,  # [row_scale_ref,] [bias_ref,] out_ref, acc_ref — as unpacked
+    n_digits: int,
+    skip_zero_planes: bool,
+    has_row_scale: bool,
+    has_bias: bool,
+    apply_relu: bool,
+):
+    del fetch_ref  # consumed by the index map, not the body
+    row_scale_ref = refs[0] if has_row_scale else None
+    bias_ref = refs[1] if (has_row_scale and has_bias) else refs[0] if has_bias else None
+    out_ref, acc_ref = refs[-2], refs[-1]
+    m, d = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(d == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    scale = scale_ref[0, 0]
+    if has_row_scale:
+        scale = scale * row_scale_ref[...]
+
+    def _accumulate():
+        # widen digit d from its 2-bit field: shift/mask on the VPU, then the
+        # same 2-bit sign extension pack_planes inverts — the resulting f32
+        # plane is bit-for-bit the unpacked kernel's operand
+        v = (packed_ref[0].astype(jnp.int32) >> (2 * (d % 4))) & 3
+        plane = (v - ((v & 2) << 1)).astype(jnp.float32)
+        contrib = jax.lax.dot_general(
+            plane,
+            w_ref[...],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_ref[...] += scale * contrib
+
+    if skip_zero_planes:
+        # the SMEM bitmap already knows a dead (tile, digit) — no byte was
+        # DMA'd in to find out (cf. the unpacked kernel's jnp.any probe)
+        jax.lax.cond(act_ref[m, d] != 0, _accumulate, lambda: None)
+    else:
+        _accumulate()
+
+    @pl.when(d == n_digits - 1)
+    def _flush():
+        out_ref[...] = _epilogue(acc_ref[...], bias_ref, apply_relu)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "skip_zero_planes", "apply_relu", "interpret"),
+)
+def dslr_conv2d_planes_packed_mxu(
+    packed: jax.Array,  # (ceil(D/4), M, T) int8 — packed im2col digit planes
+    w_flat: jax.Array,  # (T, N) float — flattened (K*K*Cin, Cout) filters
+    digit_scales: jax.Array,  # (D,) f32, typically 2**-arange(D)
+    bias: jax.Array | None = None,
+    row_scale: jax.Array | None = None,
+    block_m: int = 128,
+    block_n: int = 128,
+    skip_zero_planes: bool = True,
+    apply_relu: bool = False,
+    interpret: bool = False,
+) -> jax.Array:
+    """Packed-interchange twin of ``dslr_conv2d_planes_mxu`` — same contract,
+    bitwise-identical result, ~4x less HBM traffic on the patch operand.
+
+    ``packed`` carries 4 MSDF digits per int8 byte (``digits.pack_planes``
+    of the im2col patch planes); the digit budget D is ``len(digit_scales)``
+    and ``packed`` must hold exactly ``ceil(D/4)`` byte groups (a digit
+    budget truncates the packed operand at nibble granularity — residual
+    digits in the last byte are never unpacked).  Zero-plane skipping is
+    driven by a scalar-prefetched activity bitmap: dead digits skip the MXU
+    pass *and* dead byte groups are never DMA'd into VMEM, because the plane
+    index map points them at the already-resident block.
+    """
+    G, M, T = packed.shape
+    D = digit_scales.shape[0]
+    T2, N = w_flat.shape
+    assert T == T2, (packed.shape, w_flat.shape)
+    assert G == dig.packed_group_count(D), (packed.shape, D)
+    bm, bn, Mp, Np = tuning.conv_tile_dims(M, N, block_m, block_n, interpret)
+    if Mp != M:
+        packed = jnp.pad(packed, ((0, 0), (0, Mp - M), (0, 0)))
+    wf = w_flat.astype(jnp.float32)
+    if Np != N:
+        wf = jnp.pad(wf, ((0, 0), (0, Np - N)))
+
+    if skip_zero_planes:
+        activity = dig.packed_plane_activity(packed, D, bm)  # (Mt, D) int32
+        fetch = plane_fetch_indices(activity, D)
+    else:
+        # no skipping: every digit's own group is resident (fetched once per
+        # 4 digits either way, since consecutive digits share a group); the
+        # kernel never reads the bitmap in this mode, so don't compute one
+        activity = jnp.zeros((Mp // bm, D), jnp.int32)
+        fetch = jnp.broadcast_to(
+            (jnp.arange(D, dtype=jnp.int32) // 4)[None, :], activity.shape
+        )
+
+    has_row_scale = row_scale is not None
+    has_bias = bias is not None
+    in_specs = [
+        pl.BlockSpec((1, bm, T), lambda m, n, d, act, fetch: (fetch[m, d], m, 0)),
+        pl.BlockSpec((T, bn), lambda m, n, d, act, fetch: (0, n)),
+        pl.BlockSpec((1, 1), lambda m, n, d, act, fetch: (d, 0)),
+    ]
+    operands = [packed, wf, digit_scales.reshape(D, 1).astype(jnp.float32)]
+    if has_row_scale:
+        rs = row_scale.astype(jnp.float32).reshape(M, 1)
+        if Mp != M:
+            rs = jnp.pad(rs, ((0, Mp - M), (0, 0)))
+        in_specs.append(pl.BlockSpec((bm, 1), lambda m, n, d, act, fetch: (m, 0)))
+        operands.append(rs)
+    if has_bias:
+        b = bias.astype(jnp.float32).reshape(1, N)
+        if Np != N:
+            b = jnp.pad(b, ((0, 0), (0, Np - N)))
+        in_specs.append(pl.BlockSpec((1, bn), lambda m, n, d, act, fetch: (0, n)))
+        operands.append(b)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(Mp // bm, Np // bn, D),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda m, n, d, act, fetch: (m, n)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _dslr_conv2d_packed_kernel,
+            n_digits=D,
+            skip_zero_planes=skip_zero_planes,
+            has_row_scale=has_row_scale,
+            has_bias=has_bias,
+            apply_relu=apply_relu,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        interpret=interpret,
+    )(activity, fetch, *operands)
     return out[:M, :N]

@@ -60,8 +60,52 @@ def _quantize_kernel(
     planes_ref[0] = jax.lax.switch(d, branches)
 
 
+def _quantize_packed_kernel(
+    x_ref,  # (bm, C) f32 input tile (same tile revisited for every group)
+    inv_scale_ref,  # (1, 1) f32 per-tensor, or (bm, 1) f32 per-row
+    out_ref,  # (1, bm, C) int8 — packed byte group g out (4 digits/byte)
+    w_ref,  # VMEM scratch (bm, C) int32 — greedy remainder state
+    *,
+    frac_bits: int,
+    n_digits: int,
+):
+    g = pl.program_id(1)
+
+    @pl.when(g == 0)
+    def _load():
+        scaled = x_ref[...] * inv_scale_ref[...] * float(2**frac_bits)
+        lim = float(2**frac_bits - 1)
+        w_ref[...] = jnp.clip(jnp.round(scaled), -lim, lim).astype(jnp.int32)
+
+    def emit_group(j0):
+        # four greedy MSDF steps (digits j0..j0+3), each digit's 2-bit
+        # two's-complement code (d & 3) landing in bits 2s..2s+1 — the same
+        # byte layout as digits.pack_planes, produced without ever writing
+        # the unpacked planes to HBM
+        w = w_ref[...]
+        byte = jnp.zeros_like(w)
+        for s in range(4):
+            j = j0 + s
+            # slot 0 and out-of-budget digits encode as 0b00 (the wrapper
+            # already guarantees n_digits <= frac_bits + 1)
+            if j == 0 or j >= n_digits:
+                continue
+            weight = 1 << (frac_bits - j)
+            two_w = 2 * w
+            dgt = jnp.where(two_w >= weight, 1, jnp.where(two_w <= -weight, -1, 0))
+            w = w - dgt * weight
+            byte = byte | ((dgt & 3) << (2 * s))
+        w_ref[...] = w
+        return jnp.where(byte >= 128, byte - 256, byte).astype(jnp.int8)
+
+    n_groups = -(-n_digits // 4)
+    branches = [functools.partial(emit_group, 4 * g0) for g0 in range(n_groups)]
+    out_ref[0] = jax.lax.switch(g, branches)
+
+
 @functools.partial(
-    jax.jit, static_argnames=("frac_bits", "n_digits", "block_rows", "interpret")
+    jax.jit,
+    static_argnames=("frac_bits", "n_digits", "block_rows", "packed", "interpret"),
 )
 def msdf_quantize(
     x: jax.Array,  # (M, C) float
@@ -69,6 +113,7 @@ def msdf_quantize(
     frac_bits: int = 8,
     n_digits: int | None = None,
     block_rows: int = 256,
+    packed: bool = False,
     interpret: bool = False,
 ) -> jax.Array:
     """Fused greedy-SD digit-plane decomposition: (M, C) -> (D, M, C) int8.
@@ -76,9 +121,20 @@ def msdf_quantize(
     ``scale`` may be a scalar (one shared quantization grid) or a per-row
     vector of shape (M,) — each row is scaled against its own amax, which is
     what decouples batchmates when rows belong to different requests.
+
+    ``packed=True`` emits the 2-bit packed interchange format instead:
+    (ceil(D/4), M, C) int8 with 4 MSDF digits per byte, bit-identical to
+    ``digits.pack_planes`` of the unpacked output.  The digit stream then
+    leaves the quantizer already narrow — one byte write per 4 digits — so
+    downstream consumers (the packed conv kernel) never see 8-bit digits in
+    HBM at all.
     """
     if n_digits is None:
         n_digits = frac_bits + 1
+    if n_digits > frac_bits + 1:
+        # same contract in both output modes (the unpacked kernel also
+        # rejects this; the packed one would silently emit zero digits)
+        raise ValueError("n_digits must be <= frac_bits + 1 (incl. slot 0)")
     M, C = x.shape
     bm = min(block_rows, M)
     assert M % bm == 0
@@ -91,15 +147,25 @@ def msdf_quantize(
     else:
         inv = (1.0 / scale).reshape(1, 1).astype(jnp.float32)
         scale_spec = pl.BlockSpec((1, 1), lambda m, d: (0, 0))
+    if packed:
+        kernel = functools.partial(
+            _quantize_packed_kernel, frac_bits=frac_bits, n_digits=n_digits
+        )
+        lead = -(-n_digits // 4)
+    else:
+        kernel = functools.partial(
+            _quantize_kernel, frac_bits=frac_bits, n_digits=n_digits
+        )
+        lead = n_digits
     return pl.pallas_call(
-        functools.partial(_quantize_kernel, frac_bits=frac_bits, n_digits=n_digits),
-        grid=(M // bm, n_digits),
+        kernel,
+        grid=(M // bm, lead),
         in_specs=[
             pl.BlockSpec((bm, C), lambda m, d: (m, 0)),
             scale_spec,
         ],
         out_specs=pl.BlockSpec((1, bm, C), lambda m, d: (d, m, 0)),
-        out_shape=jax.ShapeDtypeStruct((n_digits, M, C), jnp.int8),
+        out_shape=jax.ShapeDtypeStruct((lead, M, C), jnp.int8),
         scratch_shapes=[pltpu.VMEM((bm, C), jnp.int32)],
         interpret=interpret,
     )(x.astype(jnp.float32), inv)

@@ -8,27 +8,28 @@ compile to Mosaic.
 Block sizing: odd/prime dims are handled by *padding* the tiled dimension up
 to a block multiple and slicing the result back out (zero rows/digit planes
 contribute exactly nothing), never by shrinking the block — a prime M must
-not degrade the MXU tile to 1.
+not degrade the MXU tile to 1.  The tile/pad math lives in
+``kernels/tuning.py`` (one shared copy), which also holds the measured
+(block_m, block_n) autotuner the conv path consults when blocks are left
+unspecified (``block_m=None``).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import digits as dig
 from repro.core import dslr as core_dslr
 
 from . import dslr_conv2d as _dc
 from . import dslr_matmul as _dm
 from . import msdf_quantize as _mq
 from . import online_sop as _os
+from . import tuning
 
 
 def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
-
-
-def _round_up(x: int, mult: int) -> int:
-    return -(-x // mult) * mult
 
 
 def _pad_axis(a: jax.Array, size: int, axis: int) -> jax.Array:
@@ -56,9 +57,7 @@ def dslr_matmul(
     q = core_dslr.quantize_msdf(x, n_digits, recoding)
     scales = core_dslr.digit_scales(q.planes.shape[0])
     M, N = x.shape[0], w.shape[1]
-    bm = min(block_m, _round_up(M, 8))
-    bn = min(block_n, _round_up(N, 8 if interpret else 128))
-    Mp, Np = _round_up(M, bm), _round_up(N, bn)
+    bm, bn, Mp, Np = tuning.conv_tile_dims(M, N, block_m, block_n, interpret)
     planes = _pad_axis(q.planes, Mp, 1)
     wf = _pad_axis(w.astype(jnp.float32), Np, 1)
     out = _dm.dslr_matmul_planes(
@@ -84,8 +83,9 @@ def dslr_conv2d_planes(
     bias: jax.Array | None = None,
     relu: bool = False,
     per_sample: bool = False,
-    block_m: int = 128,
-    block_n: int = 128,
+    packed: bool = True,
+    block_m: int | None = None,
+    block_n: int | None = None,
     skip_zero_planes: bool = True,
     interpret: bool | None = None,
 ) -> jax.Array:
@@ -110,6 +110,17 @@ def dslr_conv2d_planes(
     ``per_sample`` quantizes every batch row against its own amax: sample
     i's output is a function of sample i alone, so batch composition (and
     zero padding) cannot perturb it — the request-level serving contract.
+
+    ``packed`` (default) keeps the digit planes in the 2-bit packed
+    interchange format across the HBM boundary: the materialized im2col
+    patch tensor shrinks ~4x in the digit axis and dead digit groups are
+    never DMA'd (bitmap-driven skip).  Bitwise identical to ``packed=False``
+    — packing is a bijection and the kernel's f32 accumulation sequence is
+    unchanged.
+
+    ``block_m``/``block_n`` default to the autotuner's choice for this
+    geometry (``kernels/tuning.py``: cached per-(geometry, backend) table,
+    measured sweep on real backends); pass explicit ints to pin them.
     """
     return dslr_conv2d_planes_flat(
         x,
@@ -123,6 +134,7 @@ def dslr_conv2d_planes(
         bias=bias,
         relu=relu,
         per_sample=per_sample,
+        packed=packed,
         block_m=block_m,
         block_n=block_n,
         skip_zero_planes=skip_zero_planes,
@@ -142,8 +154,9 @@ def dslr_conv2d_planes_flat(
     bias: jax.Array | None = None,
     relu: bool = False,
     per_sample: bool = False,
-    block_m: int = 128,
-    block_n: int = 128,
+    packed: bool = True,
+    block_m: int | None = None,
+    block_n: int | None = None,
     skip_zero_planes: bool = True,
     interpret: bool | None = None,
 ) -> jax.Array:
@@ -153,15 +166,25 @@ def dslr_conv2d_planes_flat(
     if interpret is None:
         interpret = _on_cpu()
     q = core_dslr.quantize_conv_planes(x, n_digits, recoding, per_sample=per_sample)
-    patches = core_dslr.im2col_planes(q.planes, kernel_size, stride, padding)
-    if digit_budget is not None:
-        if not 1 <= digit_budget <= patches.shape[0]:
-            raise ValueError(
-                f"digit_budget={digit_budget} outside [1, {patches.shape[0]}]"
-            )
-        patches = patches[:digit_budget]
-    D, B, Ho, Wo, T = patches.shape
-    planes = patches.reshape(D, B * Ho * Wo, T)
+    n_planes = q.planes.shape[0]
+    if digit_budget is not None and not 1 <= digit_budget <= n_planes:
+        raise ValueError(f"digit_budget={digit_budget} outside [1, {n_planes}]")
+    D = digit_budget if digit_budget is not None else n_planes
+    if packed:
+        # pack the *image* planes (a bijection, commutes with the im2col
+        # gather because the zero digit encodes as a zero byte), so the big
+        # materialized patch tensor is born packed: ceil(D/4) bytes per
+        # patch element instead of D
+        image = dig.pack_planes(q.planes)
+    else:
+        image = q.planes
+    patches = core_dslr.im2col_planes(image, kernel_size, stride, padding)
+    # digit-budget truncation: a leading-axis slice either way (nibble
+    # granularity when packed — residual digits in the last byte are simply
+    # never unpacked by the kernel)
+    patches = patches[: dig.packed_group_count(D) if packed else D]
+    _, B, Ho, Wo, T = patches.shape
+    planes = patches.reshape(patches.shape[0], B * Ho * Wo, T)
     fused = bias is not None or relu
     scales = core_dslr.digit_scales(D)
     row_scale = None
@@ -174,7 +197,14 @@ def dslr_conv2d_planes_flat(
         # Ho*Wo pixel block shares its sample's scale), multiplied into the
         # accumulator at the flush step before the bias lands
         row_scale = jnp.repeat(q.scale.astype(jnp.float32), Ho * Wo)
-    out = _dc.dslr_conv2d_planes_mxu(
+    if block_m is None or block_n is None:
+        tuned_m, tuned_n = tuning.autotune_conv_blocks(
+            B * Ho * Wo, w_flat.shape[1], T, D, packed=packed, interpret=interpret
+        )
+        block_m = block_m if block_m is not None else tuned_m
+        block_n = block_n if block_n is not None else tuned_n
+    kernel = _dc.dslr_conv2d_planes_packed_mxu if packed else _dc.dslr_conv2d_planes_mxu
+    out = kernel(
         planes,
         w_flat,
         scales,
@@ -209,15 +239,18 @@ def msdf_quantize(
     frac_bits: int = 8,
     n_digits: int | None = None,
     block_rows: int = 256,
+    packed: bool = False,
     interpret: bool | None = None,
 ) -> jax.Array:
     """``scale`` is a scalar (per-tensor grid) or an (M,) per-row vector —
-    the per-request quantization grids the serving path uses."""
+    the per-request quantization grids the serving path uses.  ``packed``
+    emits the 2-bit packed interchange format (``digits.pack_planes`` of the
+    unpacked output, computed in-kernel: 4 digits per byte, one HBM write
+    per byte group)."""
     if interpret is None:
         interpret = _on_cpu()
     M = x.shape[0]
-    br = min(block_rows, _round_up(M, 8))
-    Mp = _round_up(M, br)
+    br, Mp = tuning.row_tile_dims(M, block_rows)
     if jnp.ndim(scale) == 1 and Mp != M:
         # pad rows carry scale 1 (not 0: 1/0 would turn the padded zero rows
         # into NaNs); they are sliced off below either way
@@ -228,6 +261,7 @@ def msdf_quantize(
         frac_bits=frac_bits,
         n_digits=n_digits,
         block_rows=br,
+        packed=packed,
         interpret=interpret,
     )
     return planes[:, :M]
@@ -244,8 +278,7 @@ def online_sop_exact(
     if interpret is None:
         interpret = _on_cpu()
     M = x_fixed.shape[0]
-    br = min(block_rows, _round_up(M, 8))
-    Mp = _round_up(M, br)
+    br, Mp = tuning.row_tile_dims(M, block_rows)
     out = _os.online_sop_exact(
         _pad_axis(x_fixed, Mp, 0),
         _pad_axis(y_digits, Mp, 0),

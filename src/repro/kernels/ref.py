@@ -19,6 +19,7 @@ def dslr_conv2d_planes_ref(
     bias: jax.Array | None = None,
     relu: bool = False,
     per_sample: bool = False,
+    packed: bool = False,
 ) -> jax.Array:
     """Pure-jnp oracle for the digit-plane conv kernel (kernels/dslr_conv2d.py).
 
@@ -29,13 +30,22 @@ def dslr_conv2d_planes_ref(
     reaches the accumulator before the bias — folded into the digit scales
     (per-tensor) or multiplied per output row (``per_sample``) — then bias
     add + ReLU on the accumulator.
+
+    ``packed=True`` routes the patches through the 2-bit packed interchange
+    format exactly like the packed kernel path — pack the image planes,
+    im2col the bytes, truncate at nibble granularity, unpack — which must be
+    a digit-level no-op (packing is a bijection and the zero digit is the
+    zero byte), so the packed oracle equals the unpacked one bit for bit.
     """
     B, H, W, Cin = x.shape
     K = w.shape[0]
     q = core_dslr.quantize_conv_planes(x, n_digits, recoding, per_sample=per_sample)
-    patches = core_dslr.im2col_planes(q.planes, K, stride, padding)
-    if digit_budget is not None:
-        patches = patches[:digit_budget]
+    budget = digit_budget if digit_budget is not None else q.planes.shape[0]
+    if packed:
+        bytes_ = core_dslr.im2col_planes(dig.pack_planes(q.planes), K, stride, padding)
+        patches = dig.unpack_planes(bytes_[: dig.packed_group_count(budget)], budget)
+    else:
+        patches = core_dslr.im2col_planes(q.planes, K, stride, padding)[:budget]
     D, _, Ho, Wo, T = patches.shape
     planes = patches.reshape(D, B * Ho * Wo, T)
     w_flat = core_dslr.flatten_conv_weights(w).astype(jnp.float32)

@@ -104,6 +104,7 @@ def _conv_node(
             bias=b if fuse else None,
             relu=fuse and (epilogue is not None and epilogue.relu),
             per_sample=policy.per_sample_scales,
+            packed=policy.packed,
             block_m=policy.block_m,
             block_n=policy.block_n,
             skip_zero_planes=policy.skip_zero_planes,

@@ -1,0 +1,149 @@
+"""Shared block-sizing helpers + the measured block-shape autotuner
+(kernels/tuning.py), and the per-sample scan-serial matmul contract.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import dslr as core_dslr
+from repro.kernels import ops, ref, tuning
+
+
+# ---------------------------------------------------------------------------
+# tile/pad math (the one shared copy of the old _round_up call sites)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("M,N", [(1, 1), (7, 13), (97, 101), (128, 128),
+                                 (129, 257), (1000, 3)])
+def test_conv_tile_dims_odd_prime(M, N):
+    bm, bn, Mp, Np = tuning.conv_tile_dims(M, N, 128, 128, interpret=True)
+    # pad, never shrink: blocks stay >= the aligned dim, pads are multiples
+    assert Mp % bm == 0 and Np % bn == 0
+    assert Mp >= M and Np >= N
+    assert bm % tuning.SUBLANE == 0 or bm == tuning.round_up(M, tuning.SUBLANE)
+    assert bm > 1 or M == 1  # a prime M must not degrade the tile to 1
+    # slicing the pad back off recovers the problem size
+    assert Mp - M < bm and Np - N < bn
+
+
+def test_conv_tile_dims_lane_alignment_on_hardware():
+    # off-TPU (interpret) aligns N to the 8-sublane grid; hardware to 128
+    assert tuning.conv_tile_dims(64, 24, 128, 128, interpret=True).bn == 24
+    assert tuning.conv_tile_dims(64, 24, 128, 128, interpret=False).bn == 128
+
+
+@pytest.mark.parametrize("M", [1, 7, 97, 256, 1000])
+def test_row_tile_dims(M):
+    br, Mp = tuning.row_tile_dims(M, 256)
+    assert Mp % br == 0 and Mp >= M and Mp - M < br
+
+
+def test_padded_conv_matches_ref_on_prime_dims():
+    """End-to-end: a prime M x prime N conv geometry through the shared
+    pad-and-slice path stays bitwise exact."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((1, 7, 11, 3)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((3, 3, 3, 5)).astype(np.float32))
+    for packed in (False, True):
+        got = ops.dslr_conv2d_planes(x, w, n_digits=6, padding=0, packed=packed)
+        want = ref.dslr_conv2d_planes_ref(x, w, n_digits=6, padding=0)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# block-shape autotuner
+# ---------------------------------------------------------------------------
+
+
+def test_autotuner_caches_per_geometry():
+    tuning.clear_block_table()
+    try:
+        a = tuning.autotune_conv_blocks(64, 32, 27, 9, interpret=True)
+        assert a == (128, 128)  # interpret-mode miss records the heuristic
+        table = tuning.block_table()
+        assert len(table) == 1 and list(table.values())[0] == a
+        # hit path: same geometry, no new entry
+        assert tuning.autotune_conv_blocks(64, 32, 27, 9, interpret=True) == a
+        assert len(tuning.block_table()) == 1
+        # a different geometry is a different entry
+        tuning.autotune_conv_blocks(128, 32, 27, 9, interpret=True)
+        assert len(tuning.block_table()) == 2
+    finally:
+        tuning.clear_block_table()
+
+
+def test_autotuner_measured_sweep_smoke():
+    """force_measure exercises the timing sweep on the real kernel (tiny
+    geometry, interpret mode) and must return a clamped candidate."""
+    tuning.clear_block_table()
+    try:
+        bm, bn = tuning.autotune_conv_blocks(
+            16, 8, 12, 5, interpret=True, measure=True,
+            candidates=((8, 8), (16, 8)),
+        )
+        assert (bm, bn) in {(8, 8), (16, 8)}
+        # the measured result lands in the cache
+        assert len(tuning.block_table()) == 1
+    finally:
+        tuning.clear_block_table()
+
+
+def test_ops_resolves_none_blocks_via_tuner():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((1, 8, 8, 3)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((3, 3, 3, 4)).astype(np.float32))
+    got = ops.dslr_conv2d_planes(x, w, n_digits=6, padding=1)  # blocks = None
+    want = ref.dslr_conv2d_planes_ref(x, w, n_digits=6, padding=1)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# per-sample scales for the scan-serial dslr_matmul (ROADMAP satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_dslr_matmul_per_sample_batchmate_decoupling():
+    """An outlier batchmate must not perturb anyone else's output (bitwise),
+    and zero-padding rows must not either — the conv path's request-level
+    contract, now on the scan-serial matmul mode."""
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((3, 16)).astype(np.float32))
+    outlier = 1e3 * jnp.ones((1, 16), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((16, 8)).astype(np.float32))
+
+    alone = core_dslr.dslr_matmul(a, w, per_sample=True)
+    with_outlier = core_dslr.dslr_matmul(
+        jnp.concatenate([a, outlier]), w, per_sample=True
+    )
+    np.testing.assert_array_equal(np.asarray(with_outlier[:3]), np.asarray(alone))
+    padded = core_dslr.dslr_matmul(
+        jnp.concatenate([a, jnp.zeros((2, 16))]), w, per_sample=True
+    )
+    np.testing.assert_array_equal(np.asarray(padded[:3]), np.asarray(alone))
+    # per-tensor mode demonstrably couples (the contrast the contract needs)
+    shared = core_dslr.dslr_matmul(jnp.concatenate([a, outlier]), w)
+    assert not np.array_equal(
+        np.asarray(shared[:3]), np.asarray(core_dslr.dslr_matmul(a, w))
+    )
+
+
+def test_dslr_matmul_per_sample_keep_partials_and_validation():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((2, 12)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((12, 5)).astype(np.float32))
+    parts = core_dslr.dslr_matmul(x, w, per_sample=True, keep_partials=True)
+    full = core_dslr.dslr_matmul(x, w, per_sample=True)
+    np.testing.assert_array_equal(np.asarray(parts[-1]), np.asarray(full))
+    with pytest.raises(ValueError):
+        core_dslr.dslr_matmul(jnp.ones((12,)), w, per_sample=True)
+
+
+def test_dslr_matmul_per_sample_close_to_per_tensor():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((4, 16)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((16, 8)).astype(np.float32))
+    a = core_dslr.dslr_matmul(x, w, per_sample=True)
+    b = jnp.tensordot(x, w, axes=1)
+    rel = float(jnp.max(jnp.abs(a - b)) / (jnp.max(jnp.abs(b)) + 1e-9))
+    assert rel < 0.02, rel

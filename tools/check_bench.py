@@ -1,0 +1,97 @@
+#!/usr/bin/env python
+"""Bench regression guard (CI bench-smoke job): compare a fresh BENCH_*.json
+against its committed baseline and fail on regression.
+
+Usage:  python tools/check_bench.py BENCH_packed.json \\
+            --baseline benchmarks/baselines/BENCH_packed.json
+
+Guarded rows carry their scalar as a ``value=<float>`` token in the derived
+column (wall-clock rows use the us_per_call column).  Each rule compares the
+current value against the committed baseline with a per-rule relative
+tolerance, plus an optional *hard* bound that holds regardless of what the
+baseline says — the packed-path traffic ratio must never fall below 3x
+(= 9 digit planes / 3 byte groups at D=9) even if someone regenerates the
+baseline from a regressed build.
+
+Structural rows (traffic ratios, fetch counts, dead-group loads) are
+deterministic, so their tolerances are tight; wall-clock rows run in
+interpret mode on shared CI runners, so theirs are deliberately loose — the
+guard catches a path accidentally going quadratically slow, not jitter.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import re
+import sys
+
+VALUE_RE = re.compile(r"value=([-+0-9.eE]+)")
+
+# row name -> (direction, relative tolerance vs baseline, hard bound or None)
+#   "min": current must stay >= baseline * (1 - tol)  [and >= hard bound]
+#   "max": current must stay <= baseline * (1 + tol)  [and <= hard bound]
+RULES = {
+    "packed.traffic_ratio_d9": ("min", 0.05, 3.0),
+    "packed.weight_tile_fetches": ("max", 0.0, None),
+    "packed.dead_group_loads": ("max", 0.0, 0.0),
+    # interpret-mode wall-clock jitters ~4x run to run even at median-of-3
+    # (Python-level kernel interpretation); this guard exists to catch the
+    # packed path going asymptotically slow, not scheduler noise
+    "packed.wallclock_ratio": ("max", 4.0, None),
+}
+
+
+def load_rows(path: pathlib.Path) -> dict[str, dict]:
+    with open(path) as f:
+        data = json.load(f)
+    return {r["name"]: r for r in data["rows"]}
+
+
+def row_value(row: dict) -> float:
+    m = VALUE_RE.search(row.get("derived", ""))
+    if m:
+        return float(m.group(1))
+    return float(row["us_per_call"])
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", type=pathlib.Path)
+    ap.add_argument("--baseline", type=pathlib.Path, required=True)
+    args = ap.parse_args()
+
+    current = load_rows(args.current)
+    baseline = load_rows(args.baseline)
+    failures = []
+    for name, (direction, tol, hard) in RULES.items():
+        if name not in current:
+            failures.append(f"{name}: missing from {args.current}")
+            continue
+        if name not in baseline:
+            failures.append(f"{name}: missing from baseline {args.baseline}")
+            continue
+        cur, base = row_value(current[name]), row_value(baseline[name])
+        if direction == "min":
+            limit = base * (1.0 - tol)
+            ok = cur >= limit and (hard is None or cur >= hard)
+            rel = "above" if ok else "BELOW"
+        else:
+            limit = base * (1.0 + tol)
+            ok = cur <= limit and (hard is None or cur <= hard)
+            rel = "within" if ok else "OVER"
+        hard_txt = f", hard {direction} bound {hard}" if hard is not None else ""
+        print(
+            f"{'PASS' if ok else 'FAIL'}  {name}: {cur:.4f} {rel} "
+            f"{direction}-guard {limit:.4f} (baseline {base:.4f}, tol {tol:.0%}"
+            f"{hard_txt})"
+        )
+        if not ok:
+            failures.append(f"{name}: {cur:.4f} vs guard {limit:.4f}{hard_txt}")
+    for f in failures:
+        print(f"FAIL: {f}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
