@@ -2,12 +2,12 @@
 
 The engine story's measurable claim: ``compile_cnn`` flattens/stations the
 conv weights once at build time, so steady-state forwards only quantize the
-activations — versus the deprecated eager ``cnn_apply`` path that re-flattens
-(and re-dispatches) per call.  Emitted rows:
+activations — versus the eager ``execute_graph`` path that re-flattens (and
+re-dispatches) per call.  Emitted rows:
 
   * ``engine.build``        — one-off compile_cnn cost (weight flattening),
   * ``engine.call``         — steady-state jit-cached engine forward,
-  * ``engine.shim_eager``   — eager cnn_apply per-call cost (re-prepares
+  * ``engine.eager``        — eager execute_graph per-call cost (re-prepares
                               weights + re-dispatches every op, no jit cache),
   * ``engine.call_budget4`` — the same engine program at a reduced uniform
                               digit budget (anytime serving knob),
@@ -27,9 +27,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import common as cm
-from repro.models.cnn import cnn_apply
-from repro.models.engine import compile_cnn
-from repro.models.graph import CnnConfig, ExecutionPolicy, graph_spec
+from repro.models.engine import compile_cnn, execute_graph
+from repro.models.graph import CnnConfig, ExecutionPolicy, build_graph, graph_spec
 from .common import FAST, emit, time_jax
 
 
@@ -54,13 +53,14 @@ def main() -> None:
     us_call = time_jax(lambda: engine(x), iters=iters)
     emit(f"engine.call_{tag}", us_call, "steady-state jit-cached engine forward")
 
-    us_shim = time_jax(
-        lambda: cnn_apply(cfg, params, x, mode="dslr_planes"), iters=iters
+    graph = build_graph(cfg)
+    us_eager = time_jax(
+        lambda: execute_graph(graph, params, x, policy), iters=iters
     )
     emit(
-        f"engine.shim_eager_{tag}",
-        us_shim,
-        f"eager mode= shim (per-call weight prep) speedup={us_shim / max(us_call, 1e-9):.2f}x",
+        f"engine.eager_{tag}",
+        us_eager,
+        f"eager execute_graph (per-call weight prep) speedup={us_eager / max(us_call, 1e-9):.2f}x",
     )
 
     eng_b4 = compile_cnn(cfg, params, dataclasses.replace(policy, digit_budget=4))

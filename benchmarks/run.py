@@ -13,6 +13,7 @@ One module per paper table/figure:
   engine_bench       compiled engine: build-once vs per-call weight prep
   planner_bench      budget planner: planned vs uniform budgets, equal cycles
   serve_bench        request-level server: mixed-SLO latency, scale decoupling
+  serve_async_bench  async dispatcher: sustained-load p99 vs QPS, bitwise parity
 
 ``--json <path>`` (or env BENCH_JSON) writes every emitted row to a JSON
 artifact — the per-PR perf trajectory CI uploads.  Env BENCH_FAST=1 shrinks
@@ -36,6 +37,7 @@ MODULES = [
     "engine_bench",
     "planner_bench",
     "serve_bench",
+    "serve_async_bench",
 ]
 
 

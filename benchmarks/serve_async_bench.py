@@ -1,0 +1,170 @@
+"""Async serving benchmark: sustained-load p99 vs QPS through the dispatcher.
+
+The async redesign's measurable claims:
+
+  * **sustained-load latency** — a paced open-loop request stream (mixed SLO
+    tiers) at three QPS levels scaled off a measured capacity probe; per
+    level, end-to-end request latency (submit -> result, queue dwell
+    included) p50/p99 and the sustained completion throughput.
+  * **bitwise async == sync** — the same traffic replayed through the
+    synchronous ``flush`` path must produce identical logits per request:
+    the dispatcher may change wave composition and timing, never bits.
+
+Emitted rows (``serve_async.*``; the un-tagged rows are guarded by
+``tools/check_bench.py`` against ``benchmarks/baselines/``):
+
+  * ``serve_async.warmup``     — one-off compile cost of the tier programs,
+  * ``serve_async.capacity``   — closed-loop capacity probe (requests/s),
+  * ``serve_async.p99_q<i>``   — per-level p99 latency; derived carries the
+                                 offered QPS, p50, completed count, sheds,
+  * ``serve_async.sustained_throughput`` — completed req/s at the top level
+                                 (guarded: must not collapse vs baseline),
+  * ``serve_async.qps_levels`` — how many QPS levels ran (guarded >= 3),
+  * ``serve_async.bitwise_async_vs_sync`` — 1.0 iff every request's async
+                                 logits equal the sync flush path bitwise
+                                 (guarded == 1.0).
+
+CPU interpret-mode wall clock is noisy; the throughput guard is deliberately
+loose and the deterministic rows carry the tight bounds.  ``BENCH_FAST=1``
+shrinks the model and request counts to smoke size.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models.engine import compile_cnn
+from repro.models.graph import CnnConfig, ExecutionPolicy, graph_spec
+from repro.serve import DslrServer, ServerOverloaded
+from .common import FAST, emit
+
+# generous per-request deadline: the benchmark measures queue latency, so a
+# load level must overload visibly in p99 rather than shed its tail away
+DEADLINE_MS = 120_000.0
+
+
+def _traffic(n, img, tiers, seed=0):
+    rng = np.random.default_rng(seed)
+    imgs = [
+        jnp.asarray(rng.standard_normal((img, img, 3)), jnp.float32)
+        for _ in range(n)
+    ]
+    return imgs, [tiers[i % len(tiers)] for i in range(n)]
+
+
+def main() -> None:
+    if FAST:
+        net, width, img, n_probe, n_level = "alexnet", 0.02, 8, 4, 6
+        buckets = (1, 2)
+    else:
+        net, width, img, n_probe, n_level = "alexnet", 0.05, 16, 8, 12
+        buckets = (1, 2, 4)
+    cfg = CnnConfig(name=net, width=width, num_classes=4)
+    params = cm.init_params(graph_spec(cfg), jax.random.PRNGKey(0))
+    engine = compile_cnn(cfg, params, ExecutionPolicy())
+    tiers = ("fast", "balanced", "exact")
+
+    server = DslrServer(engine, buckets=buckets)
+    t0 = time.perf_counter()
+    warmed = server.warmup((img, img, 3))
+    emit(
+        "serve_async.warmup",
+        (time.perf_counter() - t0) * 1e6,
+        f"{warmed} (bucket, tier) programs compiled up front",
+    )
+
+    # closed-loop capacity probe: saturate the dispatcher, measure drain rate
+    imgs, slos = _traffic(n_probe, img, tiers, seed=1)
+    with server:
+        t0 = time.perf_counter()
+        handles = [
+            server.submit(im, slo=t, deadline_ms=DEADLINE_MS)
+            for im, t in zip(imgs, slos)
+        ]
+        server.drain(timeout=600)
+        probe_s = time.perf_counter() - t0
+    assert all(h.done() for h in handles)
+    capacity_qps = n_probe / max(probe_s, 1e-9)
+    emit(
+        "serve_async.capacity",
+        probe_s * 1e6 / n_probe,
+        f"closed-loop probe: value={capacity_qps:.3f} req/s over {n_probe} requests",
+    )
+
+    # open-loop paced streams at 3 offered-QPS levels below/near capacity
+    levels = [0.3, 0.6, 0.9]
+    throughput_at_top = 0.0
+    for i, frac in enumerate(levels):
+        qps = max(capacity_qps * frac, 1e-3)
+        gap_s = 1.0 / qps
+        imgs, slos = _traffic(n_level, img, tiers, seed=10 + i)
+        lat_ms, shed = [], 0
+        with DslrServer(engine, buckets=buckets) as srv:
+            handles = []
+            t0 = time.perf_counter()
+            for j, (im, t) in enumerate(zip(imgs, slos)):
+                target = t0 + j * gap_s
+                now = time.perf_counter()
+                if target > now:
+                    time.sleep(target - now)
+                try:
+                    handles.append(srv.submit(im, slo=t, deadline_ms=DEADLINE_MS))
+                except ServerOverloaded:
+                    shed += 1
+            srv.drain(timeout=600)
+            total_s = time.perf_counter() - t0
+        for h in handles:
+            lat_ms.append((h.done_time - h.submit_time) * 1e3)
+        p50 = float(np.percentile(lat_ms, 50))
+        p99 = float(np.percentile(lat_ms, 99))
+        tput = len(handles) / max(total_s, 1e-9)
+        emit(
+            f"serve_async.p99_q{i}",
+            p99 * 1e3,
+            f"offered {qps:.2f} QPS ({frac:.0%} of capacity): p50={p50:.1f}ms "
+            f"p99={p99:.1f}ms completed={len(handles)} shed={shed} "
+            f"sustained={tput:.3f} req/s",
+        )
+        throughput_at_top = tput
+    emit(
+        "serve_async.qps_levels",
+        float(len(levels)),
+        f"value={len(levels)} offered-QPS levels measured",
+    )
+    emit(
+        "serve_async.sustained_throughput",
+        1e6 / max(throughput_at_top, 1e-9),
+        f"value={throughput_at_top:.3f} completed req/s at the top "
+        f"({levels[-1]:.0%}-capacity) level",
+    )
+
+    # bitwise: identical traffic, async dispatcher vs synchronous flush
+    imgs, slos = _traffic(n_level, img, tiers, seed=99)
+    imgs[0] = imgs[0] * 1000.0  # outlier wave-mate must stay invisible
+    sync_srv = DslrServer(engine, buckets=buckets)
+    sync_handles = [sync_srv.submit(im, slo=t) for im, t in zip(imgs, slos)]
+    sync_srv.flush()
+    want = [np.asarray(h.result()) for h in sync_handles]
+    t0 = time.perf_counter()
+    with DslrServer(engine, buckets=buckets) as srv:
+        handles = [
+            srv.submit(im, slo=t, deadline_ms=DEADLINE_MS)
+            for im, t in zip(imgs, slos)
+        ]
+        got = [np.asarray(h.result(timeout=600)) for h in handles]
+    identical = all(np.array_equal(w, g) for w, g in zip(want, got))
+    emit(
+        "serve_async.bitwise_async_vs_sync",
+        (time.perf_counter() - t0) * 1e6,
+        f"value={1.0 if identical else 0.0} "
+        f"(1=every async request's logits bitwise equal the sync flush path, "
+        f"{len(imgs)} requests incl. 1000x outlier)",
+    )
+
+
+if __name__ == "__main__":
+    main()

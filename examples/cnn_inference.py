@@ -25,11 +25,12 @@ target or a predicted output-error target — and print the chosen plan;
 ``--plan-method`` picks the frontier's error model (measured probes vs the
 analytic bound, see ``DslrEngine.budget_curves``).
 
-The final section serves the same network through the request-level runtime
-(``repro.serve.DslrServer``): three requests at different SLO classes, one
-of them asking for anytime (k-digit prefix) partial results with their
-error bounds — the paper's left-to-right property as an API (skip with
-``--no-serve``).
+The final section serves the same network through the asynchronous
+request-level runtime (``repro.serve.DslrServer`` as a context manager —
+the background dispatcher batches by deadline): three requests at different
+SLO classes, one asking for anytime (k-digit prefix) partial results with
+their error bounds — the paper's left-to-right property as an API (skip
+with ``--no-serve``).
 """
 import argparse
 import dataclasses
@@ -192,26 +193,31 @@ def main():
 
     if args.no_serve:
         return
-    print("\nrequest-level serving (repro.serve.DslrServer):")
-    server = DslrServer(engine_p, buckets=(1, 2, 4))
+    print("\nasync request-level serving (repro.serve.DslrServer):")
     rng = np.random.default_rng(1)
     imgs = rng.standard_normal((3, args.img, args.img, 3))
-    handles = [
-        server.submit(jnp.asarray(imgs[i], jnp.float32), slo=slo,
-                      anytime=(2, 4) if slo == "exact" else ())
-        for i, slo in enumerate(("fast", "balanced", "exact"))
-    ]
-    for h in handles:  # first .result() flushes the queue (bucketed dispatch)
+    # the context manager starts the background dispatcher and drains +
+    # joins it on exit; submit returns immediately, result(timeout) blocks
+    with DslrServer(engine_p, buckets=(1, 2, 4)) as server:
+        handles = [
+            server.submit(jnp.asarray(imgs[i], jnp.float32), slo=slo,
+                          anytime=(2, 4) if slo == "exact" else ())
+            for i, slo in enumerate(("fast", "balanced", "exact"))
+        ]
+        for h in handles:
+            h.result(timeout=600)
+    for h in handles:
         pol = server.policy_for(h.slo)
         budgets = (",".join(str(k) for _, k in pol.layer_budgets)
                    if pol.layer_budgets else "full")
         print(f"  request {h.request_id} slo={h.slo:9s} top1={h.top1} "
-              f"budgets={budgets}")
+              f"budgets={budgets} "
+              f"latency {(h.done_time - h.submit_time) * 1e3:.1f} ms")
     for p in handles[2].partials:
         print(f"  anytime k={p.budget}: top1={p.top1} "
               f"|partial-full| bound {p.bound:.3e}")
     print(f"  {server.stats}, programs={len(server.program_keys)} "
-          f"(one per (bucket, policy))")
+          f"(one per (bucket, policy)), waves={len(server.wave_log)}")
 
 
 if __name__ == "__main__":

@@ -30,5 +30,5 @@ def get_config(arch_id: str) -> ArchConfig:
 
 
 # the paper's own networks (CNN cycle-model configs live in core.cycle_model;
-# runnable JAX conv stacks in models.cnn)
+# runnable JAX conv stacks compile via models.engine.compile_cnn)
 CNN_IDS = ("alexnet", "vgg16", "resnet18")

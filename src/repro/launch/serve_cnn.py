@@ -2,17 +2,21 @@
 
     PYTHONPATH=src python -m repro.launch.serve_cnn --net resnet18 \
         --width 0.05 --requests 12 [--slo balanced | --mixed-slo] \
-        [--buckets 1,2,4,8] [--wave 5] [--anytime 2,4] \
+        [--buckets 1,2,4,8] [--qps 8] [--anytime 2,4] [--deadline-ms 500] \
         [--budget 4 | --per-layer-budgets ... | --plan-latency CYCLES | --plan-error BOUND]
 
-The CNN analogue of launch/serve.py's transformer loop, rewritten over the
-request-level runtime: requests arrive one image at a time (in waves of
-``--wave``), the server forms micro-batches by size bucket with one compiled
-program per (bucket, policy), per-sample quantization scales keep every
-request's result independent of its batchmates, and SLO classes map to
-planner-solved per-layer digit budgets.  ``--anytime`` additionally asks
-each request for k-digit partial results (the MSDF prefix budgets) and
-prints their error bounds.
+The CNN analogue of launch/serve.py's transformer loop, driven through the
+asynchronous request runtime: the server runs as a context manager
+(``start``/``drain``/``close``), requests arrive one image at a time on an
+open-loop paced stream (``--qps``; 0 = submit as fast as possible), the
+background dispatcher forms waves by deadline-based continuous batching with
+one compiled program per (bucket, policy), per-sample quantization scales
+keep every request's result independent of its wave-mates, and SLO classes
+map to planner-solved per-layer digit budgets (each carrying a queue-dwell
+budget; ``--deadline-ms`` overrides it per request).  Requests the admission
+controller sheds (``ServerOverloaded``) are counted and reported.
+``--anytime`` additionally asks each request for k-digit partial results
+(the MSDF prefix budgets) and prints their error bounds.
 
 Explicit budgets (``--budget`` / ``--per-layer-budgets``) or a planner
 target (``--plan-latency`` / ``--plan-error``) install a single ``custom``
@@ -32,7 +36,7 @@ import jax.numpy as jnp
 from repro.models import common as cm
 from repro.models.engine import compile_cnn
 from repro.models.graph import CnnConfig, ExecutionPolicy, build_graph, graph_spec
-from repro.serve import DslrServer
+from repro.serve import DslrServer, ServerOverloaded
 
 
 def parse_args(argv=None) -> argparse.Namespace:
@@ -41,8 +45,10 @@ def parse_args(argv=None) -> argparse.Namespace:
     ap.add_argument("--width", type=float, default=0.05)
     ap.add_argument("--img", type=int, default=32)
     ap.add_argument("--requests", type=int, default=12, help="total request count")
-    ap.add_argument("--wave", type=int, default=5,
-                    help="requests arriving between flushes (micro-batch source)")
+    ap.add_argument("--qps", type=float, default=0.0,
+                    help="offered request rate (0 = closed-loop: submit all at once)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request dwell deadline overriding the SLO class")
     ap.add_argument("--buckets", default="1,2,4,8",
                     help="comma-separated batch-size buckets")
     ap.add_argument("--slo", default="balanced",
@@ -69,8 +75,10 @@ def parse_args(argv=None) -> argparse.Namespace:
     args = ap.parse_args(argv)
     # validate flag combinations BEFORE any engine is compiled: a conflicting
     # invocation must fail in milliseconds, not after a full compile
-    if args.requests < 1 or args.wave < 1:
-        ap.error("--requests and --wave must be >= 1")
+    if args.requests < 1:
+        ap.error("--requests must be >= 1")
+    if args.qps < 0:
+        ap.error("--qps must be >= 0")
     planning = args.plan_latency is not None or args.plan_error is not None
     if planning and (args.per_layer_budgets or args.budget):
         ap.error("--plan-* and explicit budgets (--budget/--per-layer-budgets) "
@@ -142,40 +150,44 @@ def main() -> None:
     warm_ms = (time.perf_counter() - t0) * 1e3
 
     rng = np.random.default_rng(args.seed)
-    lat: list[float] = []
+    imgs = rng.standard_normal((args.requests, args.img, args.img, 3))
     handles = []
-    sent = 0
-    while sent < args.requests:
-        wave = min(args.wave, args.requests - sent)
-        imgs = rng.standard_normal((wave, args.img, args.img, 3))
+    shed = 0
+    gap_s = 1.0 / args.qps if args.qps else 0.0
+    with server:  # start the dispatcher; drain + join on exit
         t0 = time.perf_counter()
-        wave_handles = [
-            server.submit(
-                jnp.asarray(imgs[i], jnp.float32),
-                slo=tiers[(sent + i) % len(tiers)],
-                anytime=anytime,
-            )
-            for i in range(wave)
-        ]
-        server.flush()
-        jax.block_until_ready([h.result() for h in wave_handles])
-        dt = time.perf_counter() - t0
-        lat.extend([dt] * wave)  # every request in the wave saw this latency
-        handles.extend(wave_handles)
-        sent += wave
+        for i in range(args.requests):
+            if gap_s:
+                target = t0 + i * gap_s
+                now = time.perf_counter()
+                if target > now:
+                    time.sleep(target - now)
+            try:
+                handles.append(
+                    server.submit(
+                        jnp.asarray(imgs[i], jnp.float32),
+                        slo=tiers[i % len(tiers)],
+                        anytime=anytime,
+                        deadline_ms=args.deadline_ms,
+                    )
+                )
+            except ServerOverloaded:
+                shed += 1
+        server.drain()
+        total_s = time.perf_counter() - t0
 
-    lat_ms = np.array(lat) * 1e3
+    lat_ms = np.array([(h.done_time - h.submit_time) * 1e3 for h in handles])
     n_dev = len(jax.devices())
-    total_s = float(np.sum(lat_ms[:: args.wave])) / 1e3 if args.wave else 1e-9
     print(
         f"[serve_cnn] {args.net} width={args.width} requests={args.requests} "
-        f"wave={args.wave} buckets={buckets} on {n_dev} device(s): "
+        f"qps={args.qps or 'closed-loop'} buckets={buckets} on {n_dev} device(s): "
         f"build {build_ms:.1f} ms, warmup {warmed} programs {warm_ms:.1f} ms, "
         f"p50 {np.percentile(lat_ms, 50):.1f} ms p99 {np.percentile(lat_ms, 99):.1f} ms, "
-        f"throughput {args.requests / max(total_s, 1e-9):.1f} img/s",
+        f"throughput {len(handles) / max(total_s, 1e-9):.1f} img/s, shed {shed}",
         flush=True,
     )
-    print(f"[serve_cnn] stats: {server.stats} programs={len(server.program_keys)}")
+    print(f"[serve_cnn] stats: {server.stats} programs={len(server.program_keys)} "
+          f"waves={len(server.wave_log)}")
     for tier in tiers:
         pol = server.policy_for(tier)
         if pol.layer_budgets:

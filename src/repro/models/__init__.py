@@ -1,5 +1,5 @@
 """Model substrate: all 10 assigned architectures + the paper's CNNs."""
-from . import attention, cnn, common, config, engine, ffn, graph  # noqa: F401
+from . import attention, common, config, engine, ffn, graph  # noqa: F401
 from . import moe, ssm, transformer  # noqa: F401
 from .config import ArchConfig  # noqa: F401
 from .engine import DslrEngine, compile_cnn  # noqa: F401

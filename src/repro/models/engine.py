@@ -24,14 +24,17 @@ VMEM across all MSDF planes and the epilogue rides the flush step (the
 memory-system image of the paper's digit-level pipelining into the
 activation stage, cf. DSLOT-NN's pooled MSDF datapath).
 
-``execute_graph`` is the underlying pure function; the deprecated string
-``mode=`` API (models/cnn.py) calls it without precomputation.
+``execute_graph`` is the underlying pure function — the eager per-call
+path (weights flattened on every call) that the engine's build-once
+precomputation is asserted bitwise against in tests/test_engine.py.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import math
+import threading
+import warnings
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
@@ -218,6 +221,11 @@ def conv_layers_for_graph(cfg: CnnConfig, graph: LayerGraph) -> Dict[str, cyc.Co
 # ---------------------------------------------------------------------------
 
 
+# sentinel distinguishing "pad_to not passed" from an explicit None (which
+# also meant "use the device count" under the deprecated keyword)
+_PAD_TO_UNSET = object()
+
+
 class DslrEngine:
     """Compiled CNN: topology graph + build-time weight precomputation +
     jit-cached execution under one ``ExecutionPolicy``."""
@@ -268,6 +276,11 @@ class DslrEngine:
             self._exec_params = params
             self._exec_weights = None  # float/dslr consume the raw weights
         self._serve_sharding = None  # (n_dev, NamedSharding), built lazily
+        # with_policy memo + lock: the request server resolves engines from
+        # concurrent dispatcher/submitter threads, and every policy must map
+        # to ONE derived engine (so its jit/program identity is stable)
+        self._derived: Dict[ExecutionPolicy, "DslrEngine"] = {}
+        self._cache_lock = threading.Lock()
 
     def __call__(self, x: jax.Array) -> jax.Array:
         """x: (B, H, W, 3) -> logits (B, num_classes).  One compiled program
@@ -280,29 +293,55 @@ class DslrEngine:
         """Derived engine under a different policy, sharing this engine's
         already-flattened stationary weights (re-flattens nothing) — how the
         request-level server (serve/) materializes one engine per SLO class
-        from a single weight build."""
-        return DslrEngine(
-            self.cfg, self._params, policy, graph=self.graph, weights=self._weights
-        )
+        from a single weight build.  Memoized and thread-safe: concurrent
+        lookups of the same policy (dispatcher thread racing submitters)
+        return the same engine object."""
+        if policy == self.policy:
+            return self
+        with self._cache_lock:
+            engine = self._derived.get(policy)
+            if engine is None:
+                engine = DslrEngine(
+                    self.cfg, self._params, policy,
+                    graph=self.graph, weights=self._weights,
+                )
+                self._derived[policy] = engine
+        return engine
 
-    def serve(self, x_batch: jax.Array, pad_to: Optional[int] = None) -> jax.Array:
+    def serve(self, x_batch: jax.Array, pad_to=_PAD_TO_UNSET) -> jax.Array:
         """Batch-sharded inference — kept as a thin batch-level shim over
         ``__call__`` (request-level serving lives in ``repro.serve``).  The
         batch axis spreads across the data axis of a device mesh (rules from
         launch/mesh.py), everything else is replicated.  Ragged batches are
-        zero-padded up to ``pad_to`` (default: the device count) rounded to a
-        device multiple, then sliced back: zero rows cannot raise the
-        per-tensor quantization scale, and under per-sample scales every row
-        quantizes independently, so the padding is exact by construction
-        either way."""
-        if self._serve_sharding is None:
-            from repro.launch import mesh as mesh_lib
+        zero-padded up to ``policy.serve_pad_to`` (default: the device count)
+        rounded to a device multiple, then sliced back: zero rows cannot
+        raise the per-tensor quantization scale, and under per-sample scales
+        every row quantizes independently, so the padding is exact by
+        construction either way.
 
-            devs = jax.devices()
-            mesh = jax.make_mesh((len(devs), 1), ("data", "model"))
-            batch_axis = mesh_lib.rules_for(mesh)["batch"]
-            self._serve_sharding = (len(devs), NamedSharding(mesh, P(batch_axis)))
-        n_dev, sharding = self._serve_sharding
+        Passing ``pad_to=`` here is deprecated: padding is batching *policy*,
+        so it lives on ``ExecutionPolicy.serve_pad_to`` with the rest of the
+        execution knobs (one hashable identity per program)."""
+        if pad_to is _PAD_TO_UNSET:
+            pad_to = self.policy.serve_pad_to
+        else:
+            warnings.warn(
+                "DslrEngine.serve(pad_to=) is deprecated; set "
+                "ExecutionPolicy(serve_pad_to=...) instead",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+        with self._cache_lock:
+            if self._serve_sharding is None:
+                from repro.launch import mesh as mesh_lib
+
+                devs = jax.devices()
+                mesh = jax.make_mesh((len(devs), 1), ("data", "model"))
+                batch_axis = mesh_lib.rules_for(mesh)["batch"]
+                self._serve_sharding = (
+                    len(devs), NamedSharding(mesh, P(batch_axis))
+                )
+            n_dev, sharding = self._serve_sharding
         mult = n_dev if pad_to is None else math.lcm(int(pad_to), n_dev)
         B = x_batch.shape[0]
         Bp = -(-B // mult) * mult

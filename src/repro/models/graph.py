@@ -148,6 +148,10 @@ class ExecutionPolicy:
     # batchmate, bucket zero-padding) cannot perturb a sample's output —
     # the request-level serving contract (serve/).
     per_sample_scales: bool = False
+    # batch-padding multiple for DslrEngine.serve (None = the device count);
+    # policy rather than a per-call knob so every execution detail that
+    # shapes a compiled program lives on one hashable identity
+    serve_pad_to: Optional[int] = None
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -178,6 +182,10 @@ class ExecutionPolicy:
                     raise ValueError(
                         f"layer budget {name}={k} outside [1, {self.n_planes}]"
                     )
+        if self.serve_pad_to is not None and self.serve_pad_to < 1:
+            raise ValueError(
+                f"serve_pad_to={self.serve_pad_to} must be >= 1 (or None)"
+            )
 
     @property
     def n_planes(self) -> int:

@@ -1,11 +1,14 @@
 """Request-level serving for the DSLR-CNN engine.
 
 ``DslrServer`` turns the batch-level ``DslrEngine`` into a request-native
-runtime: Future-style ``submit``, size-bucket micro-batching with one
-compiled program per (bucket, policy), planner-solved SLO classes, exact
-per-sample quantization scales, and the MSDF anytime channel (k-digit
-partial results with sound error bounds).  See serve/server.py for the
-lifecycle and docs/ARCHITECTURE.md#the-serving-runtime for the diagram.
+asynchronous runtime: Future-style ``submit`` with per-request deadlines, a
+background dispatcher thread with deadline-based continuous batching and
+admission control (``ServerOverloaded``), one compiled program per (bucket,
+policy), planner-solved SLO classes, exact per-sample quantization scales,
+and the MSDF anytime channel (k-digit partial results with sound error
+bounds).  See serve/server.py for the lifecycle and
+docs/ARCHITECTURE.md#the-serving-runtime for the diagram.
 """
+from .dispatcher import Dispatcher, ServerOverloaded  # noqa: F401
 from .server import AnytimeResult, DslrServer, ResultHandle  # noqa: F401
 from .slo import DEFAULT_SLOS, SloClass, resolve_policy, slo_table  # noqa: F401

@@ -1,0 +1,280 @@
+"""Background dispatcher: deadline-based continuous batching for DslrServer.
+
+The synchronous ``DslrServer.flush`` made the submitting thread do the
+compute, so one slow (``exact``-budget) request stalled every queued request
+behind it.  This module owns the asynchronous request lifecycle instead — the
+thread architecture of the MaxText MLPerf harness (worker loops draining
+backpressure queues through per-bucket cached programs) applied to the DSLR
+digit-plane engine:
+
+  * **one daemon worker thread** drains the submit queue.  Submitting threads
+    only validate + enqueue; all jax dispatch happens on the worker.
+  * **deadline-based flush** — every queued request carries a dwell deadline
+    (its SLO class's ``max_dwell_ms``, or a per-request ``deadline_ms``
+    override).  A wave launches when the oldest deadline nears (so a request
+    never waits past its dwell budget just to improve batching) or when a
+    group fills the largest size bucket (no point waiting once the bucket is
+    full).
+  * **continuous batching across SLO classes** — waves group by
+    ``(ExecutionPolicy, image shape)``, not by class name, so two tiers that
+    resolve to the same policy share waves (and the same compiled program).
+    Per-sample quantization scales keep every request's logits bitwise
+    independent of whoever shares its wave.
+  * **admission control with load shedding** — ``submit`` projects the queue
+    dwell this request would see (queue depth x an EWMA of the measured
+    per-request service time) and raises :class:`ServerOverloaded` when the
+    projection exceeds the request's own dwell budget, or when the queue hits
+    the hard ``max_queue`` cap.  Shedding at submit time keeps the failure
+    *fast and explicit* instead of a silently blown SLO.
+  * **clean shutdown** — ``drain()`` forces every queued request out (ignoring
+    deadlines) and blocks until in-flight waves complete; ``close()`` drains
+    and joins the worker.  ``pause()``/``resume()`` hold wave launches while
+    the queue keeps accepting (deterministic backpressure for tests).
+
+Wave selection is deterministic: among launch-ready groups, the one whose
+oldest request has the earliest deadline wins (ties broken by lowest request
+id), and requests within a wave ride in arrival order — so a given submission
+sequence always produces the same wave log.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+class ServerOverloaded(RuntimeError):
+    """Raised by ``submit`` when admission control projects that the request
+    would dwell in the queue longer than its SLO budget allows (or the hard
+    queue cap is hit).  The request was NOT enqueued; retry after ``drain()``
+    or with a larger ``deadline_ms``."""
+
+
+@dataclasses.dataclass
+class QueuedRequest:
+    """One admitted request waiting for (or riding) a wave.  ``group_key``
+    is ``(policy, image shape)`` — the continuous-batching identity; the
+    dwell ``deadline_t`` is monotonic-clock seconds."""
+
+    request_id: int
+    image: object  # jax.Array (H, W, C)
+    slo: str
+    anytime: Tuple[int, ...]
+    handle: object  # ResultHandle (server side sets results)
+    group_key: Tuple[object, ...]
+    submit_t: float
+    deadline_t: float
+
+
+class Dispatcher:
+    """Daemon worker thread + deadline-batched submit queue.
+
+    ``dispatch`` is the server's wave executor: it receives a list of
+    :class:`QueuedRequest` sharing one ``group_key`` and must complete (or
+    fail) every handle in it.  The dispatcher never touches jax itself.
+    """
+
+    def __init__(
+        self,
+        dispatch: Callable[[List[QueuedRequest]], None],
+        max_wave: int,
+        max_queue: Optional[int] = 256,
+        margin_s: float = 1e-3,
+        ema_alpha: float = 0.4,
+    ):
+        if max_wave < 1:
+            raise ValueError(f"max_wave must be >= 1, got {max_wave}")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1 or None, got {max_queue}")
+        self._dispatch = dispatch
+        self._max_wave = int(max_wave)
+        self._max_queue = max_queue
+        self._margin_s = float(margin_s)
+        self._ema_alpha = float(ema_alpha)
+        self._cond = threading.Condition()
+        self._pending: List[QueuedRequest] = []
+        self._inflight = 0
+        self._flush = False
+        self._paused = False
+        self._running = False
+        self._closed = False
+        self._thread: Optional[threading.Thread] = None
+        self._service_ema_s: Optional[float] = None
+        self.wave_seq = 0
+
+    # -- lifecycle -----------------------------------------------------------
+
+    @property
+    def running(self) -> bool:
+        return self._running
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def start(self) -> None:
+        with self._cond:
+            if self._running:
+                return
+            if self._closed:
+                raise RuntimeError("dispatcher already closed; build a new server")
+            self._running = True
+            self._thread = threading.Thread(
+                target=self._run, name="dslr-dispatcher", daemon=True
+            )
+            self._thread.start()
+
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Force every queued request out (deadlines ignored) and block until
+        the queue is empty and no wave is in flight."""
+        with self._cond:
+            if not self._running:
+                return
+            self._flush = True
+            self._cond.notify_all()
+            if not self._cond.wait_for(
+                lambda: not self._pending and self._inflight == 0, timeout
+            ):
+                raise TimeoutError(f"drain did not complete within {timeout} s")
+            self._flush = False
+
+    def close(self, timeout: Optional[float] = None) -> None:
+        """Drain, then stop and join the worker.  Idempotent."""
+        self.drain(timeout)
+        with self._cond:
+            if not self._running:
+                return
+            self._running = False
+            self._closed = True
+            self._cond.notify_all()
+            thread = self._thread
+        if thread is not None:
+            thread.join(timeout)
+
+    def pause(self) -> None:
+        """Hold wave launches (the queue keeps accepting submissions)."""
+        with self._cond:
+            self._paused = True
+
+    def resume(self) -> None:
+        with self._cond:
+            self._paused = False
+            self._cond.notify_all()
+
+    # -- submission-side -----------------------------------------------------
+
+    @property
+    def service_estimate_s(self) -> Optional[float]:
+        """EWMA of the measured per-request wave service time (None until the
+        first wave completes) — the admission controller's rate model."""
+        with self._cond:
+            return self._service_ema_s
+
+    def queue_depth(self) -> int:
+        with self._cond:
+            return len(self._pending) + self._inflight
+
+    def submit(self, req: QueuedRequest) -> None:
+        """Admit one request or raise :class:`ServerOverloaded`."""
+        with self._cond:
+            if not self._running:
+                raise RuntimeError("dispatcher is not running (start() the server)")
+            if self._max_queue is not None and len(self._pending) >= self._max_queue:
+                raise ServerOverloaded(
+                    f"queue full: {len(self._pending)} pending >= max_queue="
+                    f"{self._max_queue}; drain() or retry later"
+                )
+            budget_s = req.deadline_t - req.submit_t
+            est = self._service_ema_s
+            if est is not None:
+                projected_s = (len(self._pending) + self._inflight) * est
+                if projected_s > budget_s:
+                    raise ServerOverloaded(
+                        f"projected queue dwell {projected_s * 1e3:.1f} ms exceeds "
+                        f"the request's dwell budget {budget_s * 1e3:.1f} ms "
+                        f"({len(self._pending)} queued + {self._inflight} in flight "
+                        f"at ~{est * 1e3:.1f} ms/request); shed at admission"
+                    )
+            self._pending.append(req)
+            self._cond.notify_all()
+
+    def cancel(self, request_id: int) -> bool:
+        """Remove a not-yet-dispatched request.  False once its wave was
+        taken (or it already completed)."""
+        with self._cond:
+            for i, req in enumerate(self._pending):
+                if req.request_id == request_id:
+                    del self._pending[i]
+                    return True
+            return False
+
+    # -- worker loop ---------------------------------------------------------
+
+    def _groups(self) -> Dict[Tuple[object, ...], List[QueuedRequest]]:
+        groups: Dict[Tuple[object, ...], List[QueuedRequest]] = {}
+        for req in self._pending:  # arrival order preserved within a group
+            groups.setdefault(req.group_key, []).append(req)
+        return groups
+
+    def _take_wave(self, now: float) -> Optional[List[QueuedRequest]]:
+        """The next launch-ready wave, or None.  Caller holds the lock."""
+        if self._paused or not self._pending:
+            return None
+        force = self._flush or not self._running
+        best: Optional[List[QueuedRequest]] = None
+        best_key: Optional[Tuple[float, int]] = None
+        for reqs in self._groups().values():
+            ready = (
+                force
+                or len(reqs) >= self._max_wave
+                or min(r.deadline_t for r in reqs) - self._margin_s <= now
+            )
+            if not ready:
+                continue
+            key = (min(r.deadline_t for r in reqs), min(r.request_id for r in reqs))
+            if best_key is None or key < best_key:
+                best, best_key = reqs, key
+        if best is None:
+            return None
+        wave = best[: self._max_wave]
+        taken = {r.request_id for r in wave}
+        self._pending = [r for r in self._pending if r.request_id not in taken]
+        return wave
+
+    def _wait_timeout(self, now: float) -> Optional[float]:
+        if self._paused or not self._pending:
+            return None  # sleep until notified
+        nearest = min(r.deadline_t for r in self._pending)
+        return max(nearest - self._margin_s - now, 0.0)
+
+    def _run(self) -> None:
+        while True:
+            with self._cond:
+                wave = None
+                while wave is None:
+                    if not self._running and not self._pending:
+                        self._cond.notify_all()
+                        return
+                    now = time.monotonic()
+                    wave = self._take_wave(now)
+                    if wave is None:
+                        self._cond.wait(self._wait_timeout(now))
+                self._inflight += len(wave)
+                self.wave_seq += 1
+            t0 = time.monotonic()
+            try:
+                self._dispatch(wave)
+            except BaseException as e:  # noqa: BLE001 — worker must survive
+                for req in wave:
+                    req.handle._set_error(e)
+            finally:
+                per_req = (time.monotonic() - t0) / len(wave)
+                with self._cond:
+                    self._inflight -= len(wave)
+                    if self._service_ema_s is None:
+                        self._service_ema_s = per_req
+                    else:
+                        a = self._ema_alpha
+                        self._service_ema_s = a * per_req + (1 - a) * self._service_ema_s
+                    self._cond.notify_all()

@@ -2,46 +2,61 @@
 
 ``DslrEngine.serve`` is batch-level: the caller owns batching, and a
 per-tensor activation scale couples whoever lands in the same batch.
-``DslrServer`` is request-native:
+``DslrServer`` is request-native and (once started) asynchronous:
 
-  * ``submit(image, slo=..., anytime=...)`` returns a Future-style
-    ``ResultHandle`` immediately; nothing runs until a flush.
-  * The queue forms micro-batches by **size bucket**: pending requests of
-    one SLO class are chunked, each chunk zero-padded up to the smallest
-    configured bucket that fits, and dispatched through one jit program per
-    ``(bucket, policy)`` — a mixed stream of ragged request counts touches
-    only ``len(buckets) x len(slos)`` compiled programs, ever.
+  * ``submit(image, slo=..., anytime=..., deadline_ms=...)`` returns a
+    Future-style ``ResultHandle`` immediately; a background dispatcher
+    thread (serve/dispatcher.py) owns all compute.
+  * Waves form by **continuous batching**: pending requests group by
+    ``(ExecutionPolicy, image shape)`` — SLO classes that resolve to the
+    same policy share waves — chunk to the largest configured size bucket,
+    and zero-pad up to the smallest bucket that fits, so a mixed stream of
+    ragged request counts touches only ``len(buckets) x len(policies)``
+    compiled programs, ever.
+  * **Deadline-based flush**: each request carries a dwell deadline (its SLO
+    class's ``max_dwell_ms`` or a per-request ``deadline_ms`` override); a
+    wave launches when the oldest deadline nears or a bucket fills, so a
+    slow ``exact`` request can no longer stall a later ``fast`` one.
+  * **Admission control**: ``submit`` raises ``ServerOverloaded`` when the
+    projected queue dwell exceeds the request's budget (load shedding at the
+    door, not a silently blown SLO).
   * Per-sample quantization scales (``ExecutionPolicy.per_sample_scales``,
-    on by default here) make that composition *exact*: each request is
-    quantized against its own amax, so its logits are bitwise identical to
-    serving it alone — bucket padding rows and outlier batchmates cannot
-    perturb it.
+    on by default here) make the batching *exact*: each request is quantized
+    against its own amax, so its logits are bitwise identical to serving it
+    alone — wave composition, bucket padding rows, and outlier wave-mates
+    cannot perturb it.  Async and synchronous serving are therefore bitwise
+    interchangeable.
   * SLO classes resolve to planner-solved per-layer digit budgets
     (serve/slo.py) — precision/latency as a per-request knob.
   * The **anytime channel**: a request may ask for ``k``-digit partial
     results.  MSDF evaluation makes a ``k``-plane prefix a valid
     bounded-error answer, so the server runs the cheap prefix-budget
     programs and reports, per partial, the top-1 class and a sound error
-    bound versus the request's full-budget logits (per-layer anytime tail
-    bounds at calibrated activation scales, amplified through the
-    downstream Lipschitz gains — conservative, see docs/NUMERICS.md).
+    bound versus the request's full-budget logits.
 
-Everything is synchronous and deterministic: ``flush()`` drains the queue in
-arrival order; ``handle.result()`` flushes on demand.  The batch-level
-``engine.serve`` remains as a thin shim for callers that already hold a
-batch.
+Lifecycle: ``with DslrServer(engine) as server`` starts the dispatcher and
+drains + joins it on exit; explicitly, ``start()`` / ``drain()`` /
+``close()``.  A server that is never started keeps the deterministic
+synchronous path: ``flush()`` drains the queue in the submitting thread and
+``handle.result()`` flushes on demand — the reference the async path is
+asserted bitwise against.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, NamedTuple, Optional, Sequence, Set, Tuple
+import threading
+import time
+from concurrent.futures import CancelledError
+from typing import Dict, List, NamedTuple, Optional, Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.models.engine import DslrEngine
+from repro.core import cycle_model as cyc
+from repro.models.engine import DslrEngine, conv_layers_for_graph
 from repro.models.graph import ExecutionPolicy
 
+from .dispatcher import Dispatcher, QueuedRequest, ServerOverloaded
 from .slo import DEFAULT_SLOS, SloClass, resolve_policy, slo_table
 
 
@@ -49,7 +64,7 @@ class AnytimeResult(NamedTuple):
     """One ``k``-digit partial answer: the prefix-budget logits, their top-1
     class, and a conservative bound on ``max|partial - full|`` (worst-case
     Lipschitz composition of the per-layer anytime tails at the dispatch
-    batch's calibrated activation scales — see ``DslrServer._anytime_bounds``
+    wave's calibrated activation scales — see ``DslrServer._anytime_bounds``
     for the derivation and its one approximation)."""
 
     budget: int
@@ -59,24 +74,57 @@ class AnytimeResult(NamedTuple):
 
 
 class ResultHandle:
-    """Future-style handle for one submitted request.  ``result()`` flushes
-    the server's queue if the request is still pending."""
+    """Future-style handle for one submitted request.
+
+    ``result(timeout=None)`` blocks until the dispatcher completes the
+    request (raising ``TimeoutError`` on expiry); on a never-started server
+    it synchronously flushes the queue instead.  ``done()`` is a pure query
+    — it never triggers compute.  ``cancel()`` withdraws a request that no
+    wave has picked up yet; a cancelled handle's ``result()`` raises
+    ``concurrent.futures.CancelledError``.
+    """
 
     def __init__(self, server: "DslrServer", request_id: int, slo: str):
         self._server = server
         self.request_id = request_id
         self.slo = slo
+        self._event = threading.Event()
         self._logits: Optional[jax.Array] = None
         self._partials: Tuple[AnytimeResult, ...] = ()
+        self._error: Optional[BaseException] = None
+        self._cancelled = False
+        self.submit_time = time.monotonic()
+        self.done_time: Optional[float] = None  # set at completion
+        self.wave_seq: Optional[int] = None  # dispatch order (1-based)
 
-    @property
     def done(self) -> bool:
-        return self._logits is not None
+        """True once the request completed, errored, or was cancelled.
+        Never dispatches anything (unlike the pre-async API, where the flush
+        side-channel in ``result`` made ``done`` observable state mutate)."""
+        return self._event.is_set()
 
-    def result(self) -> jax.Array:
-        """The request's logits (num_classes,) under its SLO's policy."""
-        if not self.done:
-            self._server.flush()
+    def cancel(self) -> bool:
+        """Withdraw the request if no wave has picked it up yet.  Returns
+        True when cancelled; False once dispatched (or already done)."""
+        return self._server._cancel(self)
+
+    def result(self, timeout: Optional[float] = None) -> jax.Array:
+        """The request's logits (num_classes,) under its SLO's policy.
+        Blocks up to ``timeout`` seconds (None = forever) on a started
+        server; synchronously flushes a never-started server's queue."""
+        if not self._event.is_set():
+            if self._server.running:
+                if not self._event.wait(timeout):
+                    raise TimeoutError(
+                        f"request {self.request_id} ({self.slo}) not done "
+                        f"within {timeout} s"
+                    )
+            else:
+                self._server.flush()
+        if self._cancelled:
+            raise CancelledError(f"request {self.request_id} was cancelled")
+        if self._error is not None:
+            raise self._error
         assert self._logits is not None
         return self._logits
 
@@ -91,19 +139,41 @@ class ResultHandle:
         self.result()
         return self._partials
 
+    # -- completion (dispatcher / flush side) --------------------------------
 
-@dataclasses.dataclass
-class _Request:
-    image: jax.Array  # (H, W, C)
-    slo: str
-    anytime: Tuple[int, ...]
-    handle: ResultHandle
+    def _set_result(
+        self, logits: jax.Array, partials: Tuple[AnytimeResult, ...], wave_seq: int
+    ) -> None:
+        self._logits = logits
+        self._partials = partials
+        self.wave_seq = wave_seq
+        self.done_time = time.monotonic()
+        self._event.set()
+        self._server._completed(self)
+
+    def _set_error(self, error: BaseException) -> None:
+        self._error = error
+        self.done_time = time.monotonic()
+        self._event.set()
+        self._server._completed(self)
+
+    def _set_cancelled(self) -> None:
+        self._cancelled = True
+        self.done_time = time.monotonic()
+        self._event.set()
 
 
 class DslrServer:
-    """Request-level serving runtime: micro-batching by size bucket, one
-    compiled program per (bucket, policy), SLO classes solved by the budget
-    planner, per-sample quantization scales, anytime partial results."""
+    """Request-level serving runtime: background dispatcher with
+    deadline-based continuous batching, one compiled program per (bucket,
+    policy), SLO classes solved by the budget planner, per-sample
+    quantization scales, anytime partial results.
+
+    ``max_queue`` caps the dispatcher's submit queue (admission control's
+    hard backstop); ``dispatch_margin_ms`` is how far before a dwell
+    deadline a wave launches; ``default_dwell_ms`` is the dwell budget of
+    explicit ``policies=`` tiers (named SLO classes carry their own).
+    """
 
     def __init__(
         self,
@@ -112,11 +182,10 @@ class DslrServer:
         buckets: Sequence[int] = (1, 2, 4, 8),
         per_sample_scales: bool = True,
         policies: Optional[Dict[str, ExecutionPolicy]] = None,
+        max_queue: Optional[int] = 256,
+        dispatch_margin_ms: float = 1.0,
+        default_dwell_ms: float = 200.0,
     ):
-        """``policies`` adds named tiers with *explicit* ExecutionPolicies
-        (e.g. hand-set or externally-planned budgets) next to the
-        planner-solved ``slos``; ``per_sample_scales`` is applied to them
-        like to everything else."""
         if engine.policy.mode != "dslr_planes":
             raise ValueError(
                 f"DslrServer needs a dslr_planes-mode engine, got {engine.policy.mode!r}"
@@ -130,41 +199,108 @@ class DslrServer:
             engine.policy, per_sample_scales=per_sample_scales
         )
         self._donor = engine  # weight donor: with_policy shares flat weights
-        self._engines: Dict[ExecutionPolicy, DslrEngine] = {}
         self._slo_policies: Dict[str, ExecutionPolicy] = {}
+        self._default_dwell_ms = float(default_dwell_ms)
         for name, pol in (policies or {}).items():
             if name in self.slos:
                 raise ValueError(f"explicit policy {name!r} shadows an SLO class")
             self._slo_policies[name] = dataclasses.replace(
                 pol, per_sample_scales=per_sample_scales
             )
-        self._queue: list[_Request] = []
+        # _lock guards policy resolution, the sync queue, stats, and the
+        # completion log — submitters and the dispatcher thread share them
+        self._lock = threading.RLock()
+        self._queue: List[QueuedRequest] = []
         self._next_id = 0
         self._gains: Optional[Dict[str, float]] = None
         self._row_l1: Optional[Dict[str, float]] = None
+        self._predicted_ms: Dict[str, float] = {}
+        self._dispatcher = Dispatcher(
+            dispatch=self._dispatch_wave,
+            max_wave=buckets[-1],
+            max_queue=max_queue,
+            margin_s=float(dispatch_margin_ms) * 1e-3,
+        )
         # every (bucket, policy) this server has dispatched — the program
         # cache keyspace (jax's jit cache holds the programs themselves)
         self.program_keys: Set[Tuple[int, ExecutionPolicy]] = set()
-        self.stats = {"requests": 0, "dispatches": 0, "padded_rows": 0}
+        self.stats = {
+            "requests": 0,
+            "dispatches": 0,
+            "padded_rows": 0,
+            "shed": 0,
+            "cancelled": 0,
+        }
+        self.wave_log: List[Tuple[int, ...]] = []  # request ids per wave
+        self.completion_order: List[int] = []  # request ids as results land
+
+    # -- lifecycle -----------------------------------------------------------
+
+    @property
+    def running(self) -> bool:
+        """True while the background dispatcher thread is live."""
+        return self._dispatcher.running
+
+    def start(self) -> "DslrServer":
+        """Start the background dispatcher (idempotent).  Until started, the
+        server runs the synchronous path (``flush`` in the caller's thread)."""
+        self._dispatcher.start()
+        return self
+
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Force every queued request out (deadlines ignored) and block until
+        all in-flight waves complete.  On a never-started server this is
+        ``flush()``."""
+        if self.running:
+            self._dispatcher.drain(timeout)
+        else:
+            self.flush()
+
+    def close(self, timeout: Optional[float] = None) -> None:
+        """Drain, then stop and join the dispatcher.  A closed server rejects
+        further submissions; build a new server to restart (engines and their
+        compiled programs are reusable across servers)."""
+        self._dispatcher.close(timeout)
+
+    def __enter__(self) -> "DslrServer":
+        return self.start()
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
+    def pause(self) -> None:
+        """Hold wave launches while the queue keeps accepting — deterministic
+        backpressure (tests, maintenance windows)."""
+        self._dispatcher.pause()
+
+    def resume(self) -> None:
+        self._dispatcher.resume()
+
+    @property
+    def service_estimate_s(self) -> Optional[float]:
+        """The admission controller's EWMA of per-request service time."""
+        return self._dispatcher.service_estimate_s
 
     # -- policy / engine resolution -----------------------------------------
 
     def policy_for(self, slo: str) -> ExecutionPolicy:
         """The solved ExecutionPolicy of an SLO class (planner budgets for
-        planned tiers, full precision for exact tiers)."""
-        if slo not in self._slo_policies:
-            if slo not in self.slos:
-                have = sorted(set(self.slos) | set(self._slo_policies))
-                raise ValueError(f"unknown SLO class {slo!r} (have {have})")
-            self._slo_policies[slo] = resolve_policy(
-                self._donor, self.slos[slo], self._base_policy
-            )
-        return self._slo_policies[slo]
+        planned tiers, full precision for exact tiers).  Thread-safe: the
+        planner solve runs at most once per tier."""
+        with self._lock:
+            if slo not in self._slo_policies:
+                if slo not in self.slos:
+                    have = sorted(set(self.slos) | set(self._slo_policies))
+                    raise ValueError(f"unknown SLO class {slo!r} (have {have})")
+                self._slo_policies[slo] = resolve_policy(
+                    self._donor, self.slos[slo], self._base_policy
+                )
+            return self._slo_policies[slo]
 
     def _engine_for(self, policy: ExecutionPolicy) -> DslrEngine:
-        if policy not in self._engines:
-            self._engines[policy] = self._donor.with_policy(policy)
-        return self._engines[policy]
+        # DslrEngine.with_policy is a thread-safe memo sharing the donor's
+        # flattened weights, so concurrent lookups return one engine
+        return self._donor.with_policy(policy)
 
     def _prefix_policy(self, policy: ExecutionPolicy, k: int) -> ExecutionPolicy:
         """The ``k``-plane prefix of a policy's budgets (the anytime
@@ -181,6 +317,33 @@ class DslrServer:
             return policy
         return dataclasses.replace(policy, digit_budget=k, layer_budgets=None)
 
+    def dwell_budget_ms(self, slo: str) -> float:
+        """The queue-dwell budget of a tier: its SLO class's ``max_dwell_ms``
+        (explicit ``policies=`` tiers use the server's ``default_dwell_ms``)."""
+        if slo in self.slos:
+            return self.slos[slo].max_dwell_ms
+        return self._default_dwell_ms
+
+    def predicted_compute_ms(self, slo: str) -> float:
+        """Planner-predicted compute time of one request under a tier's
+        solved budgets: the Eq.-3 cycle count of every conv layer at its
+        effective digit budget, at the accelerator clock.  The floor a
+        ``deadline_ms`` override must clear — no dwell budget can beat the
+        compute itself."""
+        with self._lock:
+            if slo not in self._predicted_ms:
+                policy = self.policy_for(slo)
+                dims = conv_layers_for_graph(self._donor.cfg, self._donor.graph)
+                cycles = sum(
+                    cyc.dslr_cycles(
+                        dims[n.name],
+                        precision=policy.budget_for(n.name) or policy.n_planes,
+                    )
+                    for n in self._donor.graph.conv_nodes
+                )
+                self._predicted_ms[slo] = cycles / cyc.FREQ_HZ * 1e3
+            return self._predicted_ms[slo]
+
     # -- submission ----------------------------------------------------------
 
     def submit(
@@ -188,11 +351,19 @@ class DslrServer:
         image: jax.Array,
         slo: str = "balanced",
         anytime: Sequence[int] = (),
+        deadline_ms: Optional[float] = None,
     ) -> ResultHandle:
         """Enqueue one request.  ``image``: (H, W, C) float.  ``anytime``
         asks for k-digit partial results (MSDF prefix budgets) alongside the
-        full answer.  Returns immediately; ``handle.result()`` (or an
-        explicit ``flush()``) dispatches the queue."""
+        full answer.  ``deadline_ms`` overrides the SLO class's queue-dwell
+        budget for this request; it must clear the tier's planner-predicted
+        compute time.  Returns immediately.  On a started server the
+        background dispatcher batches and executes (``submit`` raises
+        ``ServerOverloaded`` when the projected queue dwell exceeds the
+        budget); on a never-started server, ``handle.result()`` or an
+        explicit ``flush()`` dispatches synchronously."""
+        if self._dispatcher.closed:
+            raise RuntimeError("server is closed; build a new DslrServer")
         image = jnp.asarray(image, jnp.float32)
         if image.ndim != 3:
             raise ValueError(f"image must be (H, W, C), got shape {image.shape}")
@@ -203,11 +374,67 @@ class DslrServer:
                 raise ValueError(
                     f"anytime budget {k} outside [1, {policy.n_planes}]"
                 )
-        handle = ResultHandle(self, self._next_id, slo)
-        self._next_id += 1
-        self._queue.append(_Request(image, slo, anytime, handle))
-        self.stats["requests"] += 1
+        if deadline_ms is not None:
+            floor_ms = self.predicted_compute_ms(slo)
+            if deadline_ms < floor_ms:
+                raise ValueError(
+                    f"deadline_ms={deadline_ms} is below the {slo!r} tier's "
+                    f"planner-predicted compute time {floor_ms:.4f} ms — no "
+                    f"queue policy can meet it; raise the deadline or pick a "
+                    f"faster SLO class"
+                )
+            dwell_ms = float(deadline_ms)
+        else:
+            dwell_ms = self.dwell_budget_ms(slo)
+        with self._lock:
+            request_id = self._next_id
+            self._next_id += 1
+        handle = ResultHandle(self, request_id, slo)
+        req = QueuedRequest(
+            request_id=request_id,
+            image=image,
+            slo=slo,
+            anytime=anytime,
+            handle=handle,
+            group_key=(policy, tuple(image.shape)),
+            submit_t=handle.submit_time,
+            deadline_t=handle.submit_time + dwell_ms * 1e-3,
+        )
+        if self.running:
+            try:
+                self._dispatcher.submit(req)
+            except ServerOverloaded:
+                with self._lock:
+                    self.stats["shed"] += 1
+                raise
+        else:
+            with self._lock:
+                self._queue.append(req)
+        with self._lock:
+            self.stats["requests"] += 1
         return handle
+
+    def _cancel(self, handle: ResultHandle) -> bool:
+        if handle.done():
+            return False
+        if self.running:
+            removed = self._dispatcher.cancel(handle.request_id)
+        else:
+            with self._lock:
+                n = len(self._queue)
+                self._queue = [
+                    r for r in self._queue if r.request_id != handle.request_id
+                ]
+                removed = len(self._queue) < n
+        if removed:
+            handle._set_cancelled()
+            with self._lock:
+                self.stats["cancelled"] += 1
+        return removed
+
+    def _completed(self, handle: ResultHandle) -> None:
+        with self._lock:
+            self.completion_order.append(handle.request_id)
 
     # -- dispatch ------------------------------------------------------------
 
@@ -218,19 +445,27 @@ class DslrServer:
         return self.buckets[-1]
 
     def flush(self) -> None:
-        """Drain the queue: group by (SLO, image shape) in arrival order,
-        chunk to the largest bucket, pad each chunk to its bucket, dispatch."""
-        queue, self._queue = self._queue, []
-        groups: Dict[Tuple[str, Tuple[int, ...]], list[_Request]] = {}
+        """Synchronously drain the queue in the calling thread: group by
+        (policy, image shape) in arrival order, chunk to the largest bucket,
+        dispatch.  On a started server this delegates to ``drain()`` — the
+        dispatcher owns the queue there."""
+        if self.running:
+            self.drain()
+            return
+        with self._lock:
+            queue, self._queue = self._queue, []
+        groups: Dict[Tuple[object, ...], List[QueuedRequest]] = {}
         for r in queue:
-            groups.setdefault((r.slo, r.image.shape), []).append(r)
-        for (slo, _shape), reqs in groups.items():
-            policy = self.policy_for(slo)
+            groups.setdefault(r.group_key, []).append(r)
+        for reqs in groups.values():
             while reqs:
                 chunk, reqs = reqs[: self.buckets[-1]], reqs[self.buckets[-1]:]
-                self._dispatch(policy, chunk)
+                self._dispatch_wave(chunk)
 
-    def _dispatch(self, policy: ExecutionPolicy, chunk: list[_Request]) -> None:
+    def _dispatch_wave(self, chunk: List[QueuedRequest]) -> None:
+        """Execute one wave (all requests share a (policy, shape) group key).
+        Runs on the dispatcher thread (async) or the caller (sync flush)."""
+        policy = chunk[0].group_key[0]
         engine = self._engine_for(policy)
         bucket = self._bucket_for(len(chunk))
         xb = jnp.stack([r.image for r in chunk])
@@ -238,13 +473,10 @@ class DslrServer:
             xb = jnp.pad(
                 xb, ((0, bucket - len(chunk)), (0, 0), (0, 0), (0, 0))
             )
-            self.stats["padded_rows"] += bucket - len(chunk)
-        self.program_keys.add((bucket, policy))
         logits = engine(xb)
-        self.stats["dispatches"] += 1
 
         # anytime channel: one prefix program per distinct requested budget
-        # in this chunk (per-sample scales make the grouping invisible to
+        # in this wave (per-sample scales make the grouping invisible to
         # each request's values)
         ks = sorted({k for r in chunk for k in r.anytime})
         partials_by_k: Dict[int, jax.Array] = {}
@@ -257,19 +489,32 @@ class DslrServer:
                     partials_by_k[k] = logits
                     bounds_by_k[k] = 0.0
                 else:
-                    self.program_keys.add((bucket, pk))
                     partials_by_k[k] = self._engine_for(pk)(xb)
 
+        with self._lock:
+            self.stats["dispatches"] += 1
+            self.stats["padded_rows"] += bucket - len(chunk)
+            self.program_keys.add((bucket, policy))
+            for k in ks:
+                pk = self._prefix_policy(policy, k)
+                if pk != policy:
+                    self.program_keys.add((bucket, pk))
+            self.wave_log.append(tuple(r.request_id for r in chunk))
+            wave_seq = len(self.wave_log)
+
         for i, r in enumerate(chunk):
-            r.handle._logits = logits[i]
-            r.handle._partials = tuple(
-                AnytimeResult(
-                    budget=k,
-                    logits=partials_by_k[k][i],
-                    top1=int(jnp.argmax(partials_by_k[k][i])),
-                    bound=bounds_by_k[k],
-                )
-                for k in r.anytime
+            r.handle._set_result(
+                logits[i],
+                tuple(
+                    AnytimeResult(
+                        budget=k,
+                        logits=partials_by_k[k][i],
+                        top1=int(jnp.argmax(partials_by_k[k][i])),
+                        bound=bounds_by_k[k],
+                    )
+                    for k in r.anytime
+                ),
+                wave_seq,
             )
 
     # -- anytime error bounds --------------------------------------------------
@@ -280,7 +525,7 @@ class DslrServer:
         """Conservative bound on ``max|partial_k - full|`` per requested
         budget: each conv layer truncated below its policy budget
         contributes its anytime tail bound (2 * scale * 2**-k_eff *
-        ||W_col||_1, at the batch's calibrated activation scale — an upper
+        ||W_col||_1, at the wave's calibrated activation scale — an upper
         bound on any single sample's scale), amplified by the layer output's
         downstream worst-case Lipschitz gain (``engine.node_gains``), summed
         over layers.  One approximation: the calibration scales come from
@@ -290,14 +535,16 @@ class DslrServer:
         worst-case gain composition (docs/NUMERICS.md measures probes far
         below Lipschitz; dominance over the measured error is asserted in
         tests and the serve benchmark)."""
-        if self._gains is None:
-            self._gains = engine.node_gains()
-            self._row_l1 = {
-                n.name: float(
-                    jnp.max(jnp.sum(jnp.abs(engine._weights[n.name][0]), axis=0))
-                )
-                for n in engine.graph.conv_nodes
-            }
+        with self._lock:
+            if self._gains is None:
+                self._gains = engine.node_gains()
+                self._row_l1 = {
+                    n.name: float(
+                        jnp.max(jnp.sum(jnp.abs(engine._weights[n.name][0]), axis=0))
+                    )
+                    for n in engine.graph.conv_nodes
+                }
+            gains, row_l1 = self._gains, self._row_l1
         scales = engine.calibration_scales(xb)
         pol = engine.policy
         out: Dict[int, float] = {}
@@ -308,7 +555,7 @@ class DslrServer:
                 k_eff = min(int(k), full)
                 if k_eff < full:
                     tail = 2.0 * scales[node.name] * 2.0 ** -k_eff
-                    total += self._gains[node.name] * tail * self._row_l1[node.name]
+                    total += gains[node.name] * tail * row_l1[node.name]
             out[k] = total
         return out
 

@@ -16,8 +16,15 @@ precision scaling surfaced as a serving knob: MSDF arithmetic makes
 precision/latency a per-request decision, the planner makes it a *solved*
 one.
 
-``SloClass.cycle_fraction`` is the knob; define your own tiers by passing a
-custom mapping to ``DslrServer(slos=...)``.
+Each class additionally carries ``max_dwell_ms`` — the queue-dwell budget the
+async dispatcher (serve/dispatcher.py) batches under: a request may wait in
+the submit queue up to that long to improve wave batching, never longer, and
+admission control sheds a request whose projected queue dwell already exceeds
+it.  ``submit(..., deadline_ms=)`` overrides the class dwell per request.
+
+``SloClass.cycle_fraction`` is the precision knob and ``max_dwell_ms`` the
+latency knob; define your own tiers by passing a custom mapping to
+``DslrServer(slos=...)``.
 """
 from __future__ import annotations
 
@@ -30,24 +37,28 @@ from repro.models.graph import ExecutionPolicy
 
 @dataclasses.dataclass(frozen=True)
 class SloClass:
-    """One service level: a name plus the fraction of the full-precision
+    """One service level: a name, the fraction of the full-precision
     predicted cycle count the planner may spend (``None`` = full precision,
-    no planning)."""
+    no planning), and the max queue dwell the async dispatcher may batch
+    under (milliseconds)."""
 
     name: str
     cycle_fraction: Optional[float]
+    max_dwell_ms: float = 200.0
 
     def __post_init__(self):
         if self.cycle_fraction is not None and not 0.0 < self.cycle_fraction <= 1.0:
             raise ValueError(
                 f"cycle_fraction={self.cycle_fraction} outside (0, 1]"
             )
+        if not self.max_dwell_ms > 0.0:
+            raise ValueError(f"max_dwell_ms={self.max_dwell_ms} must be > 0")
 
 
 DEFAULT_SLOS: Tuple[SloClass, ...] = (
-    SloClass("fast", 0.35),
-    SloClass("balanced", 0.60),
-    SloClass("exact", None),
+    SloClass("fast", 0.35, max_dwell_ms=50.0),
+    SloClass("balanced", 0.60, max_dwell_ms=200.0),
+    SloClass("exact", None, max_dwell_ms=1000.0),
 )
 
 

@@ -138,14 +138,15 @@ def test_prefill_then_decode_consistency(arch_id):
 
 
 def test_cnn_stacks_float_vs_dslr():
-    from repro.models.cnn import CnnConfig, cnn_apply, cnn_spec
+    from repro.models.engine import compile_cnn
+    from repro.models.graph import CnnConfig, ExecutionPolicy, graph_spec
 
     for name in ("alexnet", "resnet18"):
         cfg = CnnConfig(name=name, width=0.05)
-        params = cm.init_params(cnn_spec(cfg), jax.random.PRNGKey(0))
+        params = cm.init_params(graph_spec(cfg), jax.random.PRNGKey(0))
         x = jnp.asarray(
             np.random.default_rng(0).standard_normal((1, 32, 32, 3)), jnp.float32
         )
-        yf = cnn_apply(cfg, params, x, mode="float")
+        yf = compile_cnn(cfg, params, ExecutionPolicy(mode="float"))(x)
         assert yf.shape == (1, cfg.num_classes)
         assert bool(jnp.all(jnp.isfinite(yf)))

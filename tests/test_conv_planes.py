@@ -9,7 +9,7 @@ Checks, in interpret mode on CPU:
     2**-(k-1) bound and the error decays monotonically (within float noise),
   * zero-plane skipping changes nothing,
   * im2col_planes commutes with the digit decomposition,
-  * the model-level ``mode='dslr_planes'`` and the ``infer_cnn`` entrypoint.
+  * the model-level dslr_planes path through the compiled engine.
 """
 import numpy as np
 import pytest
@@ -21,7 +21,8 @@ from repro.core import dslr as core_dslr
 from repro.core import online
 from repro.kernels import ops, ref
 from repro.models import common as cm
-from repro.models.cnn import CnnConfig, cnn_apply, cnn_spec, infer_cnn
+from repro.models.engine import compile_cnn
+from repro.models.graph import CnnConfig, ExecutionPolicy, graph_spec
 
 
 def rand_conv(seed, B=1, H=8, W=8, Cin=3, Cout=4, K=3):
@@ -161,42 +162,41 @@ def test_im2col_planes_commutes_with_decomposition():
 
 def test_cnn_mode_dslr_planes_close_to_float():
     cfg = CnnConfig(name="alexnet", width=0.02, num_classes=4)
-    params = cm.init_params(cnn_spec(cfg), jax.random.PRNGKey(0))
+    params = cm.init_params(graph_spec(cfg), jax.random.PRNGKey(0))
     x = jnp.asarray(
         np.random.default_rng(0).standard_normal((1, 16, 16, 3)), jnp.float32
     )
-    yf = cnn_apply(cfg, params, x, mode="float")
-    yp = cnn_apply(cfg, params, x, mode="dslr_planes")
+    yf = compile_cnn(cfg, params, ExecutionPolicy(mode="float"))(x)
+    yp = compile_cnn(cfg, params, ExecutionPolicy())(x)
     rel = float(jnp.max(jnp.abs(yf - yp)) / (jnp.max(jnp.abs(yf)) + 1e-9))
     assert rel < 0.2, rel  # 8-bit quantization compounds across the stack
 
 
-def test_infer_cnn_jit_batched():
+def test_engine_jit_batched():
     cfg = CnnConfig(name="resnet18", width=0.02, num_classes=3)
-    params = cm.init_params(cnn_spec(cfg), jax.random.PRNGKey(1))
+    params = cm.init_params(graph_spec(cfg), jax.random.PRNGKey(1))
     x = jnp.asarray(
         np.random.default_rng(1).standard_normal((2, 16, 16, 3)), jnp.float32
     )
-    y = infer_cnn(cfg, params, x, mode="dslr_planes")
+    engine = compile_cnn(cfg, params, ExecutionPolicy())
+    y = engine(x)
     assert y.shape == (2, 3)
-    # same compiled program, float mode, must agree with eager apply exactly
-    yf = infer_cnn(cfg, params, x, mode="float")
-    yf_eager = cnn_apply(cfg, params, x, mode="float")
-    np.testing.assert_allclose(np.asarray(yf), np.asarray(yf_eager), rtol=1e-5)
     # per-sample run agrees to quantization precision (the activation scale
-    # is per-tensor, so batching couples the quantization grid slightly)
-    y0 = infer_cnn(cfg, params, x[:1], mode="dslr_planes")
+    # is per-tensor here, so batching couples the quantization grid slightly)
+    y0 = engine(x[:1])
     rel = float(jnp.max(jnp.abs(y[:1] - y0)) / (jnp.max(jnp.abs(y)) + 1e-9))
     assert rel < 0.1, rel
+    # ...and under per-sample scales (the serving contract) it agrees exactly
+    eng_ps = compile_cnn(cfg, params, ExecutionPolicy(per_sample_scales=True))
+    np.testing.assert_array_equal(
+        np.asarray(eng_ps(x)[:1]), np.asarray(eng_ps(x[:1]))
+    )
 
 
 def test_cnn_unknown_mode_raises():
-    cfg = CnnConfig(name="alexnet", width=0.02)
-    params = cm.init_params(cnn_spec(cfg), jax.random.PRNGKey(0))
-    x = jnp.zeros((1, 8, 8, 3))
     with pytest.raises(ValueError):
-        cnn_apply(cfg, params, x, mode="nope")
+        ExecutionPolicy(mode="nope")
     with pytest.raises(ValueError):
         # digit budgets only make sense on the planes path — reject silently
         # measuring nothing in a precision sweep run in the wrong mode
-        cnn_apply(cfg, params, x, mode="dslr", digit_budget=2)
+        ExecutionPolicy(mode="dslr", digit_budget=2)

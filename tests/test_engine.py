@@ -1,9 +1,9 @@
 """The compiled layer-graph engine (models/graph.py + models/engine.py).
 
 Checks, in interpret mode on CPU:
-  * ``compile_cnn(cfg, params, policy)(x)`` matches the deprecated
-    ``cnn_apply(..., mode='dslr_planes')`` shim bit-for-bit at uniform
-    budgets (and the jitted ``infer_cnn`` entrypoint),
+  * ``compile_cnn(cfg, params, policy)(x)`` matches the eager per-call
+    ``execute_graph`` path bit-for-bit (build-once precomputation changes
+    nothing numerically),
   * the faithful topologies: the ResNet-18 graph contains real residual adds
     + pooling + projection shortcuts and matches an independently written
     pure-jnp reference network bit-for-bit in full-precision (float) mode,
@@ -23,14 +23,13 @@ import jax.numpy as jnp
 
 from repro.core import dslr as core_dslr
 from repro.models import common as cm
-from repro.models.cnn import CnnConfig, cnn_apply, cnn_spec, infer_cnn
 from repro.models.engine import DslrEngine, compile_cnn, execute_graph
-from repro.models.graph import ExecutionPolicy, build_graph, graph_spec
+from repro.models.graph import CnnConfig, ExecutionPolicy, build_graph, graph_spec
 
 
 def setup(name, width=0.05, classes=4, seed=0, B=2, img=16):
     cfg = CnnConfig(name=name, width=width, num_classes=classes)
-    params = cm.init_params(cnn_spec(cfg), jax.random.PRNGKey(seed))
+    params = cm.init_params(graph_spec(cfg), jax.random.PRNGKey(seed))
     x = jnp.asarray(
         np.random.default_rng(seed).standard_normal((B, img, img, 3)), jnp.float32
     )
@@ -38,28 +37,27 @@ def setup(name, width=0.05, classes=4, seed=0, B=2, img=16):
 
 
 # ---------------------------------------------------------------------------
-# engine vs deprecated shim (bit-for-bit)
+# engine vs eager execute_graph (bit-for-bit)
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("net", ["alexnet", "vgg16", "resnet18"])
-@pytest.mark.parametrize("budget", [None, 4])
-def test_engine_matches_mode_shim_bitwise(net, budget):
+@pytest.mark.parametrize(
+    "net,policy",
+    [
+        ("alexnet", ExecutionPolicy()),
+        ("resnet18", ExecutionPolicy(digit_budget=4)),
+        ("alexnet", ExecutionPolicy(mode="float")),
+    ],
+)
+def test_engine_matches_eager_execute_graph_bitwise(net, policy):
+    """The minimal equality contract the retired mode= shim used to carry:
+    the engine's build-once precomputation (weight flattening, pruned jit
+    params) is purely an optimization — the eager per-call ``execute_graph``
+    produces the identical bits."""
     cfg, params, x = setup(net)
-    engine = compile_cnn(cfg, params, ExecutionPolicy(digit_budget=budget))
-    got = engine(x)
-    want_eager = cnn_apply(cfg, params, x, mode="dslr_planes", digit_budget=budget)
-    want_jit = infer_cnn(cfg, params, x, mode="dslr_planes", digit_budget=budget)
-    np.testing.assert_array_equal(np.asarray(got), np.asarray(want_eager))
-    np.testing.assert_array_equal(np.asarray(got), np.asarray(want_jit))
-
-
-def test_engine_float_mode_matches_shim():
-    cfg, params, x = setup("alexnet")
-    engine = compile_cnn(cfg, params, ExecutionPolicy(mode="float"))
-    np.testing.assert_array_equal(
-        np.asarray(engine(x)), np.asarray(cnn_apply(cfg, params, x, mode="float"))
-    )
+    engine = compile_cnn(cfg, params, policy)
+    want = execute_graph(build_graph(cfg), params, x, policy)
+    np.testing.assert_array_equal(np.asarray(engine(x)), np.asarray(want))
 
 
 # ---------------------------------------------------------------------------
@@ -187,25 +185,45 @@ def test_policy_validation():
         DslrEngine(cfg, params, ExecutionPolicy(layer_budgets=(("bogus", 4),)))
 
 
-def test_shim_rejects_bad_mode_and_budget():
+def test_serve_pad_to_keyword_deprecated():
+    """Padding policy lives on ExecutionPolicy.serve_pad_to now; the old
+    per-call keyword still works but must say it is going away, and both
+    spellings produce the identical bits."""
     cfg, params, x = setup("alexnet", width=0.02)
+    engine = compile_cnn(cfg, params, ExecutionPolicy())
+    with pytest.warns(DeprecationWarning, match="serve_pad_to"):
+        want = engine.serve(x, pad_to=4)
+    via_policy = compile_cnn(
+        cfg, params, ExecutionPolicy(serve_pad_to=4)
+    ).serve(x)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(via_policy))
     with pytest.raises(ValueError):
-        cnn_apply(cfg, params, x, mode="nope")
-    with pytest.raises(ValueError):
-        cnn_apply(cfg, params, x, mode="dslr", digit_budget=2)
+        ExecutionPolicy(serve_pad_to=0)
 
 
-def test_mode_shim_emits_deprecation_warning():
-    """The mode= shim's docstrings have claimed deprecation since the engine
-    landed; the runtime must actually say so."""
-    cfg, params, x = setup("alexnet", width=0.02)
-    with pytest.warns(DeprecationWarning, match="compile_cnn"):
-        cnn_apply(cfg, params, x, mode="float")
-    with pytest.warns(DeprecationWarning, match="compile_cnn"):
-        infer_cnn(cfg, params, x, mode="float")
-    # warns on cached (already-traced) calls too: the warning is eager
-    with pytest.warns(DeprecationWarning, match="compile_cnn"):
-        infer_cnn(cfg, params, x, mode="float")
+def test_with_policy_memoized_and_thread_safe():
+    """Concurrent with_policy lookups of one policy (the dispatcher thread
+    racing submitters) must all land on one derived engine object."""
+    import threading
+
+    cfg, params, _ = setup("alexnet", width=0.02)
+    engine = compile_cnn(cfg, params, ExecutionPolicy())
+    pol = ExecutionPolicy(digit_budget=3)
+    got = []
+    barrier = threading.Barrier(8)
+
+    def hit():
+        barrier.wait()
+        got.append(engine.with_policy(pol))
+
+    threads = [threading.Thread(target=hit) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len({id(e) for e in got}) == 1
+    assert got[0]._weights is engine._weights
+    assert engine.with_policy(engine.policy) is engine
 
 
 # ---------------------------------------------------------------------------

@@ -118,9 +118,10 @@ def test_ragged_serve_bitwise_identical_to_unpadded(per_sample, B):
     independently by construction."""
     cfg, params, x = setup(B=B, outlier=100.0 if per_sample else None)
     engine = compile_cnn(
-        cfg, params, ExecutionPolicy(per_sample_scales=per_sample)
+        cfg, params,
+        ExecutionPolicy(per_sample_scales=per_sample, serve_pad_to=4),
     )
-    served = engine.serve(x, pad_to=4)  # 3 -> 4, 5 -> 8: real padding
+    served = engine.serve(x)  # 3 -> 4, 5 -> 8: real padding
     np.testing.assert_array_equal(np.asarray(served), np.asarray(engine(x)))
 
 
@@ -177,7 +178,7 @@ def test_one_program_per_bucket_policy_by_trace_counting(monkeypatch):
     handles = traffic()
     assert calls["n"] == 4, calls
     assert len(server.program_keys) == 4
-    assert all(h.done for h in handles)
+    assert all(h.done() for h in handles)
 
 
 def test_server_result_bitwise_matches_solo_engine_call():
@@ -254,9 +255,9 @@ def test_server_validation_and_handle_api():
     with pytest.raises(ValueError):
         server.submit(x[0], slo="exact", anytime=(99,))
     h = server.submit(x[0], slo="exact")
-    assert not h.done
+    assert not h.done()
     h.result()
-    assert h.done and isinstance(h.top1, int)
+    assert h.done() and isinstance(h.top1, int)
     assert h.partials == ()  # none requested
 
 

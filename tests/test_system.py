@@ -6,7 +6,6 @@ float oracle to quantization; plus the cycle-model + functional-model
 agreement that makes the paper's throughput claims trustworthy.
 """
 import numpy as np
-import pytest
 import jax
 import jax.numpy as jnp
 
@@ -15,19 +14,20 @@ from repro.core import dslr as core_dslr
 from repro.core import online
 from repro.kernels import ops
 from repro.models import common as cm
-from repro.models.cnn import CnnConfig, cnn_apply, cnn_spec
+from repro.models.engine import compile_cnn
+from repro.models.graph import CnnConfig, ExecutionPolicy, graph_spec
 
 
 def test_dslr_cnn_system_end_to_end():
     """A width-scaled ResNet-18 through the full DSLR datapath agrees with
     the float reference — the paper's functional claim."""
     cfg = CnnConfig(name="resnet18", width=0.05, frac_bits=8)
-    params = cm.init_params(cnn_spec(cfg), jax.random.PRNGKey(0))
+    params = cm.init_params(graph_spec(cfg), jax.random.PRNGKey(0))
     x = jnp.asarray(
         np.random.default_rng(0).standard_normal((1, 32, 32, 3)), jnp.float32
     )
-    yf = cnn_apply(cfg, params, x, mode="float")
-    yd = cnn_apply(cfg, params, x, mode="dslr")
+    yf = compile_cnn(cfg, params, ExecutionPolicy(mode="float"))(x)
+    yd = compile_cnn(cfg, params, ExecutionPolicy(mode="dslr"))(x)
     rel = float(jnp.max(jnp.abs(yf - yd)) / (jnp.max(jnp.abs(yf)) + 1e-9))
     assert rel < 0.25, f"digit-serial deviation too large: {rel}"
     assert yf.shape == yd.shape == (1, cfg.num_classes)
