@@ -1,5 +1,6 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
-"""Benchmark harness: python -m benchmarks.run [--only <prefix>] [--json <path>]
+"""Benchmark harness:
+    python -m benchmarks.run [--only <module>[,<module>...]] [--json <path>]
 
 One module per paper table/figure:
   table2_synthesis   Table 2  (synthesis constants + critical-path model)
@@ -14,16 +15,21 @@ One module per paper table/figure:
   planner_bench      budget planner: planned vs uniform budgets, equal cycles
   serve_bench        request-level server: mixed-SLO latency, scale decoupling
   serve_async_bench  async dispatcher: sustained-load p99 vs QPS, bitwise parity
+  adaptive_bench     confidence-gated early exit: mean digits vs static plans
 
-``--json <path>`` (or env BENCH_JSON) writes every emitted row to a JSON
-artifact — the per-PR perf trajectory CI uploads.  Env BENCH_FAST=1 shrinks
-kernel benchmarks to smoke size.
+``--only`` takes exact module names (comma-separated for several); an
+unknown name is an error, not a silent no-op.  (It used to be a prefix
+match, which made ``serve_bench`` impossible to run without also running
+``serve_async_bench``.)  ``--json <path>`` (or env BENCH_JSON) writes every
+emitted row to a JSON artifact — the per-PR perf trajectory CI uploads.
+Env BENCH_FAST=1 shrinks kernel benchmarks to smoke size.
 """
 from __future__ import annotations
 
 import os
 import sys
 import traceback
+from typing import List, Optional
 
 MODULES = [
     "table2_synthesis",
@@ -38,7 +44,24 @@ MODULES = [
     "planner_bench",
     "serve_bench",
     "serve_async_bench",
+    "adaptive_bench",
 ]
+
+
+def select_modules(only: Optional[str]) -> List[str]:
+    """Resolve ``--only``: exact module names, comma-separated, order as in
+    MODULES.  Raises ValueError on an unknown name (a prefix that silently
+    matched nothing — or too much, like ``serve`` catching both serve
+    benches — was how CI steps quietly drifted)."""
+    if only is None:
+        return list(MODULES)
+    wanted = {w.strip() for w in only.split(",") if w.strip()}
+    unknown = sorted(wanted - set(MODULES))
+    if unknown:
+        raise ValueError(
+            f"unknown --only module(s) {unknown}; available: {MODULES}"
+        )
+    return [m for m in MODULES if m in wanted]
 
 
 def main() -> None:
@@ -48,11 +71,14 @@ def main() -> None:
     json_path = os.environ.get("BENCH_JSON")
     if "--json" in sys.argv:
         json_path = sys.argv[sys.argv.index("--json") + 1]
+    try:
+        selected = select_modules(only)
+    except ValueError as e:
+        print(f"# {e}", file=sys.stderr)
+        sys.exit(2)
     print("name,us_per_call,derived")
     failures = []
-    for mod_name in MODULES:
-        if only and not mod_name.startswith(only):
-            continue
+    for mod_name in selected:
         try:
             mod = __import__(f"benchmarks.{mod_name}", fromlist=["main"])
             mod.main()

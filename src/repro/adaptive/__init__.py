@@ -1,0 +1,40 @@
+"""Confidence-gated adaptive inference: per-request early exit with
+provable-correct escalation.
+
+MSDF left-to-right evaluation means a ``k``-digit prefix run already holds
+logits with a *sound* error bound versus the full-budget answer.  This
+package turns that into a serving-path subsystem:
+
+  * :mod:`repro.adaptive.decision` — the margin-vs-bound rule: a sample is
+    *decided* after the prefix iff its top-1 logit margin strictly exceeds
+    twice the remaining-digit anytime bound, which makes the early argmax
+    equal to the full-budget argmax by construction.
+  * :mod:`repro.adaptive.cascade` — ``compile_cascade(engine, stages=...)``:
+    a compiled escalation ladder (one cached jit program per stage via
+    ``engine.with_policy``) that runs the cheap prefix on the whole wave,
+    compacts the undecided samples to the front, and escalates only those.
+  * :mod:`repro.adaptive.calibrate` — optional *heuristic* mode: measured
+    quantile margin thresholds under an explicit ``target_argmax_agreement``
+    when the worst-case Lipschitz bound is too loose to exit anything.
+
+The serving integration (``SloClass(adaptive=True)`` tiers, the dispatcher's
+escalation queue, ``ResultHandle.digits_spent``) lives in ``repro.serve``.
+"""
+from .calibrate import (  # noqa: F401
+    CascadeCalibration,
+    calibrate_thresholds,
+    default_stages,
+)
+from .cascade import (  # noqa: F401
+    Cascade,
+    CascadeResult,
+    CascadeStage,
+    compile_cascade,
+)
+from .decision import (  # noqa: F401
+    decided,
+    margins,
+    per_sample_bounds,
+    prefix_policy,
+    stage_coefficients,
+)

@@ -1,0 +1,127 @@
+"""Per-net cascade stage-threshold calibration — the *heuristic* mode.
+
+The proven decision rule (decision.py) exits only when the worst-case
+Lipschitz bound says the argmax cannot change.  On deep nets those
+worst-case gains overestimate real error propagation by orders of magnitude
+(docs/NUMERICS.md measures probes far below Lipschitz), so the proven rule
+rarely exits anything early there.  Calibration trades the proof for a
+*measured* margin quantile: on a calibration batch, pick per-stage margin
+thresholds maximizing the early-exit fraction subject to an explicit
+``target_argmax_agreement`` among the samples that exit.
+
+THIS MODE IS HEURISTIC, NOT SOUND: agreement holds on the calibration
+distribution at the measured rate, not per-sample by construction.  Every
+consumer surfaces the distinction (``Cascade.mode == "calibrated"``,
+``SloClass(decision="calibrated")``, the benchmark rows); use the proven
+default when a wrong early answer is unacceptable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from .decision import margins, prefix_policy
+
+
+def default_stages(n_planes: int) -> Tuple[int, ...]:
+    """The default escalation ladder: geometric budgets 2, 4, 8, ... below
+    the full plane count (each escalation roughly doubles the digits, so the
+    worst-case cumulative work stays within ~3x one full-budget pass)."""
+    out, k = [], 2
+    while k < n_planes:
+        out.append(k)
+        k *= 2
+    if not out:
+        raise ValueError(f"n_planes={n_planes} leaves no room for a prefix stage")
+    return tuple(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class CascadeCalibration:
+    """Measured per-stage margin thresholds for one (engine, stages) pair.
+
+    ``thresholds[i]`` is the margin a sample must STRICTLY exceed to exit at
+    stage ``i``; ``measured[i]`` records the (exit_fraction, agreement among
+    exits) the thresholds achieved on the calibration batch — the honest
+    advertisement of what the heuristic bought."""
+
+    stages: Tuple[int, ...]
+    thresholds: Tuple[float, ...]
+    target_argmax_agreement: float
+    n_calib: int
+    measured: Tuple[Tuple[float, float], ...]
+
+
+def _pick_threshold(
+    m: np.ndarray, agree: np.ndarray, target: float
+) -> Tuple[float, float, float]:
+    """The smallest margin threshold whose exit set keeps argmax agreement
+    >= target on the calibration batch: sort by margin descending, take the
+    largest prefix whose running agreement clears the target, set the
+    threshold at the first excluded sample's margin (ties conservatively
+    fall back to escalation — the test is strict ``>``)."""
+    order = np.argsort(-m, kind="stable")
+    correct, best_p = 0, 0
+    for p in range(1, len(order) + 1):
+        correct += bool(agree[order[p - 1]])
+        if correct / p >= target:
+            best_p = p
+    if best_p == 0:
+        tau = float(np.max(m))  # nothing exits (strict >)
+    elif best_p == len(order):
+        tau = -1.0  # margins are >= 0: everything exits
+    else:
+        tau = float(m[order[best_p]])
+    exits = m > tau
+    frac = float(np.mean(exits))
+    acc = float(np.mean(agree[exits])) if exits.any() else 1.0
+    return tau, frac, acc
+
+
+def calibrate_thresholds(
+    engine,
+    x_calib,
+    stages: Optional[Sequence[int]] = None,
+    target_argmax_agreement: float = 1.0,
+) -> CascadeCalibration:
+    """Calibrate per-stage margin thresholds on a batch (B, H, W, C).
+
+    Runs the full-budget forward once and each stage's prefix program once,
+    then solves each stage's threshold independently against the full-budget
+    argmax.  Per-stage independence is deliberate: a sample's exit margin at
+    stage ``i`` does not depend on which earlier-stage samples exited, so
+    thresholds transfer to the cascade's compacted sub-batches unchanged
+    (per-sample scales keep every prefix run bitwise independent of batch
+    composition)."""
+    if not 0.0 < target_argmax_agreement <= 1.0:
+        raise ValueError(
+            f"target_argmax_agreement={target_argmax_agreement} outside (0, 1]"
+        )
+    pol = engine.policy
+    stages = (
+        default_stages(pol.n_planes) if stages is None else tuple(int(k) for k in stages)
+    )
+    x_calib = jnp.asarray(x_calib, jnp.float32)
+    if x_calib.ndim != 4 or x_calib.shape[0] < 2:
+        raise ValueError(
+            f"x_calib must be a batch (B >= 2, H, W, C), got {x_calib.shape}"
+        )
+    full_top = np.argmax(np.asarray(engine(x_calib)), axis=-1)
+    thresholds, measured = [], []
+    for k in stages:
+        z = np.asarray(engine.with_policy(prefix_policy(pol, k))(x_calib))
+        tau, frac, acc = _pick_threshold(
+            margins(z), np.argmax(z, axis=-1) == full_top, target_argmax_agreement
+        )
+        thresholds.append(tau)
+        measured.append((frac, acc))
+    return CascadeCalibration(
+        stages=stages,
+        thresholds=tuple(thresholds),
+        target_argmax_agreement=float(target_argmax_agreement),
+        n_calib=int(x_calib.shape[0]),
+        measured=tuple(measured),
+    )

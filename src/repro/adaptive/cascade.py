@@ -1,0 +1,325 @@
+"""The compiled escalation ladder: prefix wave -> decide -> compact -> escalate.
+
+``compile_cascade(engine, stages=[k1, k2, ...])`` builds one
+:class:`CascadeStage` per prefix budget plus a final full-budget stage.
+Each prefix stage owns ONE cached jit program (per batch shape) that
+returns the prefix logits *and* the per-sample per-conv-layer input amax —
+the decision bound's operands ride the same trace, so checking the bound
+costs no extra program and no extra forward.  The final stage reuses the
+engine's plain program (``engine.__call__``), shared with every
+non-adaptive caller of the same policy.
+
+``Cascade.run`` is the batch-level driver: run stage 0 on everyone, mark
+the decided samples (margin > 2 * bound in proven mode, margin > calibrated
+threshold in heuristic mode), gather the undecided to the front, zero-pad
+to the next size bucket, escalate.  Per-sample quantization scales (which
+``compile_cascade`` requires) make the compaction *exact*: a sample's
+logits at every stage are bitwise identical to running it alone, so
+escalation changes who computes, never what anyone computes.  The serving
+integration (waves, the dispatcher's escalation queue) is in
+``repro.serve.server``.
+
+Digit accounting is software-honest: ``digits_spent`` accumulates the
+planes actually executed across every stage a sample attended (an MSDF ASIC
+resuming a digit stream would pay only the increment; re-running the prefix
+is the software price of one-program-per-stage, and the benchmark's win
+condition is measured against this *cumulative* cost).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models import engine as engine_mod
+from repro.models.graph import ExecutionPolicy
+
+from .calibrate import CascadeCalibration, default_stages
+from .decision import (
+    decided as _decided,
+    margins as _margins,
+    per_sample_bounds,
+    prefix_policy,
+    stage_coefficients,
+)
+
+
+@functools.partial(jax.jit, static_argnames=("graph", "policy"))
+def _stage_forward(graph, policy, params, weights, x):
+    # one program per (graph, policy, shape): prefix logits + the per-sample
+    # per-conv-layer input amax the decision bound needs.  execute_graph is
+    # resolved through the module so trace-count tests observe this path.
+    vals = engine_mod.execute_graph(
+        graph, params, x, policy, weights=weights, return_all=True
+    )
+    amax = jnp.stack(
+        [
+            jnp.max(jnp.abs(vals[node.inputs[0]]), axis=(1, 2, 3))
+            for node in graph.conv_nodes
+        ]
+    )
+    return vals[graph.nodes[-1].name], amax
+
+
+@dataclasses.dataclass(frozen=True)
+class CascadeStage:
+    """One rung of the ladder.  ``planes_cost`` is the number of digit
+    planes this stage executes summed over conv layers (``sum_i min(budget,
+    full_i)``) — what attending the stage adds to a sample's
+    ``digits_spent``.  ``coefs`` are the proven decision-bound coefficients
+    (empty on the final stage, which decides everyone by definition);
+    ``threshold`` is the calibrated margin cut in heuristic mode."""
+
+    index: int
+    budget: int
+    policy: ExecutionPolicy
+    final: bool
+    planes_cost: int
+    coefs: Tuple[float, ...] = ()
+    threshold: Optional[float] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class CascadeResult:
+    """Per-sample outcome of one ``Cascade.run``.  ``logits[s]`` is the
+    deciding stage's logits for sample ``s`` (bitwise equal to running that
+    prefix on the sample alone); ``bounds[s]`` is the decision bound at the
+    deciding stage (NaN for final-stage / calibrated decisions, where no
+    bound is evaluated)."""
+
+    logits: np.ndarray
+    top1: np.ndarray
+    decided_at_stage: np.ndarray
+    digits_spent: np.ndarray
+    margins: np.ndarray
+    bounds: np.ndarray
+    stage_counts: Tuple[int, ...]
+    n_conv_layers: int
+
+    @property
+    def mean_planes_per_layer(self) -> float:
+        """Mean digits/image normalized per conv layer — directly comparable
+        to a uniform static budget ``k`` (which costs exactly ``k``)."""
+        return float(np.mean(self.digits_spent)) / self.n_conv_layers
+
+    def planes_percentile(self, q: float) -> float:
+        return float(np.percentile(self.digits_spent, q)) / self.n_conv_layers
+
+
+class Cascade:
+    """A compiled escalation ladder over one engine.  Build with
+    :func:`compile_cascade`; run standalone with :meth:`run`, or rung by
+    rung (``run_stage`` / ``decide``) as the serving dispatcher does."""
+
+    def __init__(
+        self,
+        engine,
+        stages: Tuple[CascadeStage, ...],
+        mode: str,
+        calibration: Optional[CascadeCalibration] = None,
+    ):
+        self.engine = engine
+        self.stages = stages
+        self.mode = mode
+        self.calibration = calibration
+
+    @property
+    def n_conv_layers(self) -> int:
+        return len(self.engine.graph.conv_nodes)
+
+    def stage_engine(self, stage: CascadeStage):
+        return self.engine.with_policy(stage.policy)
+
+    def run_stage(self, stage: CascadeStage, xb: jax.Array):
+        """Execute one stage on a (possibly padded) batch: ``(logits,
+        amax)`` for a prefix stage, ``(logits, None)`` for the final stage
+        (which reuses the engine's plain program — shared with non-adaptive
+        traffic under the same policy)."""
+        if stage.final:
+            return self.engine(xb), None
+        e = self.stage_engine(stage)
+        return _stage_forward(e.graph, e.policy, e._exec_params, e._exec_weights, xb)
+
+    def decide(self, stage: CascadeStage, logits, amax):
+        """Apply the stage's decision rule to unpadded rows: returns
+        ``(decided_mask, margins, bounds)`` — ``bounds`` is None when the
+        rule evaluates no bound (final stage, calibrated mode)."""
+        m = _margins(logits)
+        if stage.final:
+            return np.ones(m.shape, bool), m, None
+        if self.mode == "proven":
+            b = per_sample_bounds(np.asarray(stage.coefs), np.asarray(amax))
+            return _decided(m, b), m, b
+        return m > stage.threshold, m, None
+
+    def run(
+        self, x_batch, buckets: Optional[Sequence[int]] = None
+    ) -> CascadeResult:
+        """Drive a whole batch through the ladder: each stage runs only the
+        still-undecided samples, compacted to the front and zero-padded to
+        the smallest bucket that fits (default buckets: powers of two up to
+        the batch size — pass the serving bucket ladder to share its
+        programs).  Decided samples keep the deciding stage's logits."""
+        x_batch = jnp.asarray(x_batch, jnp.float32)
+        if x_batch.ndim != 4:
+            raise ValueError(f"x_batch must be (B, H, W, C), got {x_batch.shape}")
+        B = int(x_batch.shape[0])
+        if buckets is None:
+            buckets = _pow2_buckets(B)
+        else:
+            buckets = tuple(int(b) for b in buckets)
+
+        out_logits: List[Optional[np.ndarray]] = [None] * B
+        decided_at = np.zeros(B, np.int64)
+        digits = np.zeros(B, np.int64)
+        out_margin = np.full(B, np.nan)
+        out_bound = np.full(B, np.nan)
+        stage_counts = []
+        active = np.arange(B)
+        for stage in self.stages:
+            n_before = len(active)
+            for chunk in _chunks(active, buckets[-1]):
+                xa = x_batch[jnp.asarray(chunk)]
+                bucket = _bucket_for(buckets, len(chunk))
+                if bucket > len(chunk):
+                    xa = jnp.pad(
+                        xa, ((0, bucket - len(chunk)), (0, 0), (0, 0), (0, 0))
+                    )
+                logits, amax = self.run_stage(stage, xa)
+                n = len(chunk)
+                dec, m, b = self.decide(
+                    stage, logits[:n], None if amax is None else amax[:, :n]
+                )
+                digits[chunk] += stage.planes_cost
+                z = np.asarray(logits[:n])
+                for i, s in enumerate(chunk):
+                    if dec[i]:
+                        out_logits[s] = z[i]
+                        decided_at[s] = stage.index
+                        out_margin[s] = m[i]
+                        if b is not None:
+                            out_bound[s] = b[i]
+            active = np.asarray(
+                [s for s in active if out_logits[s] is None], np.int64
+            )
+            stage_counts.append(n_before - len(active))
+            if len(active) == 0:
+                break
+        stage_counts.extend(0 for _ in range(len(self.stages) - len(stage_counts)))
+        assert all(z is not None for z in out_logits)
+        return CascadeResult(
+            logits=np.stack(out_logits),
+            top1=np.stack(out_logits).argmax(-1),
+            decided_at_stage=decided_at,
+            digits_spent=digits,
+            margins=out_margin,
+            bounds=out_bound,
+            stage_counts=tuple(stage_counts),
+            n_conv_layers=self.n_conv_layers,
+        )
+
+
+def _pow2_buckets(n: int) -> Tuple[int, ...]:
+    out, b = [], 1
+    while b < n:
+        out.append(b)
+        b *= 2
+    out.append(b)
+    return tuple(out)
+
+
+def _bucket_for(buckets: Sequence[int], n: int) -> int:
+    for b in buckets:
+        if b >= n:
+            return b
+    return buckets[-1]
+
+
+def _chunks(idx: np.ndarray, size: int):
+    for i in range(0, len(idx), size):
+        yield idx[i : i + size]
+
+
+def compile_cascade(
+    engine,
+    stages: Optional[Sequence[int]] = None,
+    calibration: Optional[CascadeCalibration] = None,
+) -> Cascade:
+    """Build the escalation ladder for an engine.
+
+    ``stages`` are the prefix digit budgets, strictly ascending, each below
+    the policy's largest effective budget (default:
+    :func:`repro.adaptive.calibrate.default_stages`); a final full-budget
+    stage is appended automatically.  Passing a
+    :class:`~repro.adaptive.calibrate.CascadeCalibration` switches the
+    decision rule to the measured-threshold heuristic mode (and pins
+    ``stages`` to the calibrated ladder).  Requires
+    ``per_sample_scales=True``: compaction and zero-padding must be bitwise
+    invisible to every sample, or escalated samples' logits would depend on
+    their wave-mates."""
+    pol = engine.policy
+    if pol.mode != "dslr_planes":
+        raise ValueError(f"compile_cascade needs a dslr_planes engine, got {pol.mode!r}")
+    if not pol.per_sample_scales:
+        raise ValueError(
+            "compile_cascade requires ExecutionPolicy(per_sample_scales=True): "
+            "escalation compacts samples into new sub-batches, and only "
+            "per-sample quantization scales keep each sample's logits bitwise "
+            "independent of its wave-mates"
+        )
+    if calibration is not None:
+        if stages is not None and tuple(int(k) for k in stages) != calibration.stages:
+            raise ValueError(
+                f"stages={tuple(stages)} conflicts with the calibration's "
+                f"ladder {calibration.stages}"
+            )
+        stages = calibration.stages
+        mode = "calibrated"
+    else:
+        mode = "proven"
+    if stages is None:
+        stages = default_stages(pol.n_planes)
+    stages = tuple(int(k) for k in stages)
+    if not stages or list(stages) != sorted(set(stages)) or stages[0] < 1:
+        raise ValueError(f"stages must be ascending positive ints, got {stages}")
+
+    full_budgets = {
+        n.name: pol.budget_for(n.name) or pol.n_planes for n in engine.graph.conv_nodes
+    }
+    gains = engine.node_gains() if mode == "proven" else None
+    built: List[CascadeStage] = []
+    for i, k in enumerate(stages):
+        spol = prefix_policy(pol, k)
+        if spol == pol:
+            raise ValueError(
+                f"stage budget {k} truncates nothing (policy budgets "
+                f"{sorted(set(full_budgets.values()))}); drop it — the final "
+                f"stage already runs the full program"
+            )
+        built.append(
+            CascadeStage(
+                index=i,
+                budget=k,
+                policy=spol,
+                final=False,
+                planes_cost=sum(min(k, fb) for fb in full_budgets.values()),
+                coefs=tuple(stage_coefficients(engine, k, gains=gains))
+                if mode == "proven"
+                else (),
+                threshold=calibration.thresholds[i] if calibration is not None else None,
+            )
+        )
+    built.append(
+        CascadeStage(
+            index=len(stages),
+            budget=max(full_budgets.values()),
+            policy=pol,
+            final=True,
+            planes_cost=sum(full_budgets.values()),
+        )
+    )
+    return Cascade(engine, tuple(built), mode, calibration)

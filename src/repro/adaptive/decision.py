@@ -1,0 +1,116 @@
+"""The margin-vs-bound early-exit decision rule.
+
+A ``k``-plane MSDF prefix run produces logits ``z_k`` with a per-sample
+error bound ``b`` such that ``max_j |z_k[j] - z_full[j]| <= b`` (the
+anytime bound of core/dslr.py composed through the network by the
+worst-case Lipschitz gains of ``engine.node_gains`` — the same machinery
+behind ``DslrServer``'s anytime channel).  The decision rule:
+
+    decided  iff  margin(z_k) > 2 * b
+
+where ``margin`` is the top-1 logit minus the runner-up.  Soundness: for
+the prefix top-1 index ``t`` and any other class ``j``,
+
+    z_full[t] >= z_k[t] - b   and   z_full[j] <= z_k[j] + b
+    =>  z_full[t] - z_full[j] >= margin - 2b > 0,
+
+so the full-budget argmax equals the prefix argmax *by construction* — the
+early answer is not an approximation, it is the answer (docs/NUMERICS.md
+derives this with a doctest-checked worked example).
+
+The per-sample bound is assembled from build-time coefficients: each conv
+layer truncated below its policy budget contributes
+
+    c_i = gain_i * ||W_i||_{1,col} * 2 * (1 + 2^-f) * 2^-k_eff
+
+(``gain_i`` the downstream Lipschitz amplification of layer ``i``'s output,
+``||W_i||_{1,col}`` its max column-L1 mass, ``f`` the fractional digit
+count, ``k_eff = min(k, budget_i)``) and the bound for sample ``s`` is
+``sum_i c_i * amax_i(s)`` with ``amax_i(s)`` the sample's observed input
+amax at layer ``i`` — exactly ``DslrServer._anytime_bounds`` made
+per-sample, with ``scale_i = amax_i * (1 + 2^-f)`` factored so the amax can
+be read off the prefix run itself.  One inherited approximation, documented
+there too: truncation can in principle perturb a *downstream* layer's input
+amax relative to the run the bound is compared against — a second-order
+effect dwarfed by the orders-of-magnitude slack of the worst-case gain
+composition (zero argmax flips is asserted per-sample in tests and guarded
+in ``BENCH_adaptive.json``).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.models.graph import ExecutionPolicy
+
+
+def margins(logits) -> np.ndarray:
+    """Per-sample top-1 margin: highest logit minus runner-up.  ``logits``
+    is (..., num_classes); returns (...,) float64, always >= 0."""
+    z = np.asarray(logits, np.float64)
+    if z.shape[-1] < 2:
+        raise ValueError(f"need >= 2 classes for a margin, got shape {z.shape}")
+    top2 = np.sort(z, axis=-1)[..., -2:]
+    return top2[..., 1] - top2[..., 0]
+
+
+def decided(margin, bound) -> np.ndarray:
+    """The sound early-exit test: margin STRICTLY above twice the prefix
+    error bound (strictness is load-bearing — at ``margin == 2b`` the
+    full-budget run may tie, and a tie can resolve either way)."""
+    return np.asarray(margin, np.float64) > 2.0 * np.asarray(bound, np.float64)
+
+
+def stage_coefficients(
+    engine, k: int, gains: Optional[Dict[str, float]] = None
+) -> np.ndarray:
+    """Per-conv-layer coefficients ``c_i`` (ordered like
+    ``engine.graph.conv_nodes``) such that the per-sample prefix error bound
+    at stage budget ``k`` is ``sum_i c_i * amax_i(sample)``.  Layers whose
+    policy budget the stage does not truncate contribute 0 (their prefix
+    output is already exact).  ``gains`` lets a caller reuse one
+    ``engine.node_gains()`` walk across stages."""
+    pol = engine.policy
+    if gains is None:
+        gains = engine.node_gains()
+    f = pol.n_digits
+    coefs = []
+    for node in engine.graph.conv_nodes:
+        full = pol.budget_for(node.name) or pol.n_planes
+        k_eff = min(int(k), full)
+        if k_eff < full:
+            w_flat, _ = engine._weights[node.name]
+            row_l1 = float(jnp.max(jnp.sum(jnp.abs(w_flat), axis=0)))
+            coefs.append(
+                gains[node.name] * row_l1 * 2.0 * (1.0 + 2.0 ** -f) * 2.0 ** -k_eff
+            )
+        else:
+            coefs.append(0.0)
+    return np.asarray(coefs, np.float64)
+
+
+def per_sample_bounds(coefs: np.ndarray, amax: np.ndarray) -> np.ndarray:
+    """Assemble per-sample bounds from stage coefficients (L,) and the
+    prefix run's observed per-layer per-sample input amax (L, B) -> (B,)."""
+    return np.asarray(coefs, np.float64) @ np.asarray(amax, np.float64)
+
+
+def prefix_policy(policy: ExecutionPolicy, k: int) -> ExecutionPolicy:
+    """The ``k``-plane prefix of a policy's budgets: every layer budget
+    clips to ``min(k, budget)``.  Returns ``policy`` itself when the prefix
+    changes nothing, so the prefix reuses the full program (and is exactly
+    the full result).  Shared by the anytime channel
+    (``DslrServer._prefix_policy``) and the cascade's stage policies."""
+    if policy.layer_budgets is not None:
+        pairs = tuple((n, min(int(k), b)) for n, b in policy.layer_budgets)
+        if pairs == policy.layer_budgets:
+            return policy
+        return dataclasses.replace(policy, layer_budgets=pairs)
+    full = policy.digit_budget or policy.n_planes
+    if k >= full:
+        return policy
+    return dataclasses.replace(policy, digit_budget=int(k), layer_budgets=None)

@@ -16,7 +16,9 @@ map to planner-solved per-layer digit budgets (each carrying a queue-dwell
 budget; ``--deadline-ms`` overrides it per request).  Requests the admission
 controller sheds (``ServerOverloaded``) are counted and reported.
 ``--anytime`` additionally asks each request for k-digit partial results
-(the MSDF prefix budgets) and prints their error bounds.
+(the MSDF prefix budgets) and prints their error bounds.  ``--slo adaptive``
+routes traffic through the confidence-gated escalation cascade and reports
+the digit planes each request actually paid and the stage it decided at.
 
 Explicit budgets (``--budget`` / ``--per-layer-budgets``) or a planner
 target (``--plan-latency`` / ``--plan-error``) install a single ``custom``
@@ -141,6 +143,12 @@ def main() -> None:
     else:
         tiers = [args.slo]
     anytime = tuple(int(k) for k in args.anytime.split(",")) if args.anytime else ()
+    # the adaptive cascade and the anytime channel are mutually exclusive on
+    # one request (single early-but-exact answer vs a stream of bounded-error
+    # prefixes), so adaptive-tier traffic drops the --anytime ask
+    def tier_anytime(tier: str) -> tuple:
+        cls = server.slos.get(tier)
+        return () if (cls is not None and cls.adaptive) else anytime
 
     # warm every (bucket, tier) program — including the anytime prefix
     # programs requests will hit — so the percentiles below measure
@@ -163,11 +171,12 @@ def main() -> None:
                 if target > now:
                     time.sleep(target - now)
             try:
+                tier = tiers[i % len(tiers)]
                 handles.append(
                     server.submit(
                         jnp.asarray(imgs[i], jnp.float32),
-                        slo=tiers[i % len(tiers)],
-                        anytime=anytime,
+                        slo=tier,
+                        anytime=tier_anytime(tier),
                         deadline_ms=args.deadline_ms,
                     )
                 )
@@ -197,12 +206,25 @@ def main() -> None:
         print(f"[serve_cnn] tier {tier!r}: budgets={shown} "
               f"per_sample_scales={pol.per_sample_scales}")
     if anytime:
-        h = handles[0]
-        parts = ", ".join(
-            f"k={p.budget}: top1={p.top1} bound={p.bound:.3e}" for p in h.partials
+        h = next((h for h in handles if h.partials), None)
+        if h is not None:
+            parts = ", ".join(
+                f"k={p.budget}: top1={p.top1} bound={p.bound:.3e}"
+                for p in h.partials
+            )
+            print(f"[serve_cnn] anytime partials of first {h.slo!r} request: "
+                  f"{parts}; final top1={h.top1}")
+    decided = [h for h in handles if h.digits_spent is not None]
+    if decided:
+        spent = np.array([h.digits_spent for h in decided])
+        stages = sorted({h.decided_at_stage for h in decided})
+        dist = " ".join(
+            f"stage{s}={sum(h.decided_at_stage == s for h in decided)}"
+            for s in stages
         )
-        print(f"[serve_cnn] anytime partials of request 0 ({h.slo}): {parts}; "
-              f"final top1={h.top1}")
+        print(f"[serve_cnn] adaptive: {len(decided)} request(s), digit planes "
+              f"spent mean {spent.mean():.1f} min {spent.min()} max {spent.max()}; "
+              f"decided at {dist}")
 
 
 if __name__ == "__main__":

@@ -34,7 +34,6 @@ import dataclasses
 import functools
 import math
 import threading
-import warnings
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
@@ -221,11 +220,6 @@ def conv_layers_for_graph(cfg: CnnConfig, graph: LayerGraph) -> Dict[str, cyc.Co
 # ---------------------------------------------------------------------------
 
 
-# sentinel distinguishing "pad_to not passed" from an explicit None (which
-# also meant "use the device count" under the deprecated keyword)
-_PAD_TO_UNSET = object()
-
-
 class DslrEngine:
     """Compiled CNN: topology graph + build-time weight precomputation +
     jit-cached execution under one ``ExecutionPolicy``."""
@@ -308,7 +302,7 @@ class DslrEngine:
                 self._derived[policy] = engine
         return engine
 
-    def serve(self, x_batch: jax.Array, pad_to=_PAD_TO_UNSET) -> jax.Array:
+    def serve(self, x_batch: jax.Array) -> jax.Array:
         """Batch-sharded inference — kept as a thin batch-level shim over
         ``__call__`` (request-level serving lives in ``repro.serve``).  The
         batch axis spreads across the data axis of a device mesh (rules from
@@ -317,20 +311,11 @@ class DslrEngine:
         rounded to a device multiple, then sliced back: zero rows cannot
         raise the per-tensor quantization scale, and under per-sample scales
         every row quantizes independently, so the padding is exact by
-        construction either way.
-
-        Passing ``pad_to=`` here is deprecated: padding is batching *policy*,
-        so it lives on ``ExecutionPolicy.serve_pad_to`` with the rest of the
-        execution knobs (one hashable identity per program)."""
-        if pad_to is _PAD_TO_UNSET:
-            pad_to = self.policy.serve_pad_to
-        else:
-            warnings.warn(
-                "DslrEngine.serve(pad_to=) is deprecated; set "
-                "ExecutionPolicy(serve_pad_to=...) instead",
-                DeprecationWarning,
-                stacklevel=2,
-            )
+        construction either way.  (The PR-6-deprecated ``pad_to=`` keyword
+        is gone: padding is batching *policy*, so it lives on
+        ``ExecutionPolicy.serve_pad_to`` with the rest of the execution
+        knobs — one hashable identity per program.)"""
+        pad_to = self.policy.serve_pad_to
         with self._cache_lock:
             if self._serve_sharding is None:
                 from repro.launch import mesh as mesh_lib

@@ -5,8 +5,11 @@ asynchronous runtime: Future-style ``submit`` with per-request deadlines, a
 background dispatcher thread with deadline-based continuous batching and
 admission control (``ServerOverloaded``), one compiled program per (bucket,
 policy), planner-solved SLO classes, exact per-sample quantization scales,
-and the MSDF anytime channel (k-digit partial results with sound error
-bounds).  See serve/server.py for the lifecycle and
+the MSDF anytime channel (k-digit partial results with sound error
+bounds), and confidence-gated adaptive tiers (``SloClass(adaptive=True)``
+-> a repro.adaptive escalation cascade: requests exit at the first digit
+prefix whose top-1 margin provably dominates the remaining-digit bound).
+See serve/server.py for the lifecycle and
 docs/ARCHITECTURE.md#the-serving-runtime for the diagram.
 """
 from .dispatcher import Dispatcher, ServerOverloaded  # noqa: F401

@@ -20,6 +20,11 @@ digit-plane engine:
     resolve to the same policy share waves (and the same compiled program).
     Per-sample quantization scales keep every request's logits bitwise
     independent of whoever shares its wave.
+  * **escalation queue** — a confidence-gated (adaptive-tier) wave's
+    undecided tail re-enters the queue via ``requeue`` at its next cascade
+    stage, ahead of later arrivals and with its original deadline, so
+    escalations fold into the next wave of the same ``(slo, stage, shape)``
+    group instead of restarting the lifecycle.
   * **admission control with load shedding** — ``submit`` projects the queue
     dwell this request would see (queue depth x an EWMA of the measured
     per-request service time) and raises :class:`ServerOverloaded` when the
@@ -54,8 +59,13 @@ class ServerOverloaded(RuntimeError):
 @dataclasses.dataclass
 class QueuedRequest:
     """One admitted request waiting for (or riding) a wave.  ``group_key``
-    is ``(policy, image shape)`` — the continuous-batching identity; the
-    dwell ``deadline_t`` is monotonic-clock seconds."""
+    is ``(policy, image shape)`` — the continuous-batching identity — or
+    ``("adaptive", slo, stage, shape)`` for confidence-gated tiers, so an
+    escalated request folds into the next wave of its *next* cascade stage,
+    never back into a prefix wave it already ran; the dwell ``deadline_t``
+    is monotonic-clock seconds.  ``stage_idx``/``digits_spent`` track the
+    cascade position and the cumulative digit planes the request has
+    executed (summed over conv layers, across every stage it attended)."""
 
     request_id: int
     image: object  # jax.Array (H, W, C)
@@ -65,6 +75,8 @@ class QueuedRequest:
     group_key: Tuple[object, ...]
     submit_t: float
     deadline_t: float
+    stage_idx: int = 0
+    digits_spent: int = 0
 
 
 class Dispatcher:
@@ -197,6 +209,20 @@ class Dispatcher:
                         f"at ~{est * 1e3:.1f} ms/request); shed at admission"
                     )
             self._pending.append(req)
+            self._cond.notify_all()
+
+    def requeue(self, reqs: List[QueuedRequest]) -> None:
+        """The escalation queue: fold a wave's undecided tail back into
+        ``pending``, ahead of later arrivals and bypassing admission control
+        — these requests were admitted once and keep their original
+        deadlines, so earliest-deadline wave selection naturally prioritizes
+        them (their group key moved to the next cascade stage, so they land
+        in that stage's next wave).  Called from the dispatch callback while
+        its wave is still counted in flight, which keeps ``drain``'s
+        completion predicate (queue empty AND nothing in flight) airtight:
+        the escalations are visible before the wave retires."""
+        with self._cond:
+            self._pending[:0] = reqs
             self._cond.notify_all()
 
     def cancel(self, request_id: int) -> bool:

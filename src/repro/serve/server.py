@@ -52,6 +52,13 @@ from typing import Dict, List, NamedTuple, Optional, Sequence, Set, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.adaptive import (
+    Cascade,
+    CascadeCalibration,
+    calibrate_thresholds,
+    compile_cascade,
+    prefix_policy,
+)
 from repro.core import cycle_model as cyc
 from repro.models.engine import DslrEngine, conv_layers_for_graph
 from repro.models.graph import ExecutionPolicy
@@ -96,6 +103,12 @@ class ResultHandle:
         self.submit_time = time.monotonic()
         self.done_time: Optional[float] = None  # set at completion
         self.wave_seq: Optional[int] = None  # dispatch order (1-based)
+        # adaptive (confidence-gated) tiers only, set at completion:
+        # cumulative digit planes executed (summed over conv layers, across
+        # every cascade stage attended) and the 0-based stage index whose
+        # decision rule accepted the answer (last stage = ran full budget)
+        self.digits_spent: Optional[int] = None
+        self.decided_at_stage: Optional[int] = None
 
     def done(self) -> bool:
         """True once the request completed, errored, or was cancelled.
@@ -142,11 +155,18 @@ class ResultHandle:
     # -- completion (dispatcher / flush side) --------------------------------
 
     def _set_result(
-        self, logits: jax.Array, partials: Tuple[AnytimeResult, ...], wave_seq: int
+        self,
+        logits: jax.Array,
+        partials: Tuple[AnytimeResult, ...],
+        wave_seq: int,
+        digits_spent: Optional[int] = None,
+        decided_at_stage: Optional[int] = None,
     ) -> None:
         self._logits = logits
         self._partials = partials
         self.wave_seq = wave_seq
+        self.digits_spent = digits_spent
+        self.decided_at_stage = decided_at_stage
         self.done_time = time.monotonic()
         self._event.set()
         self._server._completed(self)
@@ -215,6 +235,8 @@ class DslrServer:
         self._gains: Optional[Dict[str, float]] = None
         self._row_l1: Optional[Dict[str, float]] = None
         self._predicted_ms: Dict[str, float] = {}
+        self._cascades: Dict[str, Cascade] = {}  # adaptive tier -> ladder
+        self._calibrations: Dict[str, CascadeCalibration] = {}
         self._dispatcher = Dispatcher(
             dispatch=self._dispatch_wave,
             max_wave=buckets[-1],
@@ -230,6 +252,8 @@ class DslrServer:
             "padded_rows": 0,
             "shed": 0,
             "cancelled": 0,
+            "early_exits": 0,
+            "escalated": 0,
         }
         self.wave_log: List[Tuple[int, ...]] = []  # request ids per wave
         self.completion_order: List[int] = []  # request ids as results land
@@ -304,18 +328,74 @@ class DslrServer:
 
     def _prefix_policy(self, policy: ExecutionPolicy, k: int) -> ExecutionPolicy:
         """The ``k``-plane prefix of a policy's budgets (the anytime
-        channel's program): every layer budget clips to ``min(k, budget)``.
-        Returns ``policy`` itself when the prefix changes nothing, so the
-        partial reuses the full program (and is exactly the full result)."""
-        if policy.layer_budgets is not None:
-            pairs = tuple((n, min(k, b)) for n, b in policy.layer_budgets)
-            if pairs == policy.layer_budgets:
-                return policy
-            return dataclasses.replace(policy, layer_budgets=pairs)
-        full = policy.digit_budget or policy.n_planes
-        if k >= full:
-            return policy
-        return dataclasses.replace(policy, digit_budget=k, layer_budgets=None)
+        channel's program) — shared with the adaptive cascade's stage
+        policies, so an anytime partial at budget ``k`` and a cascade stage
+        at budget ``k`` are literally the same compiled program."""
+        return prefix_policy(policy, k)
+
+    def _slo_class(self, slo: str) -> Optional[SloClass]:
+        return self.slos.get(slo)
+
+    def cascade_for(self, slo: str) -> Cascade:
+        """The compiled escalation ladder of an adaptive SLO tier (built
+        lazily, one per tier).  A ``decision="calibrated"`` tier needs a
+        prior :meth:`calibrate` call — the measured thresholds are state the
+        server cannot invent."""
+        with self._lock:
+            cascade = self._cascades.get(slo)
+            if cascade is not None:
+                return cascade
+            cls = self._slo_class(slo)
+            if cls is None or not cls.adaptive:
+                raise ValueError(f"SLO class {slo!r} is not an adaptive tier")
+            calibration = self._calibrations.get(slo)
+            if cls.decision == "calibrated" and calibration is None:
+                raise RuntimeError(
+                    f"adaptive tier {slo!r} uses decision='calibrated' but no "
+                    f"thresholds are calibrated yet; call "
+                    f"server.calibrate({slo!r}, x_calib, ...) first (the "
+                    f"default 'proven' decision rule needs no calibration)"
+                )
+            policy = self.policy_for(slo)
+            cascade = compile_cascade(
+                self._engine_for(policy),
+                stages=cls.stages,
+                calibration=calibration if cls.decision == "calibrated" else None,
+            )
+            self._cascades[slo] = cascade
+            return cascade
+
+    def calibrate(
+        self,
+        slo: str,
+        x_calib: jax.Array,
+        target_argmax_agreement: float = 1.0,
+    ) -> CascadeCalibration:
+        """Measure per-stage margin thresholds for a ``decision="calibrated"``
+        adaptive tier on a calibration batch (B, H, W, C) — the *heuristic*
+        exit mode: argmax agreement with the full-budget answer holds at the
+        measured rate on the calibration distribution, not per-sample by
+        construction (repro.adaptive.calibrate).  Replaces any previous
+        calibration for the tier."""
+        cls = self._slo_class(slo)
+        if cls is None or not cls.adaptive:
+            raise ValueError(f"SLO class {slo!r} is not an adaptive tier")
+        if cls.decision != "calibrated":
+            raise ValueError(
+                f"adaptive tier {slo!r} uses the proven decision rule; "
+                f"calibration only applies to decision='calibrated' tiers"
+            )
+        engine = self._engine_for(self.policy_for(slo))
+        cal = calibrate_thresholds(
+            engine,
+            x_calib,
+            stages=cls.stages,
+            target_argmax_agreement=target_argmax_agreement,
+        )
+        with self._lock:
+            self._calibrations[slo] = cal
+            self._cascades.pop(slo, None)  # rebuild on next use
+        return cal
 
     def dwell_budget_ms(self, slo: str) -> float:
         """The queue-dwell budget of a tier: its SLO class's ``max_dwell_ms``
@@ -369,6 +449,17 @@ class DslrServer:
             raise ValueError(f"image must be (H, W, C), got shape {image.shape}")
         policy = self.policy_for(slo)  # validates the SLO name eagerly
         anytime = tuple(sorted(int(k) for k in anytime))
+        cls = self._slo_class(slo)
+        is_adaptive = cls is not None and cls.adaptive
+        if is_adaptive:
+            if anytime:
+                raise ValueError(
+                    f"anytime= and the adaptive tier {slo!r} are mutually "
+                    f"exclusive: the cascade already serves the k-digit "
+                    f"prefix answer the moment it is decided — submit to a "
+                    f"non-adaptive tier for explicit partials"
+                )
+            self.cascade_for(slo)  # build/validate the ladder eagerly
         for k in anytime:
             if not 1 <= k <= policy.n_planes:
                 raise ValueError(
@@ -390,13 +481,21 @@ class DslrServer:
             request_id = self._next_id
             self._next_id += 1
         handle = ResultHandle(self, request_id, slo)
+        # adaptive requests group by (tier, cascade stage, shape): every
+        # stage is its own program, so stages never share a wave — and
+        # adaptive waves never mix with plain waves of the same policy
+        group_key = (
+            ("adaptive", slo, 0, tuple(image.shape))
+            if is_adaptive
+            else (policy, tuple(image.shape))
+        )
         req = QueuedRequest(
             request_id=request_id,
             image=image,
             slo=slo,
             anytime=anytime,
             handle=handle,
-            group_key=(policy, tuple(image.shape)),
+            group_key=group_key,
             submit_t=handle.submit_time,
             deadline_t=handle.submit_time + dwell_ms * 1e-3,
         )
@@ -447,24 +546,32 @@ class DslrServer:
     def flush(self) -> None:
         """Synchronously drain the queue in the calling thread: group by
         (policy, image shape) in arrival order, chunk to the largest bucket,
-        dispatch.  On a started server this delegates to ``drain()`` — the
-        dispatcher owns the queue there."""
+        dispatch — looping until the queue stays empty, because an adaptive
+        wave re-enqueues its undecided tail at the next cascade stage.  On a
+        started server this delegates to ``drain()`` — the dispatcher owns
+        the queue there."""
         if self.running:
             self.drain()
             return
-        with self._lock:
-            queue, self._queue = self._queue, []
-        groups: Dict[Tuple[object, ...], List[QueuedRequest]] = {}
-        for r in queue:
-            groups.setdefault(r.group_key, []).append(r)
-        for reqs in groups.values():
-            while reqs:
-                chunk, reqs = reqs[: self.buckets[-1]], reqs[self.buckets[-1]:]
-                self._dispatch_wave(chunk)
+        while True:
+            with self._lock:
+                queue, self._queue = self._queue, []
+            if not queue:
+                return
+            groups: Dict[Tuple[object, ...], List[QueuedRequest]] = {}
+            for r in queue:
+                groups.setdefault(r.group_key, []).append(r)
+            for reqs in groups.values():
+                while reqs:
+                    chunk, reqs = reqs[: self.buckets[-1]], reqs[self.buckets[-1]:]
+                    self._dispatch_wave(chunk)
 
     def _dispatch_wave(self, chunk: List[QueuedRequest]) -> None:
         """Execute one wave (all requests share a (policy, shape) group key).
         Runs on the dispatcher thread (async) or the caller (sync flush)."""
+        if chunk[0].group_key[0] == "adaptive":
+            self._dispatch_adaptive_wave(chunk)
+            return
         policy = chunk[0].group_key[0]
         engine = self._engine_for(policy)
         bucket = self._bucket_for(len(chunk))
@@ -516,6 +623,74 @@ class DslrServer:
                 ),
                 wave_seq,
             )
+
+    def _dispatch_adaptive_wave(self, chunk: List[QueuedRequest]) -> None:
+        """One cascade-stage wave of a confidence-gated tier: run the stage
+        program on the whole (bucket-padded) wave, complete the decided
+        requests with the stage's logits, and escalate the undecided tail —
+        group key bumped to the next stage — back through the dispatcher's
+        escalation queue (sync path: back onto the flush queue).  Per-sample
+        scales make the padding and the wave composition bitwise invisible
+        to every request, so an escalated sample's final logits are
+        independent of who shared any of its waves."""
+        slo, stage_idx = chunk[0].slo, chunk[0].stage_idx
+        cascade = self.cascade_for(slo)
+        stage = cascade.stages[stage_idx]
+        bucket = self._bucket_for(len(chunk))
+        xb = jnp.stack([r.image for r in chunk])
+        if bucket > len(chunk):
+            xb = jnp.pad(
+                xb, ((0, bucket - len(chunk)), (0, 0), (0, 0), (0, 0))
+            )
+        logits, amax = cascade.run_stage(stage, xb)
+        n = len(chunk)
+        dec, _, _ = cascade.decide(
+            stage, logits[:n], None if amax is None else amax[:, :n]
+        )
+
+        with self._lock:
+            self.stats["dispatches"] += 1
+            self.stats["padded_rows"] += bucket - n
+            # a prefix-stage program is distinct from the plain program of
+            # the same policy (it also returns the per-layer amax), so it
+            # gets its own key; the final stage IS the plain program
+            key = (
+                (bucket, stage.policy)
+                if stage.final
+                else (bucket, stage.policy, "stage")
+            )
+            self.program_keys.add(key)
+            self.wave_log.append(tuple(r.request_id for r in chunk))
+            wave_seq = len(self.wave_log)
+
+        escalate: List[QueuedRequest] = []
+        n_exits = 0
+        for i, r in enumerate(chunk):
+            r.digits_spent += stage.planes_cost
+            if dec[i]:
+                n_exits += not stage.final
+                r.handle._set_result(
+                    logits[i],
+                    (),
+                    wave_seq,
+                    digits_spent=r.digits_spent,
+                    decided_at_stage=stage.index,
+                )
+            else:
+                r.stage_idx += 1
+                r.group_key = (
+                    "adaptive", r.slo, r.stage_idx, tuple(r.image.shape)
+                )
+                escalate.append(r)
+        with self._lock:
+            self.stats["early_exits"] += n_exits
+            self.stats["escalated"] += len(escalate)
+        if escalate:
+            if self.running:
+                self._dispatcher.requeue(escalate)
+            else:
+                with self._lock:
+                    self._queue.extend(escalate)
 
     # -- anytime error bounds --------------------------------------------------
 
@@ -571,20 +746,44 @@ class DslrServer:
         """Trace/compile every (bucket, SLO policy) program up front with
         zero images so steady-state latency percentiles exclude jit cost.
         ``anytime`` additionally warms the k-plane prefix programs that
-        requests asking for those partial budgets will hit.  Returns the
-        number of programs warmed (shared programs counted once)."""
-        n = 0
+        requests asking for those partial budgets will hit; an adaptive tier
+        warms every cascade stage program per bucket (a ``"calibrated"``
+        tier must be calibrated first).  Returns the number of programs
+        warmed (shared programs counted once)."""
+        warmed: Set[Tuple] = set()
         if slos is None:
             slos = sorted(set(self.slos) | set(self._slo_policies))
+        warm_buckets = tuple(buckets if buckets is not None else self.buckets)
         for slo in slos:
             policy = self.policy_for(slo)
+            cls = self._slo_class(slo)
+            if cls is not None and cls.adaptive:
+                cascade = self.cascade_for(slo)
+                for b in warm_buckets:
+                    xb = jnp.zeros((b,) + tuple(image_shape), jnp.float32)
+                    for stage in cascade.stages:
+                        key = (
+                            (b, stage.policy)
+                            if stage.final
+                            else (b, stage.policy, "stage")
+                        )
+                        if key in warmed:
+                            continue
+                        logits, _ = cascade.run_stage(stage, xb)
+                        jax.block_until_ready(logits)
+                        self.program_keys.add(key)
+                        warmed.add(key)
+                continue
             policies = {policy}
             policies.update(self._prefix_policy(policy, int(k)) for k in anytime)
             for pol in policies:
                 engine = self._engine_for(pol)
-                for b in buckets if buckets is not None else self.buckets:
+                for b in warm_buckets:
+                    key = (b, pol)
+                    if key in warmed:
+                        continue
                     xb = jnp.zeros((b,) + tuple(image_shape), jnp.float32)
                     jax.block_until_ready(engine(xb))
-                    self.program_keys.add((b, pol))
-                    n += 1
-        return n
+                    self.program_keys.add(key)
+                    warmed.add(key)
+        return len(warmed)

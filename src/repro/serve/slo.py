@@ -5,7 +5,12 @@ A serving request does not pick digit budgets — it picks a *service level*:
   * ``"exact"``    — every MSDF plane, the full-precision digit-plane result;
   * ``"balanced"`` — the planner solves per-layer budgets for a cycle target
                      at ~60% of the full-precision Eq.-3 cycle count;
-  * ``"fast"``     — the same, at ~35%.
+  * ``"fast"``     — the same, at ~35%;
+  * ``"adaptive"`` — confidence-gated early exit (repro.adaptive): the
+                     full-precision answer, but each request stops at the
+                     first digit-prefix stage whose top-1 margin provably
+                     dominates the remaining-digit bound, escalating
+                     otherwise — exact results at adaptive digit cost.
 
 The mapping runs through the budget planner (core/planner.py): the engine's
 per-layer (digits -> cycles, error) Pareto frontier is solved under the SLO's
@@ -40,11 +45,25 @@ class SloClass:
     """One service level: a name, the fraction of the full-precision
     predicted cycle count the planner may spend (``None`` = full precision,
     no planning), and the max queue dwell the async dispatcher may batch
-    under (milliseconds)."""
+    under (milliseconds).
+
+    ``adaptive=True`` marks a confidence-gated tier (repro.adaptive): a
+    request runs a cheap digit-prefix cascade and escalates only while its
+    top-1 class is undecided, so its final answer matches the tier's solved
+    policy while its *mean* digit cost falls below any static plan.
+    ``stages`` overrides the cascade's prefix budget ladder (``None`` = the
+    default geometric ladder); ``decision`` picks the exit rule —
+    ``"proven"`` (margin vs the sound remaining-digit bound; the early
+    answer equals the full-budget argmax by construction) or
+    ``"calibrated"`` (measured margin thresholds, heuristic — requires a
+    prior ``DslrServer.calibrate`` call)."""
 
     name: str
     cycle_fraction: Optional[float]
     max_dwell_ms: float = 200.0
+    adaptive: bool = False
+    stages: Optional[Tuple[int, ...]] = None
+    decision: str = "proven"
 
     def __post_init__(self):
         if self.cycle_fraction is not None and not 0.0 < self.cycle_fraction <= 1.0:
@@ -53,12 +72,21 @@ class SloClass:
             )
         if not self.max_dwell_ms > 0.0:
             raise ValueError(f"max_dwell_ms={self.max_dwell_ms} must be > 0")
+        if self.decision not in ("proven", "calibrated"):
+            raise ValueError(
+                f"decision={self.decision!r} not in ('proven', 'calibrated')"
+            )
+        if self.stages is not None and not self.adaptive:
+            raise ValueError("stages= only applies to an adaptive=True tier")
 
 
 DEFAULT_SLOS: Tuple[SloClass, ...] = (
     SloClass("fast", 0.35, max_dwell_ms=50.0),
     SloClass("balanced", 0.60, max_dwell_ms=200.0),
     SloClass("exact", None, max_dwell_ms=1000.0),
+    # full-precision answers at adaptive cost: provably-decided requests exit
+    # after a digit prefix, the rest escalate stage by stage to "exact"
+    SloClass("adaptive", None, max_dwell_ms=1000.0, adaptive=True),
 )
 
 

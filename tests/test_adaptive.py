@@ -1,0 +1,400 @@
+"""Confidence-gated adaptive inference: decision rule, cascade, serving.
+
+The contracts under test, in interpret mode on CPU:
+
+  * **The decision rule is sound by construction** — whenever
+    ``decided(margin, bound)`` accepts a prefix answer, NO logit
+    perturbation within the bound can change the argmax (property-tested
+    over random margin/bound combinations against the adversarial
+    worst-case perturbation), and a near-tie at ``margin == 2 * bound``
+    must NOT exit (strictness is load-bearing: the full run may tie).
+  * **The proven cascade never flips an argmax** — on a real engine every
+    early exit's top-1 equals the full-budget top-1, per sample; a pinned
+    wide-precision policy makes proven exits actually fire (worst-case
+    Lipschitz bounds rarely do on default-depth nets) so the positive path
+    is exercised, not just the escalate-everything path.
+  * **One compiled program per cascade stage** — serving an adaptive tier
+    traces each stage program exactly once per bucket (counted via
+    ``execute_graph``, the same discipline as test_serve.py), and repeat
+    traffic compiles nothing new.
+  * **Escalation is bitwise invisible** — an escalated sample's final
+    logits are independent of its wave-mates (outlier batches vs solo
+    cascade runs), because per-sample scales make compaction exact.
+  * **Serving semantics** — ``slo="adaptive"`` escalates a zero image
+    deterministically to the final stage, fills ``digits_spent`` /
+    ``decided_at_stage``, async == sync bitwise, ``anytime=`` is rejected,
+    calibrated tiers demand a prior ``calibrate``.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from benchmarks.run import MODULES, select_modules
+from repro.adaptive import (
+    calibrate_thresholds,
+    compile_cascade,
+    decided,
+    default_stages,
+    margins,
+    per_sample_bounds,
+    prefix_policy,
+    stage_coefficients,
+)
+from repro.adaptive.calibrate import _pick_threshold
+from repro.models import common as cm
+from repro.models import engine as engine_mod
+from repro.models.engine import compile_cnn
+from repro.models.graph import CnnConfig, ExecutionPolicy, graph_spec
+from repro.serve import DslrServer, SloClass
+
+
+def setup(name="alexnet", width=0.05, classes=4, seed=0, B=3, img=16, outlier=None):
+    cfg = CnnConfig(name=name, width=width, num_classes=classes)
+    params = cm.init_params(graph_spec(cfg), jax.random.PRNGKey(seed))
+    x = jnp.asarray(
+        np.random.default_rng(seed).standard_normal((B, img, img, 3)), jnp.float32
+    )
+    if outlier is not None:
+        x = x.at[0].multiply(outlier)
+    return cfg, params, x
+
+
+def proven_exit_engine(B=6):
+    """An engine whose proven rule actually fires: wide precision
+    (n_digits=16) with every conv pinned to 2 planes except the last at
+    full precision — the prefix stages truncate only the last conv, whose
+    output feeds the logits with no downstream Lipschitz amplification, so
+    the remaining-digit bound at k=12 (~2^-12) drops below real margins."""
+    cfg, params, x = setup(B=B)
+    names = [n.name for n in compile_cnn(cfg, params).graph.conv_nodes]
+    pol = ExecutionPolicy(
+        n_digits=16,
+        layer_budgets=tuple((nm, 2) for nm in names[:-1]) + ((names[-1], 17),),
+        per_sample_scales=True,
+    )
+    return compile_cnn(cfg, params, pol), x
+
+
+# ---------------------------------------------------------------------------
+# the decision rule
+# ---------------------------------------------------------------------------
+
+
+def test_margins_top1_minus_runner_up():
+    z = np.array([[1.0, 4.0, 2.5], [0.0, 0.0, 7.0]])
+    np.testing.assert_allclose(margins(z), [1.5, 7.0])
+    with pytest.raises(ValueError):
+        margins(np.ones((3, 1)))
+
+
+@given(st.integers(min_value=0, max_value=10**6))
+@settings(max_examples=40, deadline=None)
+def test_decided_implies_argmax_invariant_under_bound(seed):
+    """For every random (logits, bound) combo: if the rule accepts, the
+    adversarial worst case within the bound (top-1 pushed down by b, every
+    rival pushed up by b) cannot change the argmax.  The converse guard:
+    whenever the margin is <= 2b, that same perturbation CAN (and here
+    does) produce a different argmax or a tie — so a weaker rule would be
+    unsound, not just conservative."""
+    rng = np.random.default_rng(seed)
+    z = rng.standard_normal((8, 5)) * 10.0 ** rng.integers(-3, 3)
+    b = np.abs(rng.standard_normal(8)) * 10.0 ** rng.integers(-4, 2)
+    m = margins(z)
+    dec = decided(m, b)
+    top = z.argmax(-1)
+    worst = z + b[:, None]
+    worst[np.arange(8), top] = z[np.arange(8), top] - b
+    for s in range(8):
+        if dec[s]:
+            assert worst[s].argmax() == top[s], (s, z[s], b[s])
+        else:
+            # not decided: the adversary ties or beats the top-1
+            assert worst[s].max() >= worst[s][top[s]], (s, z[s], b[s])
+
+
+def test_near_tie_exactly_at_twice_bound_must_not_exit():
+    """The adversarial boundary case: margin == 2b admits a full-budget
+    tie, which may resolve either way — the strict rule must escalate."""
+    z = np.array([[3.0, 1.0, 0.0]])
+    b = np.array([1.0])  # margin 2.0 == 2 * b
+    assert not decided(margins(z), b)[0]
+    assert decided(margins(z), b - 1e-9)[0]  # strictly inside: exits
+
+
+def test_prefix_policy_clips_and_degenerates():
+    pol = ExecutionPolicy(per_sample_scales=True)
+    p2 = prefix_policy(pol, 2)
+    assert p2.digit_budget == 2
+    assert prefix_policy(pol, pol.n_planes) is pol  # nothing to truncate
+    lb = ExecutionPolicy(
+        layer_budgets=(("a", 3), ("b", 8)), per_sample_scales=True
+    )
+    assert prefix_policy(lb, 4).layer_budgets == (("a", 3), ("b", 4))
+    assert prefix_policy(lb, 8) is lb
+
+
+def test_stage_coefficients_zero_for_untruncated_layers():
+    engine, _ = proven_exit_engine(B=2)
+    coefs = stage_coefficients(engine, 8)
+    # every conv but the last is pinned at 2 planes (k=8 truncates nothing
+    # there); only the last conv contributes to the bound
+    assert np.all(coefs[:-1] == 0.0) and coefs[-1] > 0.0
+    amax = np.ones((len(coefs), 4))
+    np.testing.assert_allclose(per_sample_bounds(coefs, amax), coefs.sum())
+
+
+# ---------------------------------------------------------------------------
+# the cascade
+# ---------------------------------------------------------------------------
+
+
+def test_proven_cascade_never_flips_argmax():
+    cfg, params, x = setup(B=5, outlier=1000.0)
+    engine = compile_cnn(cfg, params, ExecutionPolicy(per_sample_scales=True))
+    res = compile_cascade(engine).run(x)
+    full_top = np.argmax(np.asarray(engine(x)), axis=-1)
+    np.testing.assert_array_equal(res.top1, full_top)
+    # digit accounting: every sample's spend is the sum of the planes_cost
+    # of the stages it attended
+    cascade = compile_cascade(engine)
+    costs = np.cumsum([s.planes_cost for s in cascade.stages])
+    np.testing.assert_array_equal(res.digits_spent, costs[res.decided_at_stage])
+
+
+def test_proven_exits_actually_fire_and_stay_sound():
+    """The positive path: under the pinned wide-precision policy some
+    samples exit provably early — with finite recorded bounds, margins
+    strictly above 2x bound, and zero argmax flips."""
+    engine, x = proven_exit_engine()
+    cascade = compile_cascade(engine, stages=(8, 12))
+    res = cascade.run(x)
+    full_top = np.argmax(np.asarray(engine(x)), axis=-1)
+    np.testing.assert_array_equal(res.top1, full_top)
+    early = res.decided_at_stage < len(cascade.stages) - 1
+    assert early.any(), "recipe regressed: no proven early exits fired"
+    assert np.all(np.isfinite(res.bounds[early]))
+    assert np.all(res.margins[early] > 2.0 * res.bounds[early])
+    assert res.mean_planes_per_layer < float(
+        np.cumsum([s.planes_cost for s in cascade.stages])[-1]
+    ) / res.n_conv_layers
+
+
+def test_escalated_sample_bitwise_independent_of_wave_mates():
+    """Batch composition must be invisible: each sample's cascade outcome
+    (logits, exit stage) in an outlier-polluted batch equals its solo run
+    bitwise — the contract that lets the dispatcher fold undecided tails
+    into whatever wave comes next."""
+    engine, x = proven_exit_engine()
+    x = x.at[0].multiply(1000.0)
+    cascade = compile_cascade(engine, stages=(8, 12))
+    res = cascade.run(x)
+    for i in range(x.shape[0]):
+        solo = cascade.run(x[i : i + 1])
+        np.testing.assert_array_equal(res.logits[i], solo.logits[0])
+        assert res.decided_at_stage[i] == solo.decided_at_stage[0]
+        assert res.digits_spent[i] == solo.digits_spent[0]
+
+
+def test_compile_cascade_validation():
+    cfg, params, _ = setup(B=2)
+    per_tensor = compile_cnn(cfg, params, ExecutionPolicy())
+    with pytest.raises(ValueError, match="per_sample_scales"):
+        compile_cascade(per_tensor)
+    engine = compile_cnn(cfg, params, ExecutionPolicy(per_sample_scales=True))
+    with pytest.raises(ValueError, match="ascending"):
+        compile_cascade(engine, stages=(4, 2))
+    with pytest.raises(ValueError, match="truncates nothing"):
+        compile_cascade(engine, stages=(engine.policy.n_planes,))
+
+
+def test_default_stages_geometric_ladder():
+    assert default_stages(9) == (2, 4, 8)
+    assert default_stages(5) == (2, 4)
+    with pytest.raises(ValueError):
+        default_stages(2)
+
+
+# ---------------------------------------------------------------------------
+# calibration (heuristic mode)
+# ---------------------------------------------------------------------------
+
+
+def test_pick_threshold_sweep():
+    m = np.array([5.0, 4.0, 3.0, 2.0])
+    # all agree -> everything exits (tau below every margin)
+    tau, frac, acc = _pick_threshold(m, np.ones(4, bool), 1.0)
+    assert tau == -1.0 and frac == 1.0 and acc == 1.0
+    # top-margin sample is WRONG -> at target 1.0 nothing may exit
+    agree = np.array([False, True, True, True])
+    tau, frac, acc = _pick_threshold(m, agree, 1.0)
+    assert frac == 0.0
+    # at a relaxed target the wrong sample is tolerated
+    tau, frac, acc = _pick_threshold(m, agree, 0.75)
+    assert frac == 1.0 and acc == 0.75
+
+
+def test_calibrated_cascade_meets_measured_agreement():
+    cfg, params, x = setup(B=8)
+    engine = compile_cnn(cfg, params, ExecutionPolicy(per_sample_scales=True))
+    cal = calibrate_thresholds(engine, x, target_argmax_agreement=1.0)
+    res = compile_cascade(engine, calibration=cal).run(x)
+    full_top = np.argmax(np.asarray(engine(x)), axis=-1)
+    # self-calibrated at target 1.0: agreement holds exactly on this batch
+    np.testing.assert_array_equal(res.top1, full_top)
+    with pytest.raises(ValueError, match="conflicts"):
+        compile_cascade(engine, stages=(3,), calibration=cal)
+    with pytest.raises(ValueError, match="target_argmax_agreement"):
+        calibrate_thresholds(engine, x, target_argmax_agreement=0.0)
+    with pytest.raises(ValueError, match="B >= 2"):
+        calibrate_thresholds(engine, x[:1])
+
+
+# ---------------------------------------------------------------------------
+# serving integration
+# ---------------------------------------------------------------------------
+
+
+def _counting_execute_graph(monkeypatch):
+    calls = {"n": 0}
+    real = engine_mod.execute_graph
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+
+    monkeypatch.setattr(engine_mod, "execute_graph", counting)
+    return calls
+
+
+def test_adaptive_tier_one_program_per_stage_by_trace_counting(monkeypatch):
+    # unique shapes/classes so this test owns its jit cache entries
+    cfg, params, _ = setup(width=0.04, classes=7, img=10)
+    engine = compile_cnn(cfg, params, ExecutionPolicy())
+    server = DslrServer(
+        engine,
+        slos=(SloClass("adaptive", None, max_dwell_ms=1000.0, adaptive=True),),
+        buckets=(4,),
+    )
+    calls = _counting_execute_graph(monkeypatch)
+    n_stages = len(server.cascade_for("adaptive").stages)
+
+    def traffic():
+        handles = [
+            server.submit(jnp.zeros((10, 10, 3), jnp.float32), slo="adaptive")
+            for _ in range(3)
+        ]
+        server.flush()
+        return handles
+
+    traffic()  # zero images escalate through every stage (margin 0)
+    assert calls["n"] == n_stages, calls
+    assert len(server.program_keys) == n_stages
+    # prefix-stage keys are distinct from the final (plain-program) key
+    assert sum(len(k) == 3 for k in server.program_keys) == n_stages - 1
+    handles = traffic()  # repeat traffic: everything from the jit cache
+    assert calls["n"] == n_stages, calls
+    assert all(h.done() for h in handles)
+
+
+def test_server_adaptive_sync_escalates_zero_image_to_final():
+    cfg, params, _ = setup()
+    engine = compile_cnn(cfg, params, ExecutionPolicy())
+    server = DslrServer(engine, buckets=(1, 2, 4))
+    h = server.submit(jnp.zeros((16, 16, 3), jnp.float32), slo="adaptive")
+    logits = h.result()
+    cascade = server.cascade_for("adaptive")
+    n_stages = len(cascade.stages)
+    assert h.decided_at_stage == n_stages - 1
+    assert h.digits_spent == sum(s.planes_cost for s in cascade.stages)
+    assert len(server.wave_log) == n_stages  # one wave per escalation hop
+    assert server.stats["escalated"] == n_stages - 1
+    assert server.stats["early_exits"] == 0
+    ref = server._engine_for(server.policy_for("adaptive"))(
+        jnp.zeros((1, 16, 16, 3), jnp.float32)
+    )[0]
+    np.testing.assert_array_equal(np.asarray(logits), np.asarray(ref))
+
+
+def test_server_adaptive_async_bitwise_matches_sync():
+    cfg, params, x = setup(B=5, outlier=1000.0)
+    engine = compile_cnn(cfg, params, ExecutionPolicy())
+    sync = DslrServer(engine, buckets=(1, 2, 4))
+    hs = [sync.submit(x[i], slo="adaptive") for i in range(5)]
+    sync.flush()
+    with DslrServer(engine, buckets=(1, 2, 4)) as server:
+        ha = [server.submit(x[i], slo="adaptive") for i in range(5)]
+        server.drain()
+    for s, a in zip(hs, ha):
+        np.testing.assert_array_equal(
+            np.asarray(s.result()), np.asarray(a.result())
+        )
+        assert s.digits_spent == a.digits_spent
+        assert s.decided_at_stage == a.decided_at_stage
+
+
+def test_server_adaptive_rejects_anytime():
+    cfg, params, _ = setup()
+    engine = compile_cnn(cfg, params, ExecutionPolicy())
+    server = DslrServer(engine)
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        server.submit(
+            jnp.zeros((16, 16, 3), jnp.float32), slo="adaptive", anytime=(2,)
+        )
+
+
+def test_server_calibrated_tier_requires_calibration():
+    cfg, params, x = setup(B=8)
+    engine = compile_cnn(cfg, params, ExecutionPolicy())
+    server = DslrServer(
+        engine,
+        slos=(
+            SloClass("exact", None, max_dwell_ms=1000.0),
+            SloClass(
+                "adaptive_cal",
+                None,
+                max_dwell_ms=1000.0,
+                adaptive=True,
+                decision="calibrated",
+            ),
+        ),
+        buckets=(1, 2, 4, 8),
+    )
+    with pytest.raises(RuntimeError, match="calibrate"):
+        server.submit(x[0], slo="adaptive_cal")
+    with pytest.raises(ValueError, match="not an adaptive tier"):
+        server.calibrate("exact", x)
+    server.calibrate("adaptive_cal", x)
+    h = server.submit(x[0], slo="adaptive_cal")
+    assert h.result().shape == (4,)
+    assert h.digits_spent is not None and h.decided_at_stage is not None
+
+
+def test_slo_class_adaptive_validation():
+    with pytest.raises(ValueError, match="stages"):
+        SloClass("s", None, stages=(2, 4))
+    with pytest.raises(ValueError, match="decision"):
+        SloClass("s", None, adaptive=True, decision="hopeful")
+    with pytest.raises(ValueError, match="proven"):
+        cfg, params, x = setup(B=2)
+        engine = compile_cnn(cfg, params, ExecutionPolicy())
+        DslrServer(engine).calibrate("adaptive", x)
+
+
+# ---------------------------------------------------------------------------
+# benchmark harness --only (satellite: exact module matching)
+# ---------------------------------------------------------------------------
+
+
+def test_select_modules_exact_and_comma_list():
+    assert select_modules(None) == MODULES
+    assert select_modules("serve_bench") == ["serve_bench"]  # no prefix bleed
+    assert select_modules("conv_bench,kernels_bench") == [
+        "kernels_bench",
+        "conv_bench",
+    ]  # MODULES order, not argument order
+    with pytest.raises(ValueError, match="serve"):
+        select_modules("serve")  # the old prefix form is now an error
+    with pytest.raises(ValueError, match="unknown"):
+        select_modules("kernels_bench,nope")

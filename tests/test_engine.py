@@ -185,18 +185,20 @@ def test_policy_validation():
         DslrEngine(cfg, params, ExecutionPolicy(layer_budgets=(("bogus", 4),)))
 
 
-def test_serve_pad_to_keyword_deprecated():
-    """Padding policy lives on ExecutionPolicy.serve_pad_to now; the old
-    per-call keyword still works but must say it is going away, and both
-    spellings produce the identical bits."""
+def test_serve_pad_to_keyword_removed():
+    """Padding policy lives on ExecutionPolicy.serve_pad_to; the PR-6
+    deprecation shim (`serve(pad_to=)`) is gone — passing the old keyword is
+    a TypeError, and the policy spelling keeps producing the same bits as a
+    plain padded call."""
     cfg, params, x = setup("alexnet", width=0.02)
     engine = compile_cnn(cfg, params, ExecutionPolicy())
-    with pytest.warns(DeprecationWarning, match="serve_pad_to"):
-        want = engine.serve(x, pad_to=4)
-    via_policy = compile_cnn(
-        cfg, params, ExecutionPolicy(serve_pad_to=4)
-    ).serve(x)
-    np.testing.assert_array_equal(np.asarray(want), np.asarray(via_policy))
+    with pytest.raises(TypeError):
+        engine.serve(x, pad_to=4)
+    via_policy_engine = compile_cnn(cfg, params, ExecutionPolicy(serve_pad_to=4))
+    served = via_policy_engine.serve(x)
+    np.testing.assert_array_equal(
+        np.asarray(served), np.asarray(via_policy_engine(x))
+    )
     with pytest.raises(ValueError):
         ExecutionPolicy(serve_pad_to=0)
 
