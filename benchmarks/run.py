@@ -16,6 +16,7 @@ One module per paper table/figure:
   serve_bench        request-level server: mixed-SLO latency, scale decoupling
   serve_async_bench  async dispatcher: sustained-load p99 vs QPS, bitwise parity
   adaptive_bench     confidence-gated early exit: mean digits vs static plans
+  pipeline_bench     cross-layer digit pipelining: traffic saved, cycle overlap
 
 ``--only`` takes exact module names (comma-separated for several); an
 unknown name is an error, not a silent no-op.  (It used to be a prefix
@@ -45,7 +46,20 @@ MODULES = [
     "serve_bench",
     "serve_async_bench",
     "adaptive_bench",
+    "pipeline_bench",
 ]
+
+
+def flag_value(argv: List[str], flag: str) -> Optional[str]:
+    """The token after ``flag`` in ``argv``, or None if absent.  A trailing
+    flag with no operand is an error (it used to IndexError into a
+    traceback when ``--only`` or ``--json`` was the last token)."""
+    if flag not in argv:
+        return None
+    i = argv.index(flag)
+    if i + 1 >= len(argv):
+        raise ValueError(f"{flag} requires an argument")
+    return argv[i + 1]
 
 
 def select_modules(only: Optional[str]) -> List[str]:
@@ -65,13 +79,9 @@ def select_modules(only: Optional[str]) -> List[str]:
 
 
 def main() -> None:
-    only = None
-    if "--only" in sys.argv:
-        only = sys.argv[sys.argv.index("--only") + 1]
-    json_path = os.environ.get("BENCH_JSON")
-    if "--json" in sys.argv:
-        json_path = sys.argv[sys.argv.index("--json") + 1]
     try:
+        only = flag_value(sys.argv, "--only")
+        json_path = flag_value(sys.argv, "--json") or os.environ.get("BENCH_JSON")
         selected = select_modules(only)
     except ValueError as e:
         print(f"# {e}", file=sys.stderr)

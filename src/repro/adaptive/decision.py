@@ -73,21 +73,41 @@ def stage_coefficients(
     at stage budget ``k`` is ``sum_i c_i * amax_i(sample)``.  Layers whose
     policy budget the stage does not truncate contribute 0 (their prefix
     output is already exact).  ``gains`` lets a caller reuse one
-    ``engine.node_gains()`` walk across stages."""
+    ``engine.node_gains()`` walk across stages.
+
+    On a ``pipeline=True`` engine the consumer ``b`` of each fused pair
+    picks up one extra grid-step term ``2**-f`` whenever its producer ``a``
+    is truncated at this stage: prefix and full run then re-emit the mid
+    digits from *different* f32 values, and re-quantization onto the shared
+    mid grid can move the result by up to one grid step beyond the value
+    difference (which ``a``'s own truncation term already covers).  The
+    grid itself is shared by construction — ``pipeline_mid_scale`` is
+    budget-independent, and ``execute_graph`` materializes a witness tensor
+    for the fused mid so ``amax_b`` reads off exactly that grid (over
+    ``1 + 2**-f``), not an observed mid amax that could understate it."""
     pol = engine.policy
     if gains is None:
         gains = engine.node_gains()
     f = pol.n_digits
+    producer_of = (
+        {b: a for a, b in engine.graph.pipeline_pairs()} if pol.pipeline else {}
+    )
+    full_of = {
+        n.name: pol.budget_for(n.name) or pol.n_planes
+        for n in engine.graph.conv_nodes
+    }
     coefs = []
     for node in engine.graph.conv_nodes:
-        full = pol.budget_for(node.name) or pol.n_planes
+        full = full_of[node.name]
         k_eff = min(int(k), full)
-        if k_eff < full:
+        term = 2.0 ** -k_eff if k_eff < full else 0.0
+        a = producer_of.get(node.name)
+        if a is not None and min(int(k), full_of[a]) < full_of[a]:
+            term += 2.0 ** -f  # re-quantization step on the shared mid grid
+        if term:
             w_flat, _ = engine._weights[node.name]
             row_l1 = float(jnp.max(jnp.sum(jnp.abs(w_flat), axis=0)))
-            coefs.append(
-                gains[node.name] * row_l1 * 2.0 * (1.0 + 2.0 ** -f) * 2.0 ** -k_eff
-            )
+            coefs.append(gains[node.name] * row_l1 * 2.0 * (1.0 + 2.0 ** -f) * term)
         else:
             coefs.append(0.0)
     return np.asarray(coefs, np.float64)

@@ -55,6 +55,10 @@ T_C = 8  # spatial tiling (T_r * T_c = 64 PEs per row-dimension)
 PRECISION = 16  # P_i, bits
 DELTA_MULT = 2
 DELTA_ADD = 2
+# online delay of the output-recoding stage that converts a running partial
+# sum into MSDF digits of the result (core/online.py::DELTA_RECODE — kept
+# literal here so this module stays jax-free; tests pin the two equal)
+DELTA_RECODE = 2
 
 # baseline bit-serial MAC: Mult + Acc stages, each traversing the full
 # 2n-1-bit LSB-first product (see module docstring calibration)
@@ -207,17 +211,38 @@ def tile_count(layer: ConvLayer) -> int:
     )
 
 
-def dslr_cycles(layer: ConvLayer, precision: int = PRECISION) -> int:
-    """Eq. (3): per-tile pipeline fill + drain, times the tile count."""
-    inner = (
+def fill_cycles(layer: ConvLayer) -> int:
+    """Eq. (3)'s precision-independent per-tile term: the online fill (LR-SPM
+    and adder-tree delays) plus the drain of both reduction trees.  A conv
+    layer's per-tile latency is ``fill_cycles + P_i``; exposing the split
+    lets the pipelining model charge a fused consumer only its fill."""
+    return (
         DELTA_MULT
         + DELTA_ADD * _clog2(layer.k * layer.k)
         + DELTA_ADD * _clog2(T_N)
-        + precision
         + _clog2(layer.k * layer.k)
         + _clog2(T_N)
     )
-    return inner * tile_count(layer)
+
+
+def dslr_cycles(layer: ConvLayer, precision: int = PRECISION) -> int:
+    """Eq. (3): per-tile pipeline fill + drain, times the tile count."""
+    return (fill_cycles(layer) + precision) * tile_count(layer)
+
+
+def pipelined_pair_cycles(
+    a: ConvLayer, b: ConvLayer, precision: int = PRECISION
+) -> int:
+    """Latency of a fused conv→conv pair under cross-layer digit pipelining
+    (Fig. 2 applied at layer granularity): layer ``b`` starts once layer
+    ``a``'s first output digit emerges from the online recoder, so the pair
+    overlaps to ``max`` of the two layers' serial durations plus ``b``'s
+    pipeline fill and the recoding delay — instead of their sum."""
+    return (
+        max(dslr_cycles(a, precision), dslr_cycles(b, precision))
+        + fill_cycles(b)
+        + DELTA_RECODE
+    )
 
 
 def baseline_cycles(layer: ConvLayer, precision: int = PRECISION) -> int:

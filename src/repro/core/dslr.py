@@ -121,6 +121,34 @@ def anytime_error_bound(w: jax.Array, scale: jax.Array, digits_used: int) -> jax
     return scale * (2.0 ** -(digits_used)) * row_l1 * 2.0
 
 
+def pipeline_mid_scale(
+    w_flat: jax.Array,
+    bias: jax.Array | None,
+    scale: jax.Array,
+    frac_bits: int,
+) -> jax.Array:
+    """Analytic a-priori quantization grid for a pipelined conv→conv
+    interchange (the digit-streaming executor's mid scale).
+
+    The serial path quantizes a layer's f32 output against its *observed*
+    amax — unavailable when the output is emitted digit-by-digit inside the
+    kernel.  Instead the pipeline uses the worst-case output magnitude,
+    known before the launch from the producer's weights and input grid:
+
+        |out| <= max_c ||W_{.,c}||_1 * scale_in + max|bias|
+
+    inflated by ``(1 + 2**-f)`` like every grid in ``digits.to_planes`` so
+    the quantizer never clips.  A sound upper bound on the observed scale
+    (the grid is coarser, never finer — the planner's ``recode_bound``
+    prices the difference); budget-independent, which is what keeps the
+    adaptive cascade's prefix-vs-full comparison on one grid
+    (`repro.adaptive`).  ``scale`` may be per-sample ``(B,)``.
+    """
+    row_l1 = jnp.max(jnp.sum(jnp.abs(w_flat.astype(jnp.float32)), axis=0))
+    bmax = 0.0 if bias is None else jnp.max(jnp.abs(bias.astype(jnp.float32)))
+    return (row_l1 * scale + bmax) * (1.0 + 2.0**-frac_bits)
+
+
 @functools.partial(jax.jit, static_argnames=("n_digits", "recoding"))
 def dslr_linear(
     x: jax.Array, w: jax.Array, b: jax.Array | None = None,

@@ -31,6 +31,7 @@ from . import digits as dig
 
 DELTA_MULT = 2  # online delay of the LR-SPM [35]
 DELTA_ADD = 2  # online delay of the radix-2 SD online adder [24]
+DELTA_RECODE = 2  # online delay of the MSDF output recoder (recode_msdf)
 
 
 class SopResult(NamedTuple):
@@ -156,6 +157,107 @@ def online_add(a_digits: jax.Array, b_digits: jax.Array) -> jax.Array:
 def online_add_value_scale() -> int:
     """Each online_add output is (a+b) * 2**-1; trees multiply this back."""
     return 1
+
+
+# ---------------------------------------------------------------------------
+# online output recoding (the pipelining hinge: partial sums -> MSDF digits)
+# ---------------------------------------------------------------------------
+
+
+def msdf_prefix_sums(digits: jax.Array) -> jax.Array:
+    """Running partial sums of an MSDF digit stream, as int32 fixed point.
+
+    ``digits``: int8 ``(..., J)`` in the standard frame (slot j has weight
+    ``2**-j``).  Returns ``(..., J + 1)`` int32 in units ``2**-(J-1)``:
+    entry ``k`` is the value of the first ``k`` digits, entry 0 is 0 and
+    entry ``J`` the full value.  This is exactly the estimate sequence
+    ``recode_msdf`` consumes (``frac_bits = J - 1``): consecutive entries
+    differ by ``d_k * 2**-k``, so the convergence contract
+    ``|u[k+1] - u[k]| <= 2**-k`` holds by construction.
+    """
+    J = digits.shape[-1]
+    weights = jnp.asarray([1 << (J - 1 - j) for j in range(J)], jnp.int32)
+    contrib = digits.astype(jnp.int32) * weights
+    run = jnp.cumsum(contrib, axis=-1)
+    zero = jnp.zeros(digits.shape[:-1] + (1,), jnp.int32)
+    return jnp.concatenate([zero, run], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("frac_bits", "n_out", "delay"))
+def recode_msdf(
+    prefix: jax.Array,
+    frac_bits: int,
+    n_out: int | None = None,
+    delay: int = DELTA_RECODE,
+) -> Tuple[jax.Array, jax.Array]:
+    """On-the-fly recoding of a converging partial-sum stream into MSDF digits.
+
+    This is the online step that lets layer N+1 start before layer N's sum
+    is complete: instead of waiting for the final value and quantizing it
+    (``digits.sd_from_fixed``), the recoder watches the *running* partial
+    sums and commits one signed digit per step, ``delay`` steps behind the
+    estimate it consults.
+
+    Args:
+      prefix: int32 ``(..., S)`` fixed-point estimates ``u_0 .. u_{S-1}`` in
+        units ``2**-frac_bits`` (so value ``= u * 2**-frac_bits``),
+        converging to the exact result ``u_{S-1}``.  Contract (satisfied by
+        partial sums of any valid digit stream, cf. ``msdf_prefix_sums``):
+        ``|value(u_final)| <= 1`` and ``|value(u[k+1] - u[k])| <= 2**-k``.
+      n_out: emitted digit slots are ``0..n_out`` (default
+        ``frac_bits + 1``).  Slot 0 is the integer digit (may be nonzero,
+        like CSD spill).
+      delay: the online delay delta: digit slot ``j`` consults estimate
+        ``u[min(j + delay, S - 1)]`` and nothing later (the prefix
+        property asserted in tests/test_pipeline.py).  The default
+        ``DELTA_RECODE = 2`` is the smallest delay for which the selection
+        residual stays bounded under the contract above.
+
+    Returns:
+      ``(digits, residual)``: ``digits`` int8 ``(..., n_out + 1)`` valid
+      MSDF ({-1,0,1}); ``residual = value(u_final) - value(digits)`` as
+      float32.
+
+    Guarantees (derived in docs/NUMERICS.md "Online recoding"):
+      * **bracket**: after ``k`` emitted digits,
+        ``|value(u_final) - value(digits[..., :k])| <= 2**-(k-1)`` — every
+        prefix is a valid anytime answer with the same geometric tail as a
+        direct MSDF quantization one digit shorter.
+      * **exactness**: with ``n_out >= frac_bits + 1`` and the full stream
+        consumed (``S >= frac_bits + 2``), the residual is exactly 0, i.e.
+        recode∘value is the identity on representable values.
+
+    Selection runs in integers at internal precision ``F`` (all thresholds
+    are powers of two, no rounding): with residual ``r = u_est - value
+    emitted so far``, slot j emits ``+1`` iff ``r >= 2**(F-j-1)`` (i.e. the
+    scaled residual ``r * 2**j >= 1/2``), ``-1`` symmetrically, else 0.
+    The invariant ``|r * 2**j| <= 3/2`` holds inductively: selection leaves
+    ``<= 1/2``, the doubling brings it to 1, and the estimate update at
+    index ``j + delay`` adds at most ``2**(j+1) * 2**-(j+delay)`` = 1/2.
+    """
+    if delay < 2:
+        raise ValueError(f"recode_msdf requires delay >= 2, got {delay}")
+    S = prefix.shape[-1]
+    if n_out is None:
+        n_out = frac_bits + 1
+    F = max(frac_bits, n_out) + 1
+    if F >= 30:
+        raise ValueError(f"internal precision {F} overflows int32 selection")
+    up = prefix.astype(jnp.int32) << (F - frac_bits)
+    v = jnp.zeros(prefix.shape[:-1], jnp.int32)
+    out = []
+    for j in range(n_out + 1):
+        e = min(j + delay, S - 1)
+        r = up[..., e] - v
+        th = jnp.int32(1 << (F - j - 1))
+        d = jnp.where(
+            r >= th, jnp.int32(1), jnp.where(r <= -th, jnp.int32(-1), jnp.int32(0))
+        )
+        v = v + (d << (F - j))
+        out.append(d.astype(jnp.int8))
+    digits = jnp.stack(out, axis=-1)
+    residual = (up[..., S - 1] - v).astype(jnp.float32) * 2.0**-F
+    return digits, residual
 
 
 # ---------------------------------------------------------------------------

@@ -53,6 +53,30 @@ def anytime_bound(row_l1: float, scale: float, digits_used: int) -> float:
     return float(scale) * 2.0 ** -(digits_used - 1) * float(row_l1)
 
 
+def recode_bound(
+    row_l1: float, scale: float, frac_bits: int, digits_used: int
+) -> float:
+    """Anytime bound for a layer whose input was *online-recoded*: the
+    pipelined conv→conv interchange re-quantizes the producer's output onto
+    the mid grid ``scale`` in-kernel, so the consumer's input carries one
+    extra grid step ``scale * 2**-f`` (the round-to-grid error, which the
+    serial path pays identically but the anytime model books against the
+    producer's observed activation) on top of the usual truncation tail:
+
+        |exact - recoded_k| <= scale * (2**-(k-1) + 2**-f) * max_col ||W||_1
+
+    At full budget (``k = f + 1``) the tail term is ``2**-f`` too, so the
+    bound floors at ``2 * scale * 2**-f * row_l1`` — the recoding term never
+    reaches zero, which is why pipelined engines report it separately
+    (``DslrEngine.error_bounds``; derivation in docs/NUMERICS.md, "Online
+    recoding")."""
+    return (
+        float(scale)
+        * (2.0 ** -(digits_used - 1) + 2.0 ** -frac_bits)
+        * float(row_l1)
+    )
+
+
 @dataclasses.dataclass(frozen=True)
 class LayerCurve:
     """One conv layer's (digit budget -> predicted cycles, error bound)

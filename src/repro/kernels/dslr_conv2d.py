@@ -56,6 +56,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import digits as dig
+from repro.core import dslr as core_dslr
 
 from . import tuning
 
@@ -70,6 +71,35 @@ def _epilogue(acc, bias_ref, apply_relu: bool):
     if apply_relu:
         res = jnp.maximum(res, 0.0)
     return res
+
+
+def _emit_packed_planes(res, inv_ref, out_ref, frac_bits: int, n_digits: int):
+    """Digit-emitting flush epilogue (``emit_planes=True``): quantize the
+    finished accumulator tile onto the grid ``1/inv`` and write its packed
+    2-bit MSDF planes instead of f32 — the next conv layer's input is born
+    in the interchange format and the f32 activation never exists in HBM.
+
+    The math line-for-line mirrors ``msdf_quantize._quantize_packed_kernel``
+    (same reciprocal multiply, same round/clip, same greedy recurrence and
+    byte layout), so the emitted planes are bitwise identical to routing the
+    f32 output through ``ops.msdf_quantize(..., packed=True)`` on the same
+    grid — the property tests/test_pipeline_diff.py pins."""
+    scaled = res * inv_ref[...] * float(2**frac_bits)
+    lim = float(2**frac_bits - 1)
+    w = jnp.clip(jnp.round(scaled), -lim, lim).astype(jnp.int32)
+    for g in range(dig.packed_group_count(n_digits)):
+        byte = jnp.zeros_like(w)
+        for s in range(4):
+            j = 4 * g + s
+            # slot 0 and out-of-budget digits encode as 0b00
+            if j == 0 or j >= n_digits:
+                continue
+            weight = 1 << (frac_bits - j)
+            two_w = 2 * w
+            dgt = jnp.where(two_w >= weight, 1, jnp.where(two_w <= -weight, -1, 0))
+            w = w - dgt * weight
+            byte = byte | ((dgt & 3) << (2 * s))
+        out_ref[g] = jnp.where(byte >= 128, byte - 256, byte).astype(jnp.int8)
 
 
 def _dslr_conv2d_kernel(
@@ -238,16 +268,18 @@ def _dslr_conv2d_packed_kernel(
     packed_ref,  # (1, bm, T) int8 — byte group fetch[m, d] of the patches
     w_ref,  # (T, bn) f32 — stationary flattened filter tile
     scale_ref,  # (1, 1) f32 — 2**-d digit weight of this plane
-    *refs,  # [row_scale_ref,] [bias_ref,] out_ref, acc_ref — as unpacked
+    *refs,  # [row_scale_ref,] [bias_ref,] [inv_ref if emit,] out_ref, acc_ref
     n_digits: int,
     skip_zero_planes: bool,
     has_row_scale: bool,
     has_bias: bool,
     apply_relu: bool,
+    emit: tuple | None = None,  # (frac_bits, n_digits) of the emitted planes
 ):
     del fetch_ref  # consumed by the index map, not the body
     row_scale_ref = refs[0] if has_row_scale else None
     bias_ref = refs[1] if (has_row_scale and has_bias) else refs[0] if has_bias else None
+    inv_ref = refs[-3] if emit is not None else None
     out_ref, acc_ref = refs[-2], refs[-1]
     m, d = pl.program_id(0), pl.program_id(2)
 
@@ -282,12 +314,25 @@ def _dslr_conv2d_packed_kernel(
 
     @pl.when(d == n_digits - 1)
     def _flush():
-        out_ref[...] = _epilogue(acc_ref[...], bias_ref, apply_relu)
+        res = _epilogue(acc_ref[...], bias_ref, apply_relu)
+        if emit is None:
+            out_ref[...] = res
+        else:
+            _emit_packed_planes(res, inv_ref, out_ref, emit[0], emit[1])
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_m", "block_n", "skip_zero_planes", "apply_relu", "interpret"),
+    static_argnames=(
+        "block_m",
+        "block_n",
+        "skip_zero_planes",
+        "apply_relu",
+        "interpret",
+        "emit_planes",
+        "emit_frac_bits",
+        "emit_n_digits",
+    ),
 )
 def dslr_conv2d_planes_packed_mxu(
     packed: jax.Array,  # (ceil(D/4), M, T) int8 — packed im2col digit planes
@@ -300,6 +345,10 @@ def dslr_conv2d_planes_packed_mxu(
     skip_zero_planes: bool = True,
     apply_relu: bool = False,
     interpret: bool = False,
+    emit_planes: bool = False,
+    emit_scale: jax.Array | None = None,  # scalar or (M,) — the mid grid
+    emit_frac_bits: int = 8,
+    emit_n_digits: int | None = None,
 ) -> jax.Array:
     """Packed-interchange twin of ``dslr_conv2d_planes_mxu`` — same contract,
     bitwise-identical result, ~4x less HBM traffic on the patch operand.
@@ -312,12 +361,31 @@ def dslr_conv2d_planes_packed_mxu(
     driven by a scalar-prefetched activity bitmap: dead digits skip the MXU
     pass *and* dead byte groups are never DMA'd into VMEM, because the plane
     index map points them at the already-resident block.
+
+    ``emit_planes=True`` switches the flush epilogue from f32 to the digit
+    emitter: the post-bias/ReLU tile is quantized onto the grid
+    ``emit_scale`` (scalar, or (M,) per output row) and written as packed
+    2-bit MSDF planes — ``(ceil(emit_n_digits/4), M, N) int8`` instead of
+    ``(M, N) f32`` — bitwise identical to quantizing the f32 output through
+    ``ops.msdf_quantize(..., packed=True)`` on the same grid.  This is the
+    producer half of the cross-layer digit pipeline: the fused conv→conv
+    chain exchanges these planes directly and the intermediate activation
+    never exists as f32 in HBM.
     """
     G, M, T = packed.shape
     D = digit_scales.shape[0]
     T2, N = w_flat.shape
     assert T == T2, (packed.shape, w_flat.shape)
     assert G == dig.packed_group_count(D), (packed.shape, D)
+    emit = None
+    if emit_planes:
+        if emit_scale is None:
+            raise ValueError("emit_planes=True requires emit_scale")
+        if emit_n_digits is None:
+            emit_n_digits = emit_frac_bits + 1
+        if emit_n_digits > emit_frac_bits + 1:
+            raise ValueError("emit_n_digits must be <= emit_frac_bits + 1")
+        emit = (emit_frac_bits, emit_n_digits)
     bm, bn, Mp, Np = tuning.conv_tile_dims(M, N, block_m, block_n, interpret)
     if Mp != M:
         packed = jnp.pad(packed, ((0, 0), (0, Mp - M), (0, 0)))
@@ -357,12 +425,33 @@ def dslr_conv2d_planes_packed_mxu(
             b = jnp.pad(b, ((0, 0), (0, Np - N)))
         in_specs.append(pl.BlockSpec((1, bn), lambda m, n, d, act, fetch: (0, n)))
         operands.append(b)
+    if emit is not None:
+        # same reciprocal multiply as ops.msdf_quantize computes outside its
+        # kernel — identical f32 rounding ties, hence bitwise-equal digits
+        if jnp.ndim(emit_scale) == 1:
+            assert emit_scale.shape[0] == M, (emit_scale.shape, M)
+            inv = (1.0 / emit_scale).reshape(M, 1).astype(jnp.float32)
+            if Mp != M:  # pad rows carry inv 1 (they are sliced off below)
+                inv = jnp.pad(inv, ((0, Mp - M), (0, 0)), constant_values=1.0)
+            in_specs.append(pl.BlockSpec((bm, 1), lambda m, n, d, act, fetch: (m, 0)))
+        else:
+            inv = (1.0 / emit_scale).reshape(1, 1).astype(jnp.float32)
+            in_specs.append(pl.BlockSpec((1, 1), lambda m, n, d, act, fetch: (0, 0)))
+        operands.append(inv)
+
+    if emit is None:
+        out_shape = jax.ShapeDtypeStruct((Mp, Np), jnp.float32)
+        out_spec = pl.BlockSpec((bm, bn), lambda m, n, d, act, fetch: (m, n))
+    else:
+        G_out = dig.packed_group_count(emit[1])
+        out_shape = jax.ShapeDtypeStruct((G_out, Mp, Np), jnp.int8)
+        out_spec = pl.BlockSpec((G_out, bm, bn), lambda m, n, d, act, fetch: (0, m, n))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(Mp // bm, Np // bn, D),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((bm, bn), lambda m, n, d, act, fetch: (m, n)),
+        out_specs=out_spec,
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
     )
     out = pl.pallas_call(
@@ -373,9 +462,118 @@ def dslr_conv2d_planes_packed_mxu(
             has_row_scale=has_row_scale,
             has_bias=has_bias,
             apply_relu=apply_relu,
+            emit=emit,
         ),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        out_shape=out_shape,
         interpret=interpret,
     )(activity, fetch, *operands)
+    if emit is not None:
+        return out[:, :M, :N]
     return out[:M, :N]
+
+
+# ---------------------------------------------------------------------------
+# cross-layer digit pipelining: two convs over a shared packed digit grid
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "mid_spatial",
+        "mid_frac_bits",
+        "mid_n_digits",
+        "mid_budget",
+        "kernel_size2",
+        "stride2",
+        "padding2",
+        "relu1",
+        "relu2",
+        "block_m",
+        "block_n",
+        "skip_zero_planes",
+        "interpret",
+    ),
+)
+def dslr_conv2d_pipelined(
+    patches1: jax.Array,  # (G1, M1, T1) int8 — layer-1 packed im2col planes
+    w1_flat: jax.Array,  # (T1, N1)
+    digit_scales1: jax.Array,  # (D1,) — layer-1 scale-folded digit weights
+    w2_flat: jax.Array,  # (T2, N2), T2 = K2*K2*N1
+    digit_scales2: jax.Array,  # (D2,) — layer-2 digit weights (mid scale folded
+    #                             in by the caller, or carried by row_scale2)
+    mid_scale: jax.Array,  # scalar or (M1,) f32 — the interchange grid s_mid
+    mid_spatial: tuple,  # static (B, Ho1, Wo1) with B*Ho1*Wo1 == M1
+    mid_frac_bits: int,
+    mid_n_digits: int,
+    mid_budget: int,
+    kernel_size2: int,
+    bias1: jax.Array | None = None,
+    row_scale1: jax.Array | None = None,
+    relu1: bool = False,
+    bias2: jax.Array | None = None,
+    row_scale2: jax.Array | None = None,
+    relu2: bool = False,
+    stride2: int = 1,
+    padding2: int = 0,
+    block_m: int = 128,
+    block_n: int = 128,
+    skip_zero_planes: bool = True,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused conv→conv pair over a shared packed digit grid.
+
+    Two ``(m, n, d)`` digit-grid launches chained through the 2-bit packed
+    interchange: launch 1 runs layer 1 with the ``emit_planes`` epilogue
+    (bias/ReLU fused, output quantized onto ``mid_scale`` and written as
+    packed MSDF planes), the packed mid planes are im2col-gathered *as
+    bytes* (exact — the zero digit is the zero byte), truncated to
+    ``mid_budget`` digits at nibble granularity, and launch 2 consumes them
+    like any packed conv.  The intermediate activation never exists as f32
+    in HBM: inter-layer traffic drops from ``8 + 2·ceil(D/4)`` bytes per
+    element (f32 write + f32 read + packed write + packed read) to
+    ``2·ceil(D/4)`` (``kernels/traffic.py::interlayer_traffic``).
+
+    Returns f32 ``(M2, N2)`` with ``M2 = B*Ho2*Wo2``; the caller folds
+    ``mid_scale`` into ``digit_scales2``/``row_scale2`` (fused epilogue) or
+    multiplies it in afterwards, exactly as for the serial kernel.
+    """
+    B, Ho1, Wo1 = mid_spatial
+    G1, M1, T1 = patches1.shape
+    assert M1 == B * Ho1 * Wo1, (patches1.shape, mid_spatial)
+    N1 = w1_flat.shape[1]
+    mid_packed = dslr_conv2d_planes_packed_mxu(
+        patches1,
+        w1_flat,
+        digit_scales1,
+        bias=bias1,
+        row_scale=row_scale1,
+        block_m=block_m,
+        block_n=block_n,
+        skip_zero_planes=skip_zero_planes,
+        apply_relu=relu1,
+        interpret=interpret,
+        emit_planes=True,
+        emit_scale=mid_scale,
+        emit_frac_bits=mid_frac_bits,
+        emit_n_digits=mid_n_digits,
+    )  # (ceil(mid_n_digits/4), M1, N1) int8
+    image = mid_packed.reshape(mid_packed.shape[0], B, Ho1, Wo1, N1)
+    patches2 = core_dslr.im2col_planes(image, kernel_size2, stride2, padding2)
+    patches2 = patches2[: dig.packed_group_count(mid_budget)]
+    _, _, Ho2, Wo2, T2 = patches2.shape
+    planes2 = patches2.reshape(patches2.shape[0], B * Ho2 * Wo2, T2)
+    assert digit_scales2.shape[0] == mid_budget, (digit_scales2.shape, mid_budget)
+    return dslr_conv2d_planes_packed_mxu(
+        planes2,
+        w2_flat,
+        digit_scales2,
+        bias=bias2,
+        row_scale=row_scale2,
+        block_m=block_m,
+        block_n=block_n,
+        skip_zero_planes=skip_zero_planes,
+        apply_relu=relu2,
+        interpret=interpret,
+    )

@@ -223,6 +223,129 @@ def dslr_conv2d_planes_flat(
     return out
 
 
+def dslr_conv2d_pipelined(
+    x: jax.Array,
+    w1_flat: jax.Array,
+    w2_flat: jax.Array,
+    kernel_size1: int,
+    kernel_size2: int,
+    n_digits: int = 8,
+    stride1: int = 1,
+    padding1: int = 0,
+    stride2: int = 1,
+    padding2: int = 0,
+    recoding: str = "csd",
+    budget1: int | None = None,
+    budget2: int | None = None,
+    bias1: jax.Array | None = None,
+    relu1: bool = False,
+    bias2: jax.Array | None = None,
+    relu2: bool = False,
+    per_sample: bool = False,
+    mid_scale: jax.Array | None = None,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    skip_zero_planes: bool = True,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused conv→conv pair exchanging packed MSDF digit planes directly.
+
+    Layer 1 runs with the digit-emitting epilogue: its post-bias/ReLU output
+    is quantized in-kernel onto the interchange grid ``mid_scale`` and
+    written as packed 2-bit planes, which layer 2 consumes like any packed
+    conv — the intermediate activation never exists as f32 in HBM
+    (``kernels/dslr_conv2d.py::dslr_conv2d_pipelined``).
+
+    ``mid_scale`` defaults to the analytic a-priori grid
+    ``core.dslr.pipeline_mid_scale(w1_flat, bias1, q.scale, n_digits)`` — a
+    sound, budget-independent upper bound on the observed output scale, so
+    anytime prefix runs and the full-budget run share one mid grid (the
+    adaptive cascade's soundness hinges on this).  Against the serial
+    composition (layer-1 conv → ``msdf_quantize`` on the *same* grid →
+    layer-2 conv) the result is bitwise identical at equal digit budgets;
+    truncating ``budget1``/``budget2`` below full stays within the recoding
+    bound (``core.planner.recode_bound``, tests/test_pipeline_diff.py).
+
+    ``budget1`` truncates layer 1's input digit stream, ``budget2`` the mid
+    interchange stream feeding layer 2.  Returns
+    ``(out (B, Ho2, Wo2, Cout2) f32, mid_scale)`` — the grid is handed back
+    so engines can report the scale the pair actually used.
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    q = core_dslr.quantize_conv_planes(x, n_digits, recoding, per_sample=per_sample)
+    n_planes = q.planes.shape[0]
+    for name, k in (("budget1", budget1), ("budget2", budget2)):
+        if k is not None and not 1 <= k <= n_planes:
+            raise ValueError(f"{name}={k} outside [1, {n_planes}]")
+    D1 = budget1 if budget1 is not None else n_planes
+    D2 = budget2 if budget2 is not None else n_planes
+    image = dig.pack_planes(q.planes)
+    patches = core_dslr.im2col_planes(image, kernel_size1, stride1, padding1)
+    patches = patches[: dig.packed_group_count(D1)]
+    _, B, Ho1, Wo1, T1 = patches.shape
+    M1 = B * Ho1 * Wo1
+    planes1 = patches.reshape(patches.shape[0], M1, T1)
+    # the emit epilogue quantizes the accumulator, so it must hold real conv
+    # values: the activation scale always folds in (digit scales per-tensor,
+    # per-row otherwise) — same folding as the serial fused path
+    scales1 = core_dslr.digit_scales(D1)
+    row_scale1 = None
+    if per_sample:
+        row_scale1 = jnp.repeat(q.scale.astype(jnp.float32), Ho1 * Wo1)
+    else:
+        scales1 = q.scale * scales1
+    if mid_scale is None:
+        mid_scale = core_dslr.pipeline_mid_scale(w1_flat, bias1, q.scale, n_digits)
+    mid_scale = jnp.asarray(mid_scale, jnp.float32)
+    emit_scale = jnp.repeat(mid_scale, Ho1 * Wo1) if per_sample else mid_scale
+    Ho2 = (Ho1 + 2 * padding2 - kernel_size2) // stride2 + 1
+    Wo2 = (Wo1 + 2 * padding2 - kernel_size2) // stride2 + 1
+    fused2 = bias2 is not None or relu2
+    scales2 = core_dslr.digit_scales(D2)
+    row_scale2 = None
+    if fused2 and per_sample:
+        row_scale2 = jnp.repeat(mid_scale, Ho2 * Wo2)
+    elif fused2:
+        scales2 = mid_scale * scales2
+    if block_m is None or block_n is None:
+        tuned_m, tuned_n = tuning.autotune_conv_blocks(
+            M1, w1_flat.shape[1], T1, D1, packed=True, interpret=interpret
+        )
+        block_m = block_m if block_m is not None else tuned_m
+        block_n = block_n if block_n is not None else tuned_n
+    out = _dc.dslr_conv2d_pipelined(
+        planes1,
+        w1_flat,
+        scales1,
+        w2_flat,
+        scales2,
+        emit_scale,
+        mid_spatial=(B, Ho1, Wo1),
+        mid_frac_bits=n_digits,
+        mid_n_digits=n_planes,
+        mid_budget=D2,
+        kernel_size2=kernel_size2,
+        bias1=bias1,
+        row_scale1=row_scale1,
+        relu1=relu1,
+        bias2=bias2,
+        row_scale2=row_scale2,
+        relu2=relu2,
+        stride2=stride2,
+        padding2=padding2,
+        block_m=block_m,
+        block_n=block_n,
+        skip_zero_planes=skip_zero_planes,
+        interpret=interpret,
+    )
+    out = out.reshape(B, Ho2, Wo2, w2_flat.shape[1])
+    if not fused2:
+        s = mid_scale.reshape(-1, 1, 1, 1) if per_sample else mid_scale
+        out = out * s
+    return out, mid_scale
+
+
 def conv_anytime_error_bound(
     w: jax.Array, scale: jax.Array, digits_used: int
 ) -> jax.Array:

@@ -149,6 +149,52 @@ def conv_planes_traffic(
     return ConvTraffic(counted["patches"], counted["weights"], counted["out"], grid)
 
 
+class InterlayerTraffic(NamedTuple):
+    """HBM bytes the intermediate activation of one conv→conv pair moves
+    across the layer boundary, serial vs pipelined."""
+
+    elements: int  # mid activation elements (B * Ho * Wo * Cout)
+    serial_bytes: int  # f32 write + f32 read + packed write + packed read
+    pipelined_bytes: int  # packed write + packed read only
+    ratio: float  # serial / pipelined (>= 1)
+
+
+def interlayer_traffic(
+    elements: int, n_planes: int, digit_budget: Optional[int] = None
+) -> InterlayerTraffic:
+    """Inter-layer activation traffic of one conv→conv pair.
+
+    Serial path, per mid element: the producer's kernel writes the f32
+    activation (4 B), ``ops.msdf_quantize`` reads it back (4 B) and writes
+    ``ceil(n_planes/4)`` packed bytes, and the consumer's im2col/kernel
+    reads ``ceil(budget/4)`` of them — ``8 + G_full + G_used`` bytes.  The
+    pipelined path emits the packed planes straight from the producer's
+    flush epilogue: the f32 round-trip vanishes and only
+    ``G_full + G_used`` bytes cross HBM.  (Patch duplication from the
+    consumer's im2col gather multiplies *both* paths' read terms equally,
+    so it is left out of this per-element model; weights and the pair's
+    outer operands are identical between paths and excluded.)
+
+    At the paper's D=9 grid (``n_planes=9``, full budget) this is
+    ``(8 + 3 + 3) / (3 + 3) = 2.33x`` — the >= 2x floor BENCH_pipeline.json
+    guards.
+    """
+    if digit_budget is None:
+        digit_budget = n_planes
+    if not 1 <= digit_budget <= n_planes:
+        raise ValueError(f"digit_budget={digit_budget} outside [1, {n_planes}]")
+    g_full = dig.packed_group_count(n_planes)
+    g_used = dig.packed_group_count(digit_budget)
+    serial = elements * (4 + 4 + g_full + g_used)
+    pipelined = elements * (g_full + g_used)
+    return InterlayerTraffic(
+        elements=elements,
+        serial_bytes=serial,
+        pipelined_bytes=pipelined,
+        ratio=serial / pipelined,
+    )
+
+
 def conv_traffic_for_input(
     x,
     w,

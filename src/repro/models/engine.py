@@ -125,6 +125,55 @@ def _conv_node(
     return out
 
 
+def _fused_pair(
+    graph: LayerGraph,
+    a_node: Node,
+    b_node: Node,
+    x: jax.Array,
+    w1_flat: jax.Array,
+    b1: jax.Array,
+    w2_flat: jax.Array,
+    b2: jax.Array,
+    policy: ExecutionPolicy,
+) -> Tuple[jax.Array, jax.Array]:
+    """Execute one pipelined conv→conv pair (both epilogues fused, packed
+    digit interchange in between).  Returns ``(out, witness)`` where ``out``
+    is the post-epilogue value of ``b`` and ``witness`` is a ``(B, 1, 1, 1)``
+    stand-in for the never-materialized f32 mid activation: its per-sample
+    amax is ``mid_scale / (1 + 2**-f)``, so amax-based machinery
+    (``calibration_scales``, the cascade's ``_stage_forward``) reads off
+    exactly the interchange grid the pair *used* — which an observed amax of
+    the true mid value could understate."""
+    epi_a, epi_b = graph.epilogue_of(a_node), graph.epilogue_of(b_node)
+    out, mid_scale = kops.dslr_conv2d_pipelined(
+        x,
+        w1_flat,
+        w2_flat,
+        kernel_size1=a_node.kernel,
+        kernel_size2=b_node.kernel,
+        n_digits=policy.n_digits,
+        stride1=a_node.stride,
+        padding1=a_node.padding,
+        stride2=b_node.stride,
+        padding2=b_node.padding,
+        recoding=policy.recoding,
+        budget1=policy.budget_for(a_node.name),
+        budget2=policy.budget_for(b_node.name),
+        bias1=b1,
+        relu1=epi_a.relu,
+        bias2=b2,
+        relu2=epi_b.relu,
+        per_sample=policy.per_sample_scales,
+        block_m=policy.block_m,
+        block_n=policy.block_n,
+        skip_zero_planes=policy.skip_zero_planes,
+        interpret=policy.interpret,
+    )
+    wit = mid_scale / (1.0 + 2.0 ** -policy.n_digits)
+    wit = (wit * jnp.ones((x.shape[0],), jnp.float32)).reshape(-1, 1, 1, 1)
+    return out, wit
+
+
 def execute_graph(
     graph: LayerGraph,
     params,
@@ -137,10 +186,23 @@ def execute_graph(
     flattened conv weights; without it (the deprecated ``mode=`` shim) they
     are flattened in-trace — numerically identical, just re-done per call.
     ``return_all`` returns every node's value (planner calibration) instead
-    of just the head's."""
+    of just the head's.
+
+    Under ``policy.pipeline`` the eligible conv→conv chains
+    (``graph.pipeline_pairs``) execute as fused pairs exchanging packed MSDF
+    digit planes; the pair's first conv and its epilogue then map to a scale
+    *witness* tensor rather than the (never-materialized) f32 activation —
+    see ``_fused_pair``."""
     vals = {GRAPH_INPUT: x}
     fused_done = set()
+    pair_for = (
+        dict(graph.pipeline_pairs())
+        if policy.mode == "dslr_planes" and policy.pipeline
+        else {}
+    )
     for node in graph.nodes:
+        if node.name in vals:  # produced by a fused conv→conv pair
+            continue
         a = vals[node.inputs[0]]
         if node.op in ("conv", "downsample"):
             if weights is not None:
@@ -155,6 +217,21 @@ def execute_graph(
                 w = params[node.param]["w"]
                 w_flat, b = None, params[node.param]["b"]
             epilogue = graph.epilogue_of(node)
+            if node.name in pair_for:
+                b_node = graph.node(pair_for[node.name])
+                if weights is not None:
+                    w2_flat, b2 = weights[b_node.name]
+                else:
+                    w2_flat = core_dslr.flatten_conv_weights(params[b_node.param]["w"])
+                    b2 = params[b_node.param]["b"]
+                out, wit = _fused_pair(
+                    graph, node, b_node, a, w_flat, b, w2_flat, b2, policy
+                )
+                vals[node.name] = wit
+                vals[epilogue.name] = wit
+                vals[b_node.name] = out
+                vals[graph.epilogue_of(b_node).name] = out
+                continue
             vals[node.name] = _conv_node(node, a, w, w_flat, b, policy, epilogue)
             if (
                 policy.mode == "dslr_planes"
@@ -338,15 +415,69 @@ class DslrEngine:
     def error_bounds(self, scale: float = 1.0) -> Dict[str, float]:
         """Per-conv-layer anytime error bound at the policy's effective digit
         budget, per unit activation quantization scale (multiply by a layer's
-        actual ``DslrQuant.scale`` for absolute bounds)."""
+        actual ``DslrQuant.scale`` for absolute bounds).
+
+        Under ``policy.pipeline`` the consumer of each fused pair carries the
+        online-recoding term instead (``core.planner.recode_bound``): its
+        input was re-quantized onto the interchange grid, so even at full
+        budget it pays one grid step ``2**-f`` on top of the truncation
+        tail."""
+        pipe_consumers = (
+            {b for _, b in self.graph.pipeline_pairs()}
+            if self.policy.pipeline
+            else set()
+        )
         out = {}
         for node in self.graph.conv_nodes:
             w_flat, _ = self._weights[node.name]
             k = self.policy.budget_for(node.name) or self.policy.n_planes
-            out[node.name] = float(
-                core_dslr.anytime_error_bound(w_flat, jnp.float32(scale), k)
-            )
+            if node.name in pipe_consumers:
+                row_l1 = self._weight_gain(node.name, node.param, node.op)
+                out[node.name] = core_planner.recode_bound(
+                    row_l1, scale, self.policy.n_digits, k
+                )
+            else:
+                out[node.name] = float(
+                    core_dslr.anytime_error_bound(w_flat, jnp.float32(scale), k)
+                )
         return out
+
+    def pipeline_divergence_bound(self, x: jax.Array) -> float:
+        """Upper bound on the max-abs logit deviation between this engine
+        under ``pipeline=True`` and the serial (``pipeline=False``) path on
+        batch ``x``.
+
+        Both paths run layer-identical arithmetic everywhere except at each
+        fused pair's mid activation: the serial path quantizes the f32 mid
+        on its *observed* amax grid with the policy recoding, the pipelined
+        path emits greedy digits onto the analytic grid ``s_mid`` (an upper
+        bound on the observed grid).  Each quantization deviates from the
+        true mid by at most one grid step plus the truncation tail, so the
+        two paths' mids differ by at most
+        ``2 * s_mid * (2**-f + [k < n_planes] * 2**-(k-1))``, amplified
+        through the consumer's column-L1 mass and the downstream worst-case
+        Lipschitz gains (``node_gains``).  First-order like the rest of the
+        gain machinery: downstream re-quantization grids shifting in
+        response is a second-order effect (see adaptive/decision.py)."""
+        pairs = self.graph.pipeline_pairs()
+        if not pairs:
+            return 0.0
+        pol = self.policy
+        f = pol.n_digits
+        gains = self.node_gains()
+        serial = self.with_policy(dataclasses.replace(pol, pipeline=False))
+        scales = serial.calibration_scales(x)
+        total = 0.0
+        for a, b in pairs:
+            w1, b1 = self._weights[a]
+            s_mid = float(
+                core_dslr.pipeline_mid_scale(w1, b1, jnp.float32(scales[a]), f)
+            )
+            row_l1_b = self._weight_gain(b, self.graph.node(b).param, "conv")
+            k2 = pol.budget_for(b) or pol.n_planes
+            tail = 2.0 ** -(k2 - 1) if k2 < pol.n_planes else 0.0
+            total += gains[b] * row_l1_b * 2.0 * s_mid * (2.0 ** -f + tail)
+        return total
 
     def _weight_gain(self, name: str, param: str, op: str) -> float:
         """Induced ∞-norm (max column L1) of a weight-carrying node."""

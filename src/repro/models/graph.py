@@ -105,6 +105,37 @@ class LayerGraph:
             return consumers[0]
         return None
 
+    def pipeline_pairs(self) -> Tuple[Tuple[str, str], ...]:
+        """Greedy non-overlapping conv→conv chains eligible for cross-layer
+        digit pipelining (``ExecutionPolicy.pipeline``): pairs ``(a, b)``
+        where conv ``a``'s sole consumer is its bias_relu epilogue and that
+        epilogue feeds exactly one node, conv ``b`` (which has an epilogue of
+        its own).  A pool, residual add, or fan-out between the two breaks
+        the chain — those boundaries fall back to the serial f32 path.
+        Greedy left-to-right: in a run C1→C2→C3→C4 the pairs are
+        (C1, C2), (C3, C4)."""
+        consumers: Dict[str, List[Node]] = {}
+        for n in self.nodes:
+            for src in n.inputs:
+                consumers.setdefault(src, []).append(n)
+        pairs: List[Tuple[str, str]] = []
+        used: set = set()
+        for node in self.nodes:
+            if node.op != "conv" or node.name in used:
+                continue
+            epi = self.epilogue_of(node)
+            if epi is None:
+                continue
+            nxt = consumers.get(epi.name, [])
+            if len(nxt) != 1 or nxt[0].op != "conv" or nxt[0].name in used:
+                continue
+            b = nxt[0]
+            if self.epilogue_of(b) is None:
+                continue
+            pairs.append((node.name, b.name))
+            used.update((node.name, b.name))
+        return tuple(pairs)
+
 
 # ---------------------------------------------------------------------------
 # execution policy (replaces the mode= string + kwarg threading)
@@ -143,6 +174,13 @@ class ExecutionPolicy:
     block_n: Optional[int] = None
     skip_zero_planes: bool = True
     packed: bool = True  # 2-bit packed digit interchange (dslr_planes only)
+    # cross-layer digit pipelining: eligible conv→conv chains
+    # (LayerGraph.pipeline_pairs) exchange packed MSDF digit planes directly —
+    # the intermediate activation is quantized in-kernel onto an analytic
+    # a-priori grid (core/dslr.py::pipeline_mid_scale) and never exists as
+    # f32 in HBM.  Needs the packed interchange and the fused epilogue (the
+    # digit emitter rides the flush step).
+    pipeline: bool = False
     # per-batch-row activation quantization scales: each sample's digit grid
     # depends on that sample alone, so batch composition (an outlier
     # batchmate, bucket zero-padding) cannot perturb a sample's output —
@@ -182,6 +220,18 @@ class ExecutionPolicy:
                     raise ValueError(
                         f"layer budget {name}={k} outside [1, {self.n_planes}]"
                     )
+        if self.pipeline:
+            if self.mode != "dslr_planes":
+                raise ValueError(
+                    f"pipeline=True only applies to mode='dslr_planes', "
+                    f"got {self.mode!r}"
+                )
+            if not self.packed or not self.fuse_epilogue:
+                raise ValueError(
+                    "pipeline=True requires packed=True and fuse_epilogue=True "
+                    "(the digit emitter writes the packed interchange format "
+                    "from the fused flush epilogue)"
+                )
         if self.serve_pad_to is not None and self.serve_pad_to < 1:
             raise ValueError(
                 f"serve_pad_to={self.serve_pad_to} must be >= 1 (or None)"

@@ -1,0 +1,250 @@
+"""Cross-layer digit pipelining: the online output recoder + cascade soundness.
+
+The recoder (``core.online.recode_msdf``) is the numerics hinge of the
+pipelined executor: it converts a running partial-sum prefix into valid MSDF
+digits with a bounded online delay.  Property-tested here (hypothesis over
+random digit streams in every recoding mode):
+
+  * **validity + bracket** — emitted digits are in {-1, 0, 1} and every
+    k-digit prefix brackets the true value within ``2**-(k-1)`` (the
+    documented residual bound — same geometric tail as a direct MSDF
+    quantization one digit shorter);
+  * **delay** — digit slot ``j`` depends on estimates up to index
+    ``j + DELTA_RECODE`` and nothing later: two streams that agree on their
+    first ``t`` partial sums produce identical digits through slot
+    ``t - DELTA_RECODE``;
+  * **exactness** — with ``n_out >= frac_bits + 1`` and the full stream,
+    recode∘value is the identity (residual exactly 0) for greedy / csd /
+    binary digit streams alike.
+
+The second half pins the adaptive-cascade soundness invariant (zero argmax
+flips, test_adaptive.py style) on ``pipeline=True`` engines for all three
+networks — PR 7's provable early exit must survive the recoding error term,
+including on a configuration where proven exits actually fire.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.adaptive.cascade import compile_cascade
+from repro.core import cycle_model as cyc
+from repro.core import digits as dig
+from repro.core import online
+from repro.models import common as cm
+from repro.models.engine import compile_cnn
+from repro.models.graph import CnnConfig, ExecutionPolicy, build_graph, graph_spec
+
+MODES = ("greedy", "csd", "binary")
+
+
+def _digit_stream(seed: int, frac_bits: int, mode: str, batch: int = 8):
+    """A valid MSDF digit stream: quantize random values in (-1, 1) onto the
+    2**-frac_bits grid and recode with the requested recoder.  Returns
+    ``(digits (batch, frac_bits + 1), xi fixed-point int32)``."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(-0.999, 0.999, size=(batch,)), jnp.float32)
+    xi = dig.quantize(x, frac_bits)
+    d = dig._RECODERS[mode](xi, frac_bits)
+    return d, xi
+
+
+def _value(digits) -> np.ndarray:
+    """Exact value of an MSDF digit array (..., J): sum_j d_j * 2**-j."""
+    d = np.asarray(digits, np.float64)
+    w = 2.0 ** -np.arange(d.shape[-1])
+    return d @ w
+
+
+# ---------------------------------------------------------------------------
+# recode_msdf properties
+# ---------------------------------------------------------------------------
+
+
+@given(
+    st.integers(min_value=0, max_value=10**6),
+    st.integers(min_value=2, max_value=12),
+    st.sampled_from(MODES),
+)
+@settings(max_examples=40, deadline=None)
+def test_recode_valid_and_every_prefix_brackets(seed, frac_bits, mode):
+    """Digits stay in {-1, 0, 1} and after k emitted digits the recoded
+    prefix is within 2**-(k-1) of the true (final) value — for every k."""
+    d, xi = _digit_stream(seed, frac_bits, mode)
+    prefix = online.msdf_prefix_sums(d)
+    out, residual = online.recode_msdf(prefix, frac_bits=frac_bits)
+    o = np.asarray(out)
+    assert set(np.unique(o)) <= {-1, 0, 1}
+    true = np.asarray(xi, np.float64) * 2.0**-frac_bits
+    for k in range(o.shape[-1] + 1):
+        got = _value(o[..., :k]) if k else np.zeros(o.shape[0])
+        np.testing.assert_array_less(
+            np.abs(true - got), 2.0 ** -(k - 1) + 1e-12, err_msg=f"prefix k={k}"
+        )
+    # full budget: exact, and the reported residual agrees
+    np.testing.assert_array_equal(_value(o), true)
+    np.testing.assert_array_equal(np.asarray(residual), 0.0)
+
+
+@given(
+    st.integers(min_value=0, max_value=10**6),
+    st.integers(min_value=4, max_value=12),
+    st.sampled_from(MODES),
+    st.integers(min_value=2, max_value=6),
+)
+@settings(max_examples=40, deadline=None)
+def test_recode_delay_matches_declared_constant(seed, frac_bits, mode, t):
+    """Digit slot j consults estimate u[j + delay] and nothing later: two
+    streams agreeing on their first t partial sums emit identical digits
+    through slot t - DELTA_RECODE."""
+    t = min(t, frac_bits)
+    d, _ = _digit_stream(seed, frac_bits, mode)
+    rng = np.random.default_rng(seed + 1)
+    d2 = np.asarray(d).copy()
+    # perturb only digit slots >= t: the first t partial sums are untouched
+    tail = rng.integers(-1, 2, size=d2[..., t:].shape)
+    d2[..., t:] = tail
+    p1 = online.msdf_prefix_sums(d)
+    p2 = online.msdf_prefix_sums(jnp.asarray(d2))
+    o1, _ = online.recode_msdf(p1, frac_bits=frac_bits)
+    o2, _ = online.recode_msdf(p2, frac_bits=frac_bits)
+    agree = t - online.DELTA_RECODE
+    np.testing.assert_array_equal(
+        np.asarray(o1)[..., : agree + 1], np.asarray(o2)[..., : agree + 1]
+    )
+
+
+@given(
+    st.integers(min_value=0, max_value=10**6),
+    st.integers(min_value=2, max_value=12),
+    st.sampled_from(MODES),
+    st.integers(min_value=0, max_value=3),
+)
+@settings(max_examples=40, deadline=None)
+def test_recode_value_roundtrip_exact(seed, frac_bits, mode, n_extra):
+    """recode∘value is exact on random digit streams whenever the output
+    keeps at least frac_bits + 1 digit slots (extra slots emit zeros)."""
+    d, xi = _digit_stream(seed, frac_bits, mode)
+    prefix = online.msdf_prefix_sums(d)
+    n_out = frac_bits + 1 + n_extra
+    out, residual = online.recode_msdf(prefix, frac_bits=frac_bits, n_out=n_out)
+    np.testing.assert_array_equal(np.asarray(residual), 0.0)
+    true = np.asarray(xi, np.float64) * 2.0**-frac_bits
+    np.testing.assert_array_equal(_value(np.asarray(out)), true)
+
+
+def test_recode_rejects_bad_args():
+    d, _ = _digit_stream(0, 4, "csd")
+    prefix = online.msdf_prefix_sums(d)
+    with pytest.raises(ValueError, match="delay"):
+        online.recode_msdf(prefix, frac_bits=4, delay=1)
+    with pytest.raises(ValueError, match="int32"):
+        online.recode_msdf(prefix.astype(jnp.int32), frac_bits=29)
+
+
+def test_delta_recode_agrees_with_cycle_model():
+    # cycle_model stays jax-free, so it carries its own literal copy
+    assert cyc.DELTA_RECODE == online.DELTA_RECODE
+
+
+# ---------------------------------------------------------------------------
+# cascade soundness on pipelined engines (all three networks)
+# ---------------------------------------------------------------------------
+
+
+def _pipelined_engine(name, budgets_mid=8, seed=0, B=6):
+    """A pipeline=True engine in test_adaptive.py's proven-exit shape: wide
+    precision, every conv pinned below the prefix stages except the last at
+    full — but the pinned budget is 8 (not 2): the pipelined mid grid is the
+    analytic worst case, so its top digits are zero and a 2-plane mid would
+    collapse to all-zero activations (sound, but it would exercise only the
+    escalate path)."""
+    cfg = CnnConfig(name=name, width=0.05, num_classes=4)
+    graph = build_graph(cfg)
+    params = cm.init_params(graph_spec(cfg), jax.random.PRNGKey(seed))
+    x = jnp.asarray(
+        np.random.default_rng(seed).standard_normal((B, 16, 16, 3)), jnp.float32
+    )
+    convs = [n.name for n in graph.conv_nodes]
+    budgets = {c: budgets_mid for c in convs}
+    budgets[convs[-1]] = 17
+    pol = ExecutionPolicy(
+        n_digits=16, per_sample_scales=True, pipeline=True
+    ).with_layer_budgets(graph, budgets)
+    return compile_cnn(cfg, params, pol), x
+
+
+@pytest.mark.parametrize("name", ["alexnet", "vgg16", "resnet18"])
+def test_pipelined_cascade_never_flips_argmax(name):
+    """The soundness invariant on a pipeline=True engine: every cascade
+    answer's top-1 equals the full-budget pipelined top-1, per sample."""
+    engine, x = _pipelined_engine(name)
+    res = compile_cascade(engine, stages=(12,)).run(x)
+    full_top = np.argmax(np.asarray(engine(x)), axis=-1)
+    np.testing.assert_array_equal(res.top1, full_top)
+
+
+def test_pipelined_proven_exits_fire_and_stay_sound():
+    """The positive path: on AlexNet the prefix stage truncates only the
+    final conv (the pair C3→C4 sits at its pinned budget), so the proven
+    rule actually exits early — and every early answer matches the
+    full-budget argmax bitwise."""
+    engine, x = _pipelined_engine("alexnet")
+    res = compile_cascade(engine, stages=(12,)).run(x)
+    assert res.stage_counts[0] > 0, "no proven early exits fired"
+    full_top = np.argmax(np.asarray(engine(x)), axis=-1)
+    np.testing.assert_array_equal(res.top1, full_top)
+
+
+def test_pipelined_cascade_zero_budget_collapse_is_sound():
+    """A 2-plane mid on the analytic grid zeroes the fused pair's output —
+    margins and bounds are then both 0 and the strict rule escalates
+    (0 > 0 is false): everyone reaches the final stage, nobody flips."""
+    engine, x = _pipelined_engine("alexnet", budgets_mid=2, B=4)
+    res = compile_cascade(engine, stages=(8, 12)).run(x)
+    full_top = np.argmax(np.asarray(engine(x)), axis=-1)
+    np.testing.assert_array_equal(res.top1, full_top)
+
+
+def test_pipeline_policy_validation():
+    with pytest.raises(ValueError, match="dslr_planes"):
+        ExecutionPolicy(mode="float", pipeline=True)
+    with pytest.raises(ValueError, match="packed"):
+        ExecutionPolicy(packed=False, pipeline=True)
+    with pytest.raises(ValueError, match="fuse_epilogue"):
+        ExecutionPolicy(fuse_epilogue=False, pipeline=True)
+    assert ExecutionPolicy(pipeline=True).pipeline  # valid combination
+
+
+def test_bench_harness_flag_parsing():
+    """``--only``/``--json`` as the trailing argv token is a clean error
+    (it used to IndexError), and the new bench module is selectable."""
+    from benchmarks.run import MODULES, flag_value, select_modules
+
+    assert "pipeline_bench" in MODULES
+    assert select_modules("pipeline_bench") == ["pipeline_bench"]
+    assert flag_value(["run"], "--only") is None
+    assert flag_value(["run", "--only", "pipeline_bench"], "--only") == "pipeline_bench"
+    with pytest.raises(ValueError, match="--only"):
+        flag_value(["run", "--only"], "--only")
+    with pytest.raises(ValueError, match="--json"):
+        flag_value(["run", "--only", "x", "--json"], "--json")
+
+
+def test_pipeline_pairs_respect_boundaries():
+    """Pool stages and residual adds break the chain; pairs never overlap."""
+    for name, expected in {
+        "alexnet": (("C3", "C4"),),  # C1/C2/C5 are pool-bounded
+        "vgg16": (
+            ("C1", "C2"), ("C3", "C4"), ("C5", "C6"), ("C8", "C9"), ("C11", "C12"),
+        ),
+        "resnet18": tuple(
+            (f"C{i}", f"C{i+1}") for i in range(2, 18, 2)
+        ),  # every basic block; stem + downsamples excluded
+    }.items():
+        graph = build_graph(CnnConfig(name=name, width=0.05, num_classes=4))
+        pairs = graph.pipeline_pairs()
+        assert pairs == expected, (name, pairs)
+        flat = [n for p in pairs for n in p]
+        assert len(flat) == len(set(flat))

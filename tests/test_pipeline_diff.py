@@ -1,0 +1,191 @@
+"""Differential fuzz: pipelined conv→conv kernel vs its serial composition.
+
+The fused kernel (``ops.dslr_conv2d_pipelined``) must be a *re-plumbing*,
+not a re-derivation: given the same interchange grid it computes exactly
+what the serial chain computes —
+
+    serial = dslr_conv2d_planes_flat (fused bias/ReLU, packed)
+           → ops.msdf_quantize on the shared mid grid (packed)
+           → im2col over the packed mid image, nibble-truncate to budget2
+           → dslr_conv2d_planes_packed_mxu (fused bias/ReLU)
+
+so at equal digit budgets the two paths are **bitwise identical** (the emit
+epilogue mirrors the quantize kernel's greedy recurrence line-for-line, and
+packing/im2col commute byte-wise).  The fuzz sweeps odd/prime spatial dims,
+strides, per-sample vs per-tensor grids and digit budgets 1..12; a separate
+test pins the *truncated* pipeline against the full-budget reference within
+the derived recoding bound (``core.planner.recode_bound``), and the
+engine-level test holds pipeline=True logits within
+``DslrEngine.pipeline_divergence_bound`` for all three networks.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import digits as dig
+from repro.core import dslr as core_dslr
+from repro.core import planner
+from repro.kernels import dslr_conv2d as dc
+from repro.kernels import ops
+from repro.models import common as cm
+from repro.models.engine import compile_cnn
+from repro.models.graph import CnnConfig, ExecutionPolicy, graph_spec
+
+
+def _serial_pair(
+    x, w1_flat, w2_flat, *, k1, k2, n_digits, s1, p1, s2, p2, recoding,
+    D1, D2, bias1, relu1, bias2, relu2, per_sample, mid_scale,
+):
+    """The unfused reference chain on the same interchange grid."""
+    y1 = ops.dslr_conv2d_planes_flat(
+        x, w1_flat, kernel_size=k1, n_digits=n_digits, stride=s1, padding=p1,
+        recoding=recoding, digit_budget=D1, bias=bias1, relu=relu1,
+        per_sample=per_sample, packed=True, interpret=True,
+    )
+    B, Ho1, Wo1, C1 = y1.shape
+    n_planes = n_digits + 1
+    scale_rows = jnp.repeat(mid_scale, Ho1 * Wo1) if per_sample else mid_scale
+    packed_mid = ops.msdf_quantize(
+        y1.reshape(B * Ho1 * Wo1, C1), scale_rows,
+        frac_bits=n_digits, n_digits=n_planes, packed=True, interpret=True,
+    )
+    image = packed_mid.reshape(-1, B, Ho1, Wo1, C1)
+    patches = core_dslr.im2col_planes(image, k2, s2, p2)
+    patches = patches[: dig.packed_group_count(D2)]
+    _, _, Ho2, Wo2, T2 = patches.shape
+    planes2 = patches.reshape(patches.shape[0], B * Ho2 * Wo2, T2)
+    fused2 = bias2 is not None or relu2
+    scales2 = core_dslr.digit_scales(D2)
+    row_scale2 = None
+    if fused2 and per_sample:
+        row_scale2 = jnp.repeat(mid_scale, Ho2 * Wo2)
+    elif fused2:
+        scales2 = mid_scale * scales2
+    out = dc.dslr_conv2d_planes_packed_mxu(
+        planes2, w2_flat, scales2, bias=bias2, row_scale=row_scale2,
+        apply_relu=relu2, interpret=True,
+    )
+    out = out.reshape(B, Ho2, Wo2, w2_flat.shape[1])
+    if not fused2:
+        s = mid_scale.reshape(-1, 1, 1, 1) if per_sample else mid_scale
+        out = out * s
+    return out
+
+
+def _draw_case(seed):
+    """One randomized pair geometry (odd/prime dims, strides, budgets)."""
+    rng = np.random.default_rng(seed)
+    H = int(rng.choice([5, 7, 9, 11, 13]))
+    W = int(rng.choice([5, 7, 9, 11]))
+    Cin = int(rng.choice([1, 2, 3, 5]))
+    C1, C2 = int(rng.choice([3, 4, 7])), int(rng.choice([2, 4, 5]))
+    k1, s1, p1 = int(rng.choice([1, 3])), int(rng.choice([1, 2])), int(rng.choice([0, 1]))
+    k2, s2, p2 = int(rng.choice([1, 3])), int(rng.choice([1, 2])), int(rng.choice([0, 1]))
+    Ho1 = (H + 2 * p1 - k1) // s1 + 1
+    Wo1 = (W + 2 * p1 - k1) // s1 + 1
+    if min(Ho1, Wo1) + 2 * p2 < k2:
+        k2 = 1
+    n_digits = int(rng.integers(4, 11))
+    n_planes = n_digits + 1
+    D1 = min(int(rng.integers(1, 13)), n_planes)
+    D2 = min(int(rng.integers(1, 13)), n_planes)
+    B = int(rng.choice([1, 2, 3]))
+    x = jnp.asarray(rng.standard_normal((B, H, W, Cin)), jnp.float32)
+    w1 = jnp.asarray(0.3 * rng.standard_normal((k1 * k1 * Cin, C1)), jnp.float32)
+    w2 = jnp.asarray(0.3 * rng.standard_normal((k2 * k2 * C1, C2)), jnp.float32)
+    b1 = jnp.asarray(0.1 * rng.standard_normal((C1,)), jnp.float32)
+    b2 = (
+        jnp.asarray(0.1 * rng.standard_normal((C2,)), jnp.float32)
+        if rng.random() < 0.5 else None
+    )
+    geo = dict(
+        k1=k1, k2=k2, n_digits=n_digits, s1=s1, p1=p1, s2=s2, p2=p2,
+        recoding=str(rng.choice(["greedy", "csd"])), D1=D1, D2=D2,
+        bias1=b1, relu1=bool(rng.random() < 0.7),
+        bias2=b2, relu2=bool(rng.random() < 0.5),
+        per_sample=bool(rng.random() < 0.5),
+    )
+    return x, w1, w2, geo
+
+
+def _shared_mid_scale(x, w1_flat, geo):
+    q = core_dslr.quantize_conv_planes(
+        x, geo["n_digits"], geo["recoding"], per_sample=geo["per_sample"]
+    )
+    return jnp.asarray(
+        core_dslr.pipeline_mid_scale(w1_flat, geo["bias1"], q.scale, geo["n_digits"]),
+        jnp.float32,
+    )
+
+
+@given(st.integers(min_value=0, max_value=10**6))
+@settings(max_examples=12, deadline=None)
+def test_pipelined_bitwise_equals_serial_composition(seed):
+    """At equal budgets on the shared mid grid the fused kernel is bitwise
+    the serial chain — across randomized geometry, budgets 1..12 (clipped),
+    per-sample and per-tensor grids, greedy and csd recodings."""
+    x, w1, w2, geo = _draw_case(seed)
+    mid = _shared_mid_scale(x, w1, geo)
+    got, used_scale = ops.dslr_conv2d_pipelined(
+        x, w1, w2, kernel_size1=geo["k1"], kernel_size2=geo["k2"],
+        n_digits=geo["n_digits"], stride1=geo["s1"], padding1=geo["p1"],
+        stride2=geo["s2"], padding2=geo["p2"], recoding=geo["recoding"],
+        budget1=geo["D1"], budget2=geo["D2"], bias1=geo["bias1"],
+        relu1=geo["relu1"], bias2=geo["bias2"], relu2=geo["relu2"],
+        per_sample=geo["per_sample"], mid_scale=mid, interpret=True,
+    )
+    want = _serial_pair(x, w1, w2, mid_scale=mid, **geo)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(used_scale), np.asarray(mid))
+
+
+@pytest.mark.parametrize("budget2", [2, 4, 6])
+def test_truncated_mid_within_recode_bound(budget2):
+    """Truncating the interchange stream at k digits moves the pair output
+    by at most recode_bound(||W2||_1,col, mid_scale, f, k) — and hits the
+    full-budget result exactly when nothing is truncated."""
+    x, w1, w2, geo = _draw_case(7)
+    geo.update(D1=geo["n_digits"] + 1, per_sample=False, relu2=False, bias2=None)
+    mid = _shared_mid_scale(x, w1, geo)
+
+    def run(d2):
+        out, _ = ops.dslr_conv2d_pipelined(
+            x, w1, w2, kernel_size1=geo["k1"], kernel_size2=geo["k2"],
+            n_digits=geo["n_digits"], stride1=geo["s1"], padding1=geo["p1"],
+            stride2=geo["s2"], padding2=geo["p2"], recoding=geo["recoding"],
+            budget1=geo["D1"], budget2=d2, bias1=geo["bias1"],
+            relu1=geo["relu1"], per_sample=False, mid_scale=mid, interpret=True,
+        )
+        return np.asarray(out)
+
+    full = run(geo["n_digits"] + 1)
+    dev = float(np.max(np.abs(run(budget2) - full)))
+    row_l1 = float(jnp.max(jnp.sum(jnp.abs(w2), axis=0)))
+    bound = planner.recode_bound(row_l1, float(mid), geo["n_digits"], budget2)
+    assert dev <= bound, (dev, bound)
+    np.testing.assert_array_equal(run(geo["n_digits"] + 1), full)
+
+
+@pytest.mark.parametrize("name", ["alexnet", "vgg16", "resnet18"])
+def test_engine_pipeline_within_divergence_bound(name):
+    """pipeline=True logits vs the serial engine: the paths re-quantize the
+    fused pairs' activations on different grids (analytic vs observed), so
+    they are *not* bitwise — but the deviation stays within the engine's own
+    a-priori ``pipeline_divergence_bound``."""
+    cfg = CnnConfig(name=name, width=0.05, num_classes=4)
+    params = cm.init_params(graph_spec(cfg), jax.random.PRNGKey(0))
+    x = jnp.asarray(
+        np.random.default_rng(0).standard_normal((2, 16, 16, 3)), jnp.float32
+    )
+    pol = ExecutionPolicy(per_sample_scales=True)
+    serial = compile_cnn(cfg, params, pol)
+    piped = serial.with_policy(dataclasses.replace(pol, pipeline=True))
+    ys, yp = np.asarray(serial(x)), np.asarray(piped(x))
+    dev = float(np.max(np.abs(ys - yp)))
+    bound = piped.pipeline_divergence_bound(x)
+    assert dev <= bound, (dev, bound)
+    assert np.isfinite(yp).all()

@@ -58,6 +58,23 @@ RULES = {
     "adaptive.alexnet.mean_digits": ("max", 0.25, None),
     "adaptive.vgg16.mean_digits": ("max", 0.25, None),
     "adaptive.resnet18.mean_digits": ("max", 0.25, None),
+    # cross-layer pipelining (BENCH_pipeline.json): the traffic ratio and
+    # paper-scale savings are structural/deterministic (tight tolerances;
+    # the ratio's hard floor: the fused interchange must at least halve the
+    # inter-layer activation traffic at D=9).  The bound fraction guards
+    # soundness — measured divergence may never exceed the a-priori bound
+    # (hard 1.0); its baseline tolerance is loose because the measured
+    # deviation is a tiny numerator.
+    "pipeline.interlayer_traffic_ratio_d9": ("min", 0.05, 2.0),
+    "pipeline.alexnet.interlayer_mb_saved": ("min", 0.01, None),
+    "pipeline.vgg16.interlayer_mb_saved": ("min", 0.01, None),
+    "pipeline.resnet18.interlayer_mb_saved": ("min", 0.01, None),
+    "pipeline.alexnet.cycle_savings_pct": ("min", 0.05, None),
+    "pipeline.vgg16.cycle_savings_pct": ("min", 0.05, None),
+    "pipeline.resnet18.cycle_savings_pct": ("min", 0.05, None),
+    "pipeline.alexnet.bound_used_fraction": ("max", 1.0, 1.0),
+    "pipeline.vgg16.bound_used_fraction": ("max", 1.0, 1.0),
+    "pipeline.resnet18.bound_used_fraction": ("max", 1.0, 1.0),
 }
 
 
