@@ -1,0 +1,171 @@
+"""Digit-serial LM inference: token agreement and cross-entropy vs digits.
+
+The ``repro.lm`` subsystem's measurable claims (ISSUE 9 acceptance), on the
+qwen2-0.5b smoke config (same-family 2-layer reduction; weights and prompts
+from fixed PRNG seeds, so every value row is deterministic on the CPU
+interpret path):
+
+  * **full-budget exactness** — the packed Pallas projection path produces
+    logits *bitwise equal* to the quantized jnp oracle (the scan-serial
+    reference matmul inside the identical forward), for prefill and for a
+    KV-cache ``decode_step``.  Guarded hard at 1.0: agreement below 1.0
+    means the kernel and reference paths have diverged.
+  * **anytime curve** — next-token argmax agreement with the full-budget
+    answer rises with the digit budget, and the cross-entropy of the
+    truncated logits against the full-budget distribution falls.  The curve
+    is guarded at checkpoint budgets (1, 2, 4, 6, 9): per-single-digit
+    agreement increments on a tiny random model are decision-boundary noise
+    (deterministically non-monotone), while the checkpoint curve reflects
+    the geometric error decay and is required monotone (hard 1.0).
+  * **planned beats uniform** — the planner's per-site budget allocation
+    (from the engine's calibrated (cycles, error) frontier) achieves lower
+    total predicted error than the best uniform budget at equal-or-fewer
+    predicted cycles.  Guarded as the uniform/planned predicted-error ratio,
+    hard floor 1.0 (the greedy planner is anchored at the uniform floor, so
+    < 1.0 means the frontier plumbing broke).
+
+Emitted rows (scalar rows carry ``value=`` for tools/check_bench.py):
+
+  * ``lm.full_budget_agreement``      — hard 1.0; derived records bitwise
+  * ``lm.decode_bitwise``             — hard 1.0; decode_step kernel==oracle
+  * ``lm.curve_k<K>``                 — agreement at checkpoint budget K,
+                                        derived carries the CE value
+  * ``lm.agreement_monotone``         — hard 1.0 over the checkpoint curve
+  * ``lm.ce_monotone``                — hard 1.0 (CE non-increasing)
+  * ``lm.planned_vs_uniform_predicted`` — hard >= 1.0
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.lm import compile_lm
+from repro.models import common as cm
+from repro.models import transformer as tf
+from .common import FAST, emit
+
+CURVE_KS = (1, 2, 4, 6, 9)
+
+
+def _softmax_rows(logits: np.ndarray) -> np.ndarray:
+    z = logits - logits.max(-1, keepdims=True)
+    p = np.exp(z)
+    return p / p.sum(-1, keepdims=True)
+
+
+def _cross_entropy(p_ref: np.ndarray, logits: np.ndarray) -> float:
+    z = logits - logits.max(-1, keepdims=True)
+    logq = z - np.log(np.exp(z).sum(-1, keepdims=True))
+    return float(-np.mean((p_ref * logq).sum(-1)))
+
+
+def main() -> None:
+    batch, prompt = (16, 6) if FAST else (32, 8)
+    smoke = configs.get_config("qwen2-0.5b").smoke()
+    params = cm.init_params(tf.model_spec(smoke), jax.random.PRNGKey(0))
+    engine = compile_lm(smoke, params)
+    toks = jax.random.randint(
+        jax.random.PRNGKey(0), (batch, prompt), 0, smoke.vocab, dtype=jnp.int32
+    )
+
+    # -- full-budget exactness: kernel path vs quantized jnp oracle ---------
+    t0 = time.perf_counter()
+    full_logits = engine(toks)
+    full_us = (time.perf_counter() - t0) * 1e6
+    oracle_logits, oracle_caches = engine.oracle(toks, max_len=prompt + 1)
+    bitwise = bool(jnp.all(full_logits == oracle_logits))
+    full = np.asarray(full_logits[:, -1, : smoke.vocab], np.float64)
+    full_top = np.argmax(full, -1)
+    oracle_top = np.argmax(
+        np.asarray(oracle_logits[:, -1, : smoke.vocab], np.float64), -1
+    )
+    agreement = float(np.mean(full_top == oracle_top))
+    emit(
+        "lm.full_budget_agreement",
+        full_us,
+        f"value={agreement:.4f} next-token agreement, packed kernel vs "
+        f"quantized jnp oracle at full budget; logits bitwise_equal={bitwise} "
+        f"({batch}x{prompt} prompts, {len(engine.site_names)} sites)",
+    )
+
+    # -- decode_step exactness through the KV cache -------------------------
+    _, kernel_caches = engine.prefill(toks, max_len=prompt + 1)
+    nxt = jnp.argmax(full_logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+    t0 = time.perf_counter()
+    dk, _ = engine.decode_step(nxt, kernel_caches, prompt)
+    dec_us = (time.perf_counter() - t0) * 1e6
+    do, _ = engine.oracle_decode_step(nxt, oracle_caches, prompt)
+    dec_bitwise = bool(jnp.all(dk == do))
+    emit(
+        "lm.decode_bitwise",
+        dec_us,
+        f"value={1.0 if dec_bitwise else 0.0} 1=decode_step logits bitwise "
+        f"equal to the oracle step against the oracle's own KV cache",
+    )
+
+    # -- anytime curve: agreement and CE vs checkpoint digit budgets --------
+    p_full = _softmax_rows(full)
+    agr_curve, ce_curve = [], []
+    for k in CURVE_KS:
+        ek = engine.with_budgets({s: k for s in engine.site_names})
+        t0 = time.perf_counter()
+        lk = ek(toks)
+        k_us = (time.perf_counter() - t0) * 1e6
+        last = np.asarray(lk[:, -1, : smoke.vocab], np.float64)
+        agr = float(np.mean(np.argmax(last, -1) == full_top))
+        ce = _cross_entropy(p_full, last)
+        agr_curve.append(agr)
+        ce_curve.append(ce)
+        emit(
+            f"lm.curve_k{k}",
+            k_us,
+            f"value={agr:.4f} next-token agreement at {k} digit planes "
+            f"(all sites); CE vs full-budget distribution {ce:.4f}",
+        )
+    mono_a = all(b >= a for a, b in zip(agr_curve, agr_curve[1:]))
+    mono_c = all(b <= a for a, b in zip(ce_curve, ce_curve[1:]))
+    emit(
+        "lm.agreement_monotone",
+        1.0 if mono_a else 0.0,
+        f"value={1.0 if mono_a else 0.0} 1=agreement non-decreasing over "
+        f"checkpoint budgets {CURVE_KS} (per-single-digit increments are "
+        f"decision-boundary noise and deliberately not guarded)",
+    )
+    emit(
+        "lm.ce_monotone",
+        1.0 if mono_c else 0.0,
+        f"value={1.0 if mono_c else 0.0} 1=cross-entropy vs the full-budget "
+        f"distribution non-increasing over checkpoint budgets {CURVE_KS}",
+    )
+
+    # -- planned vs best uniform at equal-or-fewer predicted cycles ---------
+    curves = engine.budget_curves(tokens=toks)
+    full_cycles = sum(c.cycles_at(c.max_budget) for c in curves)
+    floor_cycles = sum(c.cycles_at(1) for c in curves)
+    target = max(int(0.8 * full_cycles), floor_cycles)
+    plan = engine.plan(max_cycles=target, tokens=toks)
+    bmap = dict(plan.budgets)
+    planned_cycles = sum(c.cycles_at(bmap[c.name]) for c in curves)
+    planned_err = sum(c.error_at(bmap[c.name]) for c in curves)
+    uniform = None
+    for k in range(1, engine.policy.n_planes + 1):
+        cyc_k = sum(c.cycles_at(k) for c in curves)
+        if cyc_k <= planned_cycles:
+            uniform = (k, cyc_k, sum(c.error_at(k) for c in curves))
+    ratio = uniform[2] / planned_err if planned_err > 0 else float("inf")
+    emit(
+        "lm.planned_vs_uniform_predicted",
+        float(planned_cycles),
+        f"value={min(ratio, 1e6):.4f} uniform/planned predicted-error ratio "
+        f"at equal-or-fewer planned cycles ({planned_cycles} vs uniform "
+        f"k={uniform[0]} at {uniform[1]}); >= 1.0 means the planner's "
+        f"allocation dominates the best uniform budget",
+    )
+
+
+if __name__ == "__main__":
+    main()

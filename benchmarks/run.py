@@ -17,6 +17,7 @@ One module per paper table/figure:
   serve_async_bench  async dispatcher: sustained-load p99 vs QPS, bitwise parity
   adaptive_bench     confidence-gated early exit: mean digits vs static plans
   pipeline_bench     cross-layer digit pipelining: traffic saved, cycle overlap
+  lm_bench           digit-serial LM inference: token agreement/CE vs digits
 
 ``--only`` takes exact module names (comma-separated for several); an
 unknown name is an error, not a silent no-op.  (It used to be a prefix
@@ -47,6 +48,7 @@ MODULES = [
     "serve_async_bench",
     "adaptive_bench",
     "pipeline_bench",
+    "lm_bench",
 ]
 
 

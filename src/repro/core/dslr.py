@@ -154,8 +154,9 @@ def dslr_linear(
     x: jax.Array, w: jax.Array, b: jax.Array | None = None,
     n_digits: int = 8, recoding: str = "csd",
 ) -> jax.Array:
-    """Drop-in linear layer in DSLR execution mode (used by models/ when
-    ``dslr_mode`` is enabled)."""
+    """Drop-in linear layer in DSLR execution mode (scan-serial reference;
+    the production LM projection path is ``repro.lm`` over the packed Pallas
+    kernel)."""
     y = dslr_matmul(x, w, n_digits=n_digits, recoding=recoding)
     if b is not None:
         y = y + b

@@ -36,6 +36,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import digits as dig
+
+from . import tuning
+from .dslr_conv2d import plane_fetch_indices
+
 
 def _dslr_matmul_kernel(
     planes_ref,  # (1, bm, K) int8 — digit plane d for this m-tile
@@ -118,3 +123,173 @@ def dslr_matmul_planes(
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(planes, w.astype(jnp.float32), digit_scales.reshape(D, 1).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# packed variant: 2-bit digits across the HBM boundary, bitmap-driven skip
+# (the matmul twin of kernels/dslr_conv2d.py's packed conv path — transformer
+# projections are plain (M, K) x (K, N) products, so there is no im2col stage
+# and no emit epilogue, but the interchange format, the scalar-prefetched
+# activity bitmap, and the per-row sample scales carry over unchanged)
+# ---------------------------------------------------------------------------
+
+
+def _dslr_matmul_packed_kernel(
+    act_ref,  # SMEM (Mt, D) int32 — per-(tile, digit) nonzero bitmap
+    fetch_ref,  # SMEM (Mt, D) int32 — resident byte group per step (index map)
+    packed_ref,  # (1, bm, K) int8 — byte group fetch[m, d] of the activations
+    w_ref,  # (K, bn) f32 — stationary projection weight tile
+    scale_ref,  # (1, 1) f32 — 2**-d digit weight of this plane (scale-folded)
+    *refs,  # [row_scale_ref (bm, 1),] [bias_ref (1, bn),] out_ref, acc_ref
+    n_digits: int,
+    skip_zero_planes: bool,
+    has_row_scale: bool,
+    has_bias: bool,
+):
+    del fetch_ref  # consumed by the index map, not the body
+    row_scale_ref = refs[0] if has_row_scale else None
+    bias_ref = refs[1] if (has_row_scale and has_bias) else refs[0] if has_bias else None
+    out_ref, acc_ref = refs[-2], refs[-1]
+    m, d = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(d == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # the activation quantization scale reaches the accumulator inside the
+    # per-plane step — folded into ``digit_scales`` (per-tensor) or via
+    # ``row_scale`` (per-token: each output row carries its own token's
+    # scale) — so the flush step is a pure bias add on real projection values
+    scale = scale_ref[0, 0]
+    if has_row_scale:
+        scale = scale * row_scale_ref[...]
+
+    def _accumulate():
+        # widen digit d from its 2-bit field: shift/mask on the VPU, then the
+        # same 2-bit sign extension pack_planes inverts — the resulting f32
+        # plane is bit-for-bit the unpacked kernel's operand
+        v = (packed_ref[0].astype(jnp.int32) >> (2 * (d % 4))) & 3
+        plane = (v - ((v & 2) << 1)).astype(jnp.float32)
+        contrib = jax.lax.dot_general(
+            plane,
+            w_ref[...],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_ref[...] += scale * contrib
+
+    if skip_zero_planes:
+        # the SMEM bitmap already knows a dead (tile, digit) — no byte was
+        # DMA'd in to find out (cf. the unpacked kernel's jnp.any probe)
+        jax.lax.cond(act_ref[m, d] != 0, _accumulate, lambda: None)
+    else:
+        _accumulate()
+
+    @pl.when(d == n_digits - 1)
+    def _flush():
+        res = acc_ref[...]
+        if bias_ref is not None:
+            res = res + bias_ref[0]
+        out_ref[...] = res
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "skip_zero_planes", "interpret"),
+)
+def dslr_matmul_planes_packed(
+    packed: jax.Array,  # (ceil(D/4), M, K) int8 — packed activation planes
+    w: jax.Array,  # (K, N) float — stationary projection weights
+    digit_scales: jax.Array,  # (D,) f32 — 2**-arange(D), scale-folded or not
+    bias: jax.Array | None = None,  # (N,) f32 — fused into the flush step
+    row_scale: jax.Array | None = None,  # (M,) f32 — per-token flush scale
+    block_m: int = 128,
+    block_n: int = 128,
+    skip_zero_planes: bool = True,
+    interpret: bool = False,
+) -> jax.Array:
+    """Packed-interchange twin of ``dslr_matmul_planes`` — same contract,
+    bitwise-identical result, ~4x less HBM traffic on the activation operand.
+
+    ``packed`` carries 4 MSDF digits per int8 byte (``digits.pack_planes`` of
+    the activation planes); the digit budget D is ``len(digit_scales)`` and
+    ``packed`` must hold exactly ``ceil(D/4)`` byte groups (budget truncation
+    is a nibble-granularity leading-axis slice — residual digits in the last
+    byte are never unpacked).  Zero-plane skipping is driven by a
+    scalar-prefetched activity bitmap: dead digits skip the MXU pass *and*
+    dead byte groups are never DMA'd into VMEM, because the plane index map
+    points them at the already-resident block.
+
+    Accepts any (M, N); tiles are padded internally with zero rows/columns
+    (zero digit rows are zero bytes and contribute nothing) and the (M, N)
+    result is sliced back out.  When fusing ``bias``, the activation
+    quantization scale must reach the accumulator first: fold a per-tensor
+    scalar into ``digit_scales``, or pass per-token scales as ``row_scale``
+    (one value per activation row, multiplied in at every accumulation step —
+    row i's output then depends on row i alone, the serving decoupling
+    contract).
+    """
+    G, M, K = packed.shape
+    D = digit_scales.shape[0]
+    K2, N = w.shape
+    assert K == K2, (packed.shape, w.shape)
+    assert G == dig.packed_group_count(D), (packed.shape, D)
+    bm, bn, Mp, Np = tuning.conv_tile_dims(M, N, block_m, block_n, interpret)
+    if Mp != M:
+        packed = jnp.pad(packed, ((0, 0), (0, Mp - M), (0, 0)))
+    wf = w.astype(jnp.float32)
+    if Np != N:
+        wf = jnp.pad(wf, ((0, 0), (0, Np - N)))
+
+    if skip_zero_planes:
+        activity = dig.packed_plane_activity(packed, D, bm)  # (Mt, D) int32
+        fetch = plane_fetch_indices(activity, D)
+    else:
+        # no skipping: every digit's own group is resident (fetched once per
+        # 4 digits either way, since consecutive digits share a group)
+        activity = jnp.zeros((Mp // bm, D), jnp.int32)
+        fetch = jnp.broadcast_to(
+            (jnp.arange(D, dtype=jnp.int32) // 4)[None, :], activity.shape
+        )
+
+    has_row_scale = row_scale is not None
+    has_bias = bias is not None
+    in_specs = [
+        pl.BlockSpec((1, bm, K), lambda m, n, d, act, fetch: (fetch[m, d], m, 0)),
+        pl.BlockSpec((K, bn), lambda m, n, d, act, fetch: (0, n)),
+        pl.BlockSpec((1, 1), lambda m, n, d, act, fetch: (d, 0)),
+    ]
+    operands = [packed, wf, digit_scales.reshape(D, 1).astype(jnp.float32)]
+    if has_row_scale:
+        rs = row_scale.astype(jnp.float32).reshape(M, 1)
+        if Mp != M:
+            rs = jnp.pad(rs, ((0, Mp - M), (0, 0)))
+        in_specs.append(pl.BlockSpec((bm, 1), lambda m, n, d, act, fetch: (m, 0)))
+        operands.append(rs)
+    if has_bias:
+        b = bias.astype(jnp.float32).reshape(1, N)
+        if Np != N:
+            b = jnp.pad(b, ((0, 0), (0, Np - N)))
+        in_specs.append(pl.BlockSpec((1, bn), lambda m, n, d, act, fetch: (0, n)))
+        operands.append(b)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(Mp // bm, Np // bn, D),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda m, n, d, act, fetch: (m, n)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _dslr_matmul_packed_kernel,
+            n_digits=D,
+            skip_zero_planes=skip_zero_planes,
+            has_row_scale=has_row_scale,
+            has_bias=has_bias,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        interpret=interpret,
+    )(activity, fetch, *operands)
+    return out[:M, :N]

@@ -72,6 +72,68 @@ def dslr_matmul(
     return out[:M, :N] * q.scale
 
 
+def dslr_matmul_packed(
+    x: jax.Array,
+    w: jax.Array,
+    n_digits: int = 8,
+    recoding: str = "csd",
+    digit_budget: int | None = None,
+    bias: jax.Array | None = None,
+    per_sample: bool = False,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    skip_zero_planes: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """``x @ w`` through the packed 2-bit digit-plane interchange — the one
+    spelling of digit-serial projection the LM engine routes everything
+    through (``repro.lm``).
+
+    ``x``: (M, K) float activations (for a transformer projection, M = B*S
+    token rows); ``w``: (K, N) float stationary weights.  Returns (M, N) f32.
+
+    ``digit_budget`` (<= n_digits + 1) truncates the MSDF plane stream — the
+    anytime knob; the packed operand is sliced at nibble granularity.  The
+    activation quantization scale is always folded into the accumulation
+    (per-tensor: into the digit scales; ``per_sample=True``: one scale per
+    *token row* via the kernel's ``row_scale`` path), so ``bias`` fuses into
+    the flush step and row i's output is a function of row i alone — an
+    outlier batchmate or a zero padding row cannot perturb it (bitwise).
+    Validated bit-for-bit against ``ref.dslr_matmul_packed_ref``.
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    q = core_dslr.quantize_msdf(x, n_digits, recoding, per_sample=per_sample)
+    n_planes = q.planes.shape[0]
+    if digit_budget is not None and not 1 <= digit_budget <= n_planes:
+        raise ValueError(f"digit_budget={digit_budget} outside [1, {n_planes}]")
+    D = digit_budget if digit_budget is not None else n_planes
+    packed = dig.pack_planes(q.planes)[: dig.packed_group_count(D)]
+    scales = core_dslr.digit_scales(D)
+    row_scale = None
+    if per_sample:
+        row_scale = q.scale.astype(jnp.float32)
+    else:
+        scales = q.scale * scales
+    if block_m is None or block_n is None:
+        tuned_m, tuned_n = tuning.autotune_conv_blocks(
+            x.shape[0], w.shape[1], x.shape[1], D, packed=True, interpret=interpret
+        )
+        block_m = block_m if block_m is not None else tuned_m
+        block_n = block_n if block_n is not None else tuned_n
+    return _dm.dslr_matmul_planes_packed(
+        packed,
+        w,
+        scales,
+        bias=bias,
+        row_scale=row_scale,
+        block_m=block_m,
+        block_n=block_n,
+        skip_zero_planes=skip_zero_planes,
+        interpret=interpret,
+    )
+
+
 def dslr_conv2d_planes(
     x: jax.Array,
     w: jax.Array,

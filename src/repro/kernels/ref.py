@@ -88,6 +88,51 @@ def dslr_matmul_planes_ref(
     return jnp.tensordot(digit_scales.astype(jnp.float32), contribs, axes=1)
 
 
+def dslr_matmul_packed_ref(
+    x: jax.Array,
+    w: jax.Array,
+    n_digits: int = 8,
+    recoding: str = "csd",
+    digit_budget: int | None = None,
+    bias: jax.Array | None = None,
+    per_sample: bool = False,
+) -> jax.Array:
+    """Pure-jnp oracle for ``ops.dslr_matmul_packed`` (the LM projection path).
+
+    Quantizes exactly like the wrapper, routes the planes through the packed
+    interchange (pack, truncate at nibble granularity, unpack — a digit-level
+    no-op), then accumulates in the same MSDF order with the same scale
+    folding (per-tensor: into the digit scales; per-sample: each token row's
+    scale multiplies inside the accumulation step), bias after the flush —
+    so the Pallas kernel must match bit-for-bit in interpret mode.
+    """
+    q = core_dslr.quantize_msdf(x, n_digits, recoding, per_sample=per_sample)
+    n_planes = q.planes.shape[0]
+    budget = digit_budget if digit_budget is not None else n_planes
+    planes = dig.unpack_planes(
+        dig.pack_planes(q.planes)[: dig.packed_group_count(budget)], budget
+    )
+    scales = core_dslr.digit_scales(budget)
+    row_scale = None
+    if per_sample:
+        row_scale = q.scale.astype(jnp.float32)[:, None]
+    else:
+        scales = q.scale * scales
+    wf = w.astype(jnp.float32)
+
+    def body(acc, jp):
+        s, plane = jp
+        if row_scale is not None:
+            s = s * row_scale
+        return acc + s * (plane.astype(jnp.float32) @ wf), None
+
+    zeros = jnp.zeros((x.shape[0], w.shape[1]), jnp.float32)
+    acc, _ = jax.lax.scan(body, zeros, (scales, planes))
+    if bias is not None:
+        acc = acc + bias.astype(jnp.float32)
+    return acc
+
+
 def msdf_quantize_ref(
     x: jax.Array, scale: jax.Array, frac_bits: int, n_digits: int | None = None
 ) -> jax.Array:

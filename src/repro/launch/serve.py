@@ -1,116 +1,19 @@
-"""Batched serving driver: prefill + decode loop with continuous batch slots.
+"""LM serving driver — forwards to ``repro.launch.serve_lm``.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
-        --batch 4 --prompt-len 16 --gen 32
+        --requests 8 --prompt-len 8 --gen 4
 
-Serving structure (CPU-scaled, same code path at scale):
-  * prefill builds the KV/SSM caches for a batch of prompts in one pass,
-  * decode_step generates one token per slot per iteration (greedy),
-  * slot recycling: finished sequences (EOS or length budget) are refilled
-    with queued requests without stopping the decode loop — the core of
-    continuous batching,
-  * per-step latency statistics are reported (p50/p95).
+The original seed driver here ran an eager transformer decode loop with
+hand-rolled slot recycling, bypassing the digit-serial execution paths
+entirely.  LM serving now goes through ``repro.lm``: transformer
+projections routed through the packed MSDF digit-plane matmul, SLO-tiered
+per-site digit budgets, and the deadline-based dispatcher
+(``repro.lm.DslrLmServer``).  ``serve_lm`` is that driver; this module
+stays as the stable entry point.
 """
 from __future__ import annotations
 
-import argparse
-import time
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro import configs
-from repro.launch import mesh as mesh_lib
-from repro.models import common as cm
-from repro.models import transformer as tf
-from repro.train import steps as train_steps
-
-
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2-0.5b", choices=configs.ARCH_IDS)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
-
-    cfg = configs.get_config(args.arch)
-    if args.smoke:
-        cfg = cfg.smoke()
-
-    n_dev = len(jax.devices())
-    mesh = jax.make_mesh((n_dev, 1), ("data", "model"))
-    cm.set_active_rules(mesh_lib.rules_for(mesh), mesh)
-
-    rng = np.random.default_rng(args.seed)
-    max_len = args.prompt_len + args.gen
-    B = args.batch
-
-    with mesh:
-        params = cm.init_params(tf.model_spec(cfg), jax.random.PRNGKey(args.seed))
-        serve_step = jax.jit(
-            lambda p, t, c, i: tf.decode_step(cfg, p, t, c, i)
-        )
-
-        # request queue
-        queue = [
-            rng.integers(0, cfg.vocab, size=(args.prompt_len,)).astype(np.int32)
-            for _ in range(args.requests)
-        ]
-        generated = {i: [] for i in range(args.requests)}
-        slot_req = list(range(min(B, len(queue))))
-        next_req = len(slot_req)
-
-        # prefill the initial batch
-        prompts = jnp.asarray(np.stack([queue[r] for r in slot_req]))
-        caches = tf.init_cache(cfg, B, max_len)
-        logits, caches, _ = jax.jit(
-            lambda p, t, c: tf.forward(cfg, p, t, caches=c, cache_index=jnp.int32(0))
-        )(params, prompts, caches)
-        tokens = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
-        budget = {s: args.gen for s in range(B)}
-
-        lat = []
-        pos = args.prompt_len
-        done_reqs = 0
-        while done_reqs < args.requests and pos < max_len:
-            t0 = time.time()
-            tokens_next, caches = serve_step(params, tokens, caches, jnp.int32(pos))
-            tokens_next.block_until_ready()
-            lat.append(time.time() - t0)
-            for s, r in enumerate(slot_req):
-                if r is None:
-                    continue
-                generated[r].append(int(tokens_next[s]))
-                budget[s] -= 1
-                if budget[s] <= 0:
-                    done_reqs += 1
-                    if next_req < len(queue):
-                        # continuous batching: recycle the slot (prefill of
-                        # the new prompt elided in the smoke driver)
-                        slot_req[s] = next_req
-                        budget[s] = args.gen
-                        next_req += 1
-                    else:
-                        slot_req[s] = None
-            tokens = tokens_next[:, None]
-            pos += 1
-
-        lat_ms = np.array(lat) * 1e3
-        print(
-            f"[serve] {args.arch}: {done_reqs}/{args.requests} requests, "
-            f"{len(lat)} decode steps, p50 {np.percentile(lat_ms,50):.1f} ms "
-            f"p95 {np.percentile(lat_ms,95):.1f} ms, "
-            f"throughput {B*len(lat)/max(sum(lat),1e-9):.1f} tok/s",
-            flush=True,
-        )
-        sample = generated[0][:16]
-        print(f"[serve] request 0 first tokens: {sample}")
-
+from repro.launch.serve_lm import main, parse_args  # noqa: F401
 
 if __name__ == "__main__":
     main()

@@ -1,0 +1,13 @@
+"""Digit-serial LM inference: transformer projections through the packed
+MSDF digit-plane matmul, planned budgets, request-level serving."""
+from .engine import DslrLmEngine, Site, compile_lm, lm_sites
+from .serve import DslrLmServer, LM_DEFAULT_SLOS
+
+__all__ = [
+    "DslrLmEngine",
+    "DslrLmServer",
+    "LM_DEFAULT_SLOS",
+    "Site",
+    "compile_lm",
+    "lm_sites",
+]

@@ -1,0 +1,680 @@
+"""Digit-serial LM inference engine: transformer projections over the packed
+MSDF matmul.
+
+``compile_lm(cfg, params, policy)`` walks ``transformer.model_spec`` for a
+dense-attention architecture (qwen2-0.5b is the reference config), names
+every QKV / attention-out / FFN projection as a budgetable *site*
+(``L{i}.attn.wq`` ... ``L{i}.ffn.wo``), slices the stacked block parameters
+into per-site stationary weights **once** at build time, and returns a
+``DslrLmEngine`` that routes every one of those projections through the
+packed digit-plane matmul kernel (``kernels/dslr_matmul.py``), under the
+same ``ExecutionPolicy`` the conv engine uses:
+
+  * ``engine.prefill(tokens)``      — full-sequence forward, returns logits
+                                      and f32 KV caches,
+  * ``engine.decode_step(t, c, i)`` — one KV-cache decode step,
+  * ``engine.oracle(tokens)``       — the quantized jnp oracle: the *same*
+                                      forward with the scan-serial reference
+                                      matmul (``kernels/ref.py``) swapped in
+                                      for the Pallas kernel.  Every other op
+                                      (RMSNorm, RoPE, attention, residuals,
+                                      unembed) is shared verbatim, so at any
+                                      budget the kernel path's logits are
+                                      bitwise equal to the oracle's —
+                                      asserted in tests/test_lm_engine.py,
+  * ``engine.budget_curves()`` / ``engine.plan()`` — per-site (digits ->
+                                      cycles, error) frontiers through
+                                      ``core.planner``, so ``plan_budgets``
+                                      allocates digit budgets across
+                                      transformer projections exactly like
+                                      conv layers,
+  * ``engine.anytime_logit_bounds`` — the anytime bound propagated to the
+                                      pre-softmax logits by a calibrated
+                                      first-order gain walk (derivation in
+                                      docs/NUMERICS.md, "LM logit bound").
+
+Activations run in float32: the digit-plane quantizer is the precision
+bottleneck by construction, and a shared f32 elementwise path is what makes
+kernel-vs-oracle equality *bitwise* rather than approximate.  Per-sample
+scales quantize each flattened (B*S) token row against its own amax, so a
+request's logits are independent of its wave-mates (serve/).  The unembed
+(tied-embedding readout) stays a plain f32 matmul — it is a weight-stationary
+*output* head, not one of the paper's streamed-activation projections; both
+paths share it, so it cannot break bitwise equality.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import threading
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cycle_model as cyc
+from repro.core import planner as core_planner
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.models import attention as attn
+from repro.models import common as cm
+from repro.models.config import ArchConfig
+from repro.models.graph import ExecutionPolicy
+
+# max |d silu/dx| (at x ~ 1.278) and max |d gelu/dx| — the activation
+# Lipschitz constants the FFN gain walk uses (docs/NUMERICS.md)
+SILU_LIPSCHITZ = 1.1
+GELU_LIPSCHITZ = 1.13
+
+
+# ---------------------------------------------------------------------------
+# site walk: model_spec -> named projection sites
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Site:
+    """One budgetable projection: ``name`` is the policy/planner key
+    (``L{i}.attn.wq``), ``group``/``index`` locate the stacked leaf in the
+    param tree (``params["blocks"][group][...path][...]["kernel"][index]``),
+    ``path`` is the leaf path inside the block spec, and ``d_in``/``d_out``
+    the matmul contraction/output widths."""
+
+    name: str
+    group: str
+    index: int
+    path: Tuple[str, ...]  # e.g. ("attn", "wq") or ("ffn", "wi_gate")
+    d_in: int
+    d_out: int
+
+
+def _supported(cfg: ArchConfig) -> None:
+    kinds = {k for k, _ in cfg.pattern()}
+    if cfg.mla is not None:
+        raise ValueError("repro.lm routes GQA projections; MLA is unsupported")
+    if kinds != {"dense"}:
+        raise ValueError(
+            f"repro.lm supports dense-attention stacks, got block kinds {sorted(kinds)}"
+        )
+    if cfg.enc_layers:
+        raise ValueError("encoder-decoder configs are unsupported in repro.lm")
+    if cfg.mrope_sections:
+        raise ValueError("M-RoPE configs are unsupported in repro.lm")
+    if cfg.ffn_kind not in ("swiglu", "geglu", "mlp"):
+        raise ValueError(f"unsupported ffn_kind {cfg.ffn_kind!r}")
+
+
+def lm_sites(cfg: ArchConfig) -> Tuple[Site, ...]:
+    """The budgetable projection sites of a config, in execution order —
+    the LM analog of ``LayerGraph.conv_nodes``.  Site names are global layer
+    indexed (``L3.ffn.wi_up``), stable across group boundaries."""
+    _supported(cfg)
+    d, Dh = cfg.d_model, cfg.resolved_head_dim
+    H, Hkv = cfg.n_heads, cfg.n_kv_heads
+    attn_dims = {
+        "wq": (d, H * Dh),
+        "wk": (d, Hkv * Dh),
+        "wv": (d, Hkv * Dh),
+        "wo": (H * Dh, d),
+    }
+    if cfg.ffn_kind in ("swiglu", "geglu"):
+        ffn_dims = {"wi_gate": (d, cfg.d_ff), "wi_up": (d, cfg.d_ff), "wo": (cfg.d_ff, d)}
+    else:  # mlp
+        ffn_dims = {"wi": (d, cfg.d_ff), "wo": (cfg.d_ff, d)}
+    sites: List[Site] = []
+    layer = 0
+    for gi, (kind, count) in enumerate(cfg.pattern()):
+        group = f"g{gi}_{kind}"
+        for i in range(count):
+            for leaf, (din, dout) in attn_dims.items():
+                sites.append(
+                    Site(f"L{layer}.attn.{leaf}", group, i, ("attn", leaf), din, dout)
+                )
+            for leaf, (din, dout) in ffn_dims.items():
+                sites.append(
+                    Site(f"L{layer}.ffn.{leaf}", group, i, ("ffn", leaf), din, dout)
+                )
+            layer += 1
+    return tuple(sites)
+
+
+def _leaf(tree, path: Tuple[str, ...]):
+    for p in path:
+        tree = tree[p]
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# the shared forward (kernel path and oracle path differ ONLY in the matmul)
+# ---------------------------------------------------------------------------
+
+
+def _site_matmul(
+    policy: ExecutionPolicy,
+    use_ref: bool,
+    site: str,
+    kernel: jax.Array,
+    bias: Optional[jax.Array],
+    x: jax.Array,  # (B, S, K)
+) -> jax.Array:
+    """Route one projection through the packed digit-plane matmul (kernel
+    path) or the scan-serial reference (oracle path).  Rows are the
+    flattened (B*S) token stream; ``per_sample_scales`` gives each token row
+    its own quantization grid."""
+    B, S, K = x.shape
+    x2 = x.reshape(B * S, K)
+    budget = policy.budget_for(site)
+    if use_ref:
+        y = kref.dslr_matmul_packed_ref(
+            x2, kernel,
+            n_digits=policy.n_digits, recoding=policy.recoding,
+            digit_budget=budget, bias=bias,
+            per_sample=policy.per_sample_scales,
+        )
+    else:
+        y = kops.dslr_matmul_packed(
+            x2, kernel,
+            n_digits=policy.n_digits, recoding=policy.recoding,
+            digit_budget=budget, bias=bias,
+            per_sample=policy.per_sample_scales,
+            block_m=policy.block_m, block_n=policy.block_n,
+            skip_zero_planes=policy.skip_zero_planes,
+            interpret=policy.interpret,
+        )
+    return y.reshape(B, S, -1)
+
+
+def _record_amax(record: Optional[dict], key: str, x: jax.Array) -> None:
+    if record is not None:
+        v = float(jnp.max(jnp.abs(x)))
+        record[key] = max(record.get(key, 0.0), v)
+
+
+def _record_rms_min(record: Optional[dict], key: str, x: jax.Array) -> None:
+    if record is not None:
+        rms = jnp.sqrt(jnp.mean(jnp.square(x), axis=-1) + 1e-6)
+        v = float(jnp.min(rms))
+        record[key] = min(record.get(key, float("inf")), v)
+
+
+def lm_forward(
+    cfg: ArchConfig,
+    policy: ExecutionPolicy,
+    use_ref: bool,
+    exec_tree: Dict[str, Any],
+    tokens: jax.Array,  # (B, S) int32
+    caches: Optional[Tuple] = None,  # per-layer (k, v) f32, or None (prefill)
+    cache_index: Optional[jax.Array] = None,
+    max_len: Optional[int] = None,
+    record: Optional[dict] = None,
+):
+    """The one LM forward both execution paths share.  Prefill when
+    ``caches`` is None: returns ``(logits, caches)`` with f32 KV caches of
+    length ``max_len`` (default S).  Decode otherwise: ``tokens`` lands at
+    ``cache_index`` in every cache.  ``record`` (eager calibration only)
+    collects per-site input amax and the per-layer stats the logit-level
+    gain walk needs."""
+    B, S = tokens.shape
+    acfg = cfg.attn_config()
+    H, Hkv, Dh = acfg.n_heads, acfg.n_kv_heads, acfg.head_dim
+    sites: Dict[str, Tuple] = exec_tree["sites"]
+    layers: Tuple[Dict[str, Any], ...] = exec_tree["layers"]
+
+    x = jnp.take(exec_tree["embed"], tokens, axis=0).astype(jnp.float32)
+    x = x * (cfg.d_model ** 0.5)
+    base = cache_index if cache_index is not None else 0
+    positions = base + jnp.arange(S, dtype=jnp.int32)[None, :]
+    positions = jnp.broadcast_to(positions, (B, S))
+
+    def proj(site: str, h: jax.Array) -> jax.Array:
+        kernel, bias = sites[site]
+        _record_amax(record, f"scale:{site}", h)
+        return _site_matmul(policy, use_ref, site, kernel, bias, h)
+
+    new_caches: List[Tuple[jax.Array, jax.Array]] = []
+    for li, lp in enumerate(layers):
+        # -- attention sublayer -------------------------------------------
+        _record_rms_min(record, f"rms:L{li}.attn", x)
+        h = cm.rmsnorm(lp["norm_attn"], x) if cfg.norm == "rmsnorm" else cm.layernorm(lp["norm_attn"], x)
+        q = proj(f"L{li}.attn.wq", h).reshape(B, S, H, Dh)
+        k = proj(f"L{li}.attn.wk", h).reshape(B, S, Hkv, Dh)
+        v = proj(f"L{li}.attn.wv", h).reshape(B, S, Hkv, Dh)
+        if cfg.qk_norm:
+            q = cm.rmsnorm(lp["q_norm"], q)
+            k = cm.rmsnorm(lp["k_norm"], k)
+        q = attn.apply_rope(q, positions, acfg.rope_theta)
+        k = attn.apply_rope(k, positions, acfg.rope_theta)
+        _record_amax(record, f"qmax:L{li}", q)
+        _record_amax(record, f"kmax:L{li}", k)
+        _record_amax(record, f"vmax:L{li}", v)
+        if caches is None:
+            out = attn.blocked_attention(q, k, v, causal=True)
+            ml = max_len if max_len is not None else S
+            ck = jnp.zeros((B, ml, Hkv, Dh), jnp.float32).at[:, :S].set(k)
+            cv = jnp.zeros((B, ml, Hkv, Dh), jnp.float32).at[:, :S].set(v)
+        else:
+            ck, cv = caches[li]
+            ck = jax.lax.dynamic_update_slice(ck, k, (0, cache_index, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v, (0, cache_index, 0, 0))
+            out = attn.blocked_attention(
+                q, ck, cv, causal=True,
+                q_offset=cache_index, kv_len=cache_index + S,
+            )
+        new_caches.append((ck, cv))
+        a_out = proj(f"L{li}.attn.wo", out.reshape(B, S, H * Dh))
+        x = x + a_out
+        # -- FFN sublayer -------------------------------------------------
+        _record_rms_min(record, f"rms:L{li}.ffn", x)
+        h = cm.rmsnorm(lp["norm_ffn"], x) if cfg.norm == "rmsnorm" else cm.layernorm(lp["norm_ffn"], x)
+        if cfg.ffn_kind in ("swiglu", "geglu"):
+            act = jax.nn.silu if cfg.ffn_kind == "swiglu" else cm.gelu
+            g = proj(f"L{li}.ffn.wi_gate", h)
+            u = proj(f"L{li}.ffn.wi_up", h)
+            _record_amax(record, f"umax:L{li}", u)
+            s = act(g)
+            _record_amax(record, f"smax:L{li}", s)
+            f_out = proj(f"L{li}.ffn.wo", s * u)
+        else:  # mlp
+            hmid = cm.gelu(proj(f"L{li}.ffn.wi", h))
+            f_out = proj(f"L{li}.ffn.wo", hmid)
+        x = x + f_out
+
+    _record_rms_min(record, "rms:final", x)
+    x = cm.rmsnorm(exec_tree["norm_f"], x) if cfg.norm == "rmsnorm" else cm.layernorm(exec_tree["norm_f"], x)
+    logits = x @ exec_tree["embed"].astype(jnp.float32).T
+    if cfg.padded_vocab != cfg.vocab:
+        pad_mask = (jnp.arange(cfg.padded_vocab) >= cfg.vocab) * jnp.float32(-1e9)
+        logits = logits + pad_mask
+    return logits, tuple(new_caches)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "policy", "use_ref", "max_len")
+)
+def _jit_prefill(cfg, policy, use_ref, max_len, exec_tree, tokens):
+    return lm_forward(cfg, policy, use_ref, exec_tree, tokens, max_len=max_len)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "policy", "use_ref"))
+def _jit_decode(cfg, policy, use_ref, exec_tree, tokens, caches, cache_index):
+    return lm_forward(
+        cfg, policy, use_ref, exec_tree, tokens,
+        caches=caches, cache_index=cache_index,
+    )
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+
+class DslrLmEngine:
+    """Compiled digit-serial LM: per-site stationary weights sliced once from
+    the stacked param tree, one jit program per (cfg, policy, shape)."""
+
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        params,
+        policy: ExecutionPolicy,
+        sites: Optional[Tuple[Site, ...]] = None,
+        exec_tree: Optional[Dict[str, Any]] = None,
+        plan_tokens: int = 64,
+    ):
+        if policy.mode != "dslr_planes":
+            raise ValueError(
+                f"DslrLmEngine needs mode='dslr_planes', got {policy.mode!r}"
+            )
+        self.cfg = cfg
+        self.policy = policy
+        self.sites = lm_sites(cfg) if sites is None else sites
+        self.site_names = tuple(s.name for s in self.sites)
+        names = set(self.site_names)
+        for name, _ in policy.layer_budgets or ():
+            if name not in names:
+                raise ValueError(f"budget for unknown projection site {name!r}")
+        self.plan_tokens = int(plan_tokens)
+        self._params = params  # by reference, for with_policy derivations
+        if exec_tree is not None:
+            self._exec = exec_tree  # derived engine: share sliced weights
+        else:
+            self._exec = self._build_exec(cfg, params)
+        self._derived: Dict[ExecutionPolicy, "DslrLmEngine"] = {}
+        self._cache_lock = threading.Lock()
+
+    def _build_exec(self, cfg: ArchConfig, params) -> Dict[str, Any]:
+        """Slice every stacked projection leaf into its per-site stationary
+        (kernel, bias) pair, cast f32, exactly once — forward passes only
+        quantize activations (the conv engine's build-once contract)."""
+        site_w: Dict[str, Tuple] = {}
+        for s in self.sites:
+            leaf = _leaf(params["blocks"][s.group], s.path)
+            kernel = leaf["kernel"][s.index].astype(jnp.float32)
+            if kernel.shape != (s.d_in, s.d_out):
+                raise ValueError(
+                    f"{s.name}: expected kernel {(s.d_in, s.d_out)}, "
+                    f"got {kernel.shape}"
+                )
+            bias = (
+                leaf["bias"][s.index].astype(jnp.float32)
+                if "bias" in leaf else None
+            )
+            site_w[s.name] = (kernel, bias)
+        layers: List[Dict[str, Any]] = []
+        for gi, (kind, count) in enumerate(cfg.pattern()):
+            g = params["blocks"][f"g{gi}_{kind}"]
+            for i in range(count):
+                lp = {
+                    "norm_attn": {"weight": g["norm_attn"]["weight"][i].astype(jnp.float32)},
+                    "norm_ffn": {"weight": g["norm_ffn"]["weight"][i].astype(jnp.float32)},
+                }
+                if cfg.qk_norm:
+                    lp["q_norm"] = {"weight": g["attn"]["q_norm"]["weight"][i].astype(jnp.float32)}
+                    lp["k_norm"] = {"weight": g["attn"]["k_norm"]["weight"][i].astype(jnp.float32)}
+                layers.append(lp)
+        return {
+            "embed": params["embed"]["table"].astype(jnp.float32),
+            "norm_f": {"weight": params["norm_f"]["weight"].astype(jnp.float32)},
+            "layers": tuple(layers),
+            "sites": site_w,
+        }
+
+    # -- execution -----------------------------------------------------------
+
+    def __call__(self, tokens: jax.Array) -> jax.Array:
+        """tokens (B, S) int32 -> logits (B, S, padded_vocab) f32."""
+        logits, _ = self.prefill(tokens)
+        return logits
+
+    def prefill(
+        self, tokens: jax.Array, max_len: Optional[int] = None
+    ) -> Tuple[jax.Array, Tuple]:
+        """Full-sequence forward.  Returns (logits (B, S, Vp), caches) with
+        f32 KV caches sized ``max_len`` (default S) for decode stepping."""
+        tokens = jnp.asarray(tokens, jnp.int32)
+        return _jit_prefill(
+            self.cfg, self.policy, False, max_len, self._exec, tokens
+        )
+
+    def decode_step(
+        self, tokens: jax.Array, caches: Tuple, cache_index
+    ) -> Tuple[jax.Array, Tuple]:
+        """One KV-cache step: tokens (B, 1) at absolute position
+        ``cache_index``.  Returns (logits (B, 1, Vp), new caches)."""
+        tokens = jnp.asarray(tokens, jnp.int32)
+        return _jit_decode(
+            self.cfg, self.policy, False, self._exec, tokens, caches,
+            jnp.asarray(cache_index, jnp.int32),
+        )
+
+    def oracle(
+        self, tokens: jax.Array, max_len: Optional[int] = None
+    ) -> Tuple[jax.Array, Tuple]:
+        """The quantized jnp oracle: identical forward with the scan-serial
+        reference matmul — the bitwise ground truth for the kernel path."""
+        tokens = jnp.asarray(tokens, jnp.int32)
+        return _jit_prefill(
+            self.cfg, self.policy, True, max_len, self._exec, tokens
+        )
+
+    def oracle_decode_step(
+        self, tokens: jax.Array, caches: Tuple, cache_index
+    ) -> Tuple[jax.Array, Tuple]:
+        tokens = jnp.asarray(tokens, jnp.int32)
+        return _jit_decode(
+            self.cfg, self.policy, True, self._exec, tokens, caches,
+            jnp.asarray(cache_index, jnp.int32),
+        )
+
+    def with_policy(self, policy: ExecutionPolicy) -> "DslrLmEngine":
+        """Derived engine under a different policy, sharing the sliced
+        stationary weights (memoized + thread-safe, one engine per policy —
+        the server's program-identity contract)."""
+        if policy == self.policy:
+            return self
+        with self._cache_lock:
+            engine = self._derived.get(policy)
+            if engine is None:
+                engine = DslrLmEngine(
+                    self.cfg, self._params, policy,
+                    sites=self.sites, exec_tree=self._exec,
+                    plan_tokens=self.plan_tokens,
+                )
+                self._derived[policy] = engine
+        return engine
+
+    def with_budgets(self, budgets: Dict[str, int]) -> "DslrLmEngine":
+        """Derived engine with explicit per-site digit budgets (site name ->
+        planes) — the graph-free LM spelling of
+        ``ExecutionPolicy.with_layer_budgets``."""
+        unknown = set(budgets) - set(self.site_names)
+        if unknown:
+            raise ValueError(f"unknown projection sites {sorted(unknown)}")
+        pairs = tuple(
+            (n, int(budgets[n])) for n in self.site_names if n in budgets
+        )
+        return self.with_policy(
+            dataclasses.replace(self.policy, layer_budgets=pairs)
+        )
+
+    # -- planner integration --------------------------------------------------
+
+    def site_dims(self, tokens: Optional[int] = None) -> Dict[str, cyc.ConvLayer]:
+        """Cycle-model dims per projection site: a (T, K) x (K, N) matmul is
+        a 1x1 conv with N filters over K channels on a T x 1 map, so Eq. (3)
+        prices it exactly like a conv layer (``tokens`` defaults to
+        ``plan_tokens`` — the planning sequence length)."""
+        T = int(tokens) if tokens is not None else self.plan_tokens
+        return {
+            s.name: cyc.ConvLayer(s.name, 1, s.d_out, s.d_in, T, 1)
+            for s in self.sites
+        }
+
+    def row_l1(self) -> Dict[str, float]:
+        """Max column-L1 mass of each site's kernel — the weight term of the
+        anytime bound (and the site's induced ∞-norm gain)."""
+        out = {}
+        for s in self.sites:
+            kernel, _ = self._exec["sites"][s.name]
+            out[s.name] = float(jnp.max(jnp.sum(jnp.abs(kernel), axis=0)))
+        return out
+
+    def calibrate(self, tokens: jax.Array) -> Dict[str, float]:
+        """One eager oracle forward on a calibration batch, recording per-site
+        input amax (-> quantization scales, ``scale:<site>``) and the
+        per-layer stats the logit gain walk consumes (``rms:*``, ``qmax:*``,
+        ``kmax:*``, ``vmax:*``, ``umax:*``, ``smax:*``)."""
+        record: Dict[str, float] = {}
+        lm_forward(
+            self.cfg, self.policy, True, self._exec,
+            jnp.asarray(tokens, jnp.int32), record=record,
+        )
+        return record
+
+    def calibration_scales(self, tokens: jax.Array) -> Dict[str, float]:
+        """Per-site activation quantization scale on a calibration batch —
+        ``amax * (1 + 2**-n_digits)``, the grid ``digits.to_planes`` uses."""
+        record = self.calibrate(tokens)
+        f = self.policy.n_digits
+        return {
+            s.name: max(record[f"scale:{s.name}"], 1e-30) * (1.0 + 2.0 ** -f)
+            for s in self.sites
+        }
+
+    def logit_gains(self, record: Dict[str, float]) -> Dict[str, float]:
+        """First-order ∞-norm gain from each site's *output* to the
+        pre-softmax logits — the LM analog of ``DslrEngine.node_gains``,
+        built by a reverse walk over the residual stream with calibrated
+        local linearizations (full derivation: docs/NUMERICS.md, "LM logit
+        bound").  Per layer:
+
+          * RMSNorm is linearized at the calibrated operating point:
+            gain <= 2 * max|w| / rms_min (NOT a global Lipschitz constant —
+            rms -> 0 blows it up; honest first-order only),
+          * softmax(QK^T/sqrt(Dh)) V is 1-Lipschitz in V (convex mixture);
+            perturbations entering through Q or K pass the softmax Jacobian
+            (total variation <= 2 * max|dscore|) and the rope rotation
+            (per-pair gain sqrt(2)),
+          * the FFN mid product obeys the product rule at calibrated
+            |u|max / |act(g)|max with the activation's Lipschitz constant,
+          * a residual add sums branch gains; downstream projections
+            amplify by their kernel's max column L1.
+        """
+        if self.cfg.qk_norm:
+            raise NotImplementedError(
+                "logit gain walk does not model qk_norm layers yet"
+            )
+        cfg = self.cfg
+        Dh = cfg.resolved_head_dim
+        l1 = self.row_l1()
+        glu = cfg.ffn_kind in ("swiglu", "geglu")
+        act_lip = SILU_LIPSCHITZ if cfg.ffn_kind == "swiglu" else GELU_LIPSCHITZ
+        n_layers = len(self._exec["layers"])
+
+        def norm_gain(key: str, p) -> float:
+            wmax = float(jnp.max(jnp.abs(p["weight"])))
+            return 2.0 * wmax / max(record[f"rms:{key}"], 1e-30)
+
+        # readout: final norm then unembed (max vocab-row L1 of the table)
+        u_l1 = float(jnp.max(jnp.sum(jnp.abs(self._exec["embed"]), axis=1)))
+        r = norm_gain("final", self._exec["norm_f"]) * u_l1
+
+        gains: Dict[str, float] = {}
+        for li in reversed(range(n_layers)):
+            lp = self._exec["layers"][li]
+            # FFN sublayer (residual point after it has gain r)
+            if glu:
+                wo = l1[f"L{li}.ffn.wo"]
+                umax = record[f"umax:L{li}"]
+                smax = record[f"smax:L{li}"]
+                gains[f"L{li}.ffn.wo"] = r
+                gains[f"L{li}.ffn.wi_gate"] = r * wo * act_lip * umax
+                gains[f"L{li}.ffn.wi_up"] = r * wo * smax
+                ffn_lip = wo * (
+                    act_lip * umax * l1[f"L{li}.ffn.wi_gate"]
+                    + smax * l1[f"L{li}.ffn.wi_up"]
+                )
+            else:
+                wo = l1[f"L{li}.ffn.wo"]
+                gains[f"L{li}.ffn.wo"] = r
+                gains[f"L{li}.ffn.wi"] = r * wo * act_lip
+                ffn_lip = wo * act_lip * l1[f"L{li}.ffn.wi"]
+            r = r * (1.0 + ffn_lip * norm_gain(f"L{li}.ffn", lp["norm_ffn"]))
+            # attention sublayer
+            kmax, qmax, vmax = (
+                record[f"kmax:L{li}"], record[f"qmax:L{li}"], record[f"vmax:L{li}"]
+            )
+            rope = 2.0 ** 0.5
+            g_q = rope * 2.0 * (Dh ** 0.5) * kmax * vmax
+            g_k = rope * 2.0 * (Dh ** 0.5) * qmax * vmax
+            wo_a = l1[f"L{li}.attn.wo"]
+            gains[f"L{li}.attn.wo"] = r
+            gains[f"L{li}.attn.wq"] = r * wo_a * g_q
+            gains[f"L{li}.attn.wk"] = r * wo_a * g_k
+            gains[f"L{li}.attn.wv"] = r * wo_a * 1.0
+            attn_lip = wo_a * (
+                g_q * l1[f"L{li}.attn.wq"]
+                + g_k * l1[f"L{li}.attn.wk"]
+                + 1.0 * l1[f"L{li}.attn.wv"]
+            )
+            r = r * (1.0 + attn_lip * norm_gain(f"L{li}.attn", lp["norm_attn"]))
+        return gains
+
+    def anytime_logit_bounds(
+        self, tokens: jax.Array, ks: Sequence[int],
+        record: Optional[Dict[str, float]] = None,
+    ) -> Dict[int, float]:
+        """Sound-to-first-order bound on ``max|logits_k - logits_full|`` per
+        anytime prefix budget ``k``: each site truncated below its policy
+        budget contributes its matmul tail ``2 * scale * 2**-k_eff * row_l1``
+        (core/dslr.py::anytime_error_bound at the calibrated per-site scale),
+        amplified by its calibrated logit gain, summed over sites.  Shares
+        ``DslrServer._anytime_bounds``'s one approximation: calibration
+        scales come from the full-budget forward."""
+        if record is None:
+            record = self.calibrate(tokens)
+        gains = self.logit_gains(record)
+        l1 = self.row_l1()
+        f = self.policy.n_digits
+        pol = self.policy
+        out: Dict[int, float] = {}
+        for k in ks:
+            total = 0.0
+            for s in self.sites:
+                full = pol.budget_for(s.name) or pol.n_planes
+                k_eff = min(int(k), full)
+                if k_eff < full:
+                    scale = max(record[f"scale:{s.name}"], 1e-30) * (1.0 + 2.0 ** -f)
+                    total += (
+                        gains[s.name] * 2.0 * scale * 2.0 ** -k_eff * l1[s.name]
+                    )
+            out[int(k)] = total
+        return out
+
+    def budget_curves(
+        self,
+        tokens: Optional[jax.Array] = None,
+        scale: float = 1.0,
+        method: str = "bound",
+    ) -> Tuple[core_planner.LayerCurve, ...]:
+        """Per-site (digit budget -> predicted cycles, error) frontier — the
+        planner's input, ordered like ``self.sites``.  Without calibration
+        ``tokens`` the error column is the site-output anytime bound at unit
+        activation ``scale`` (the conv engine's ``method='bound'`` contract,
+        which is what ``serve.slo.resolve_policy`` calls); with ``tokens``
+        the per-site calibrated scale x logit gain makes the error column a
+        *logit-level* predicted bound."""
+        if method != "bound":
+            raise ValueError(f"method={method!r}; the LM engine is bound-only")
+        dims = self.site_dims()
+        l1 = self.row_l1()
+        n_planes = self.policy.n_planes
+        site_scale: Dict[str, float] = {}
+        if tokens is not None:
+            record = self.calibrate(tokens)
+            gains = self.logit_gains(record)
+            f = self.policy.n_digits
+            for s in self.sites:
+                cal = max(record[f"scale:{s.name}"], 1e-30) * (1.0 + 2.0 ** -f)
+                site_scale[s.name] = cal * gains[s.name]
+        return tuple(
+            core_planner.layer_curve(
+                dims[s.name], l1[s.name], n_planes,
+                scale=site_scale.get(s.name, scale),
+            )
+            for s in self.sites
+        )
+
+    def plan(
+        self,
+        max_cycles: Optional[int] = None,
+        max_error: Optional[float] = None,
+        tokens: Optional[jax.Array] = None,
+    ) -> core_planner.BudgetPlan:
+        """Solve per-site digit budgets on this engine's frontier under a
+        cycle or predicted-error target — ``plan_budgets`` allocating across
+        transformer projections exactly like conv layers.  Install with
+        ``engine.with_policy(engine.policy.with_plan(plan))``."""
+        return core_planner.plan_budgets(
+            self.budget_curves(tokens=tokens),
+            max_cycles=max_cycles,
+            max_error=max_error,
+            network=self.cfg.name,
+        )
+
+
+def compile_lm(
+    cfg: ArchConfig,
+    params,
+    policy: Optional[ExecutionPolicy] = None,
+    plan: Optional[core_planner.BudgetPlan] = None,
+    plan_tokens: int = 64,
+) -> DslrLmEngine:
+    """Build a digit-serial LM engine: site walk over ``model_spec``,
+    stationary weights sliced once, one jit program per policy.  ``plan``
+    installs a solved planner ``BudgetPlan`` via
+    ``ExecutionPolicy.with_plan``."""
+    policy = policy if policy is not None else ExecutionPolicy(per_sample_scales=True)
+    if plan is not None:
+        policy = policy.with_plan(plan)
+    return DslrLmEngine(cfg, params, policy, plan_tokens=plan_tokens)

@@ -1,0 +1,318 @@
+"""Request-level LM serving over the digit-serial engine.
+
+``DslrLmServer`` runs the ``lm`` workload through the same asynchronous
+runtime as the CNN path (``serve/dispatcher.py``): a background dispatcher
+forms waves by deadline-based continuous batching, requests group by
+``(ExecutionPolicy, (prompt_len, gen))`` so one compiled program serves each
+(bucket, policy) pair, SLO classes resolve to planner-solved per-site digit
+budgets (``serve/slo.py::resolve_policy`` against the LM engine's frontier),
+and per-token-row quantization scales keep every request's logits bitwise
+independent of its wave-mates and of bucket zero-padding.
+
+A wave is **prefill batching + KV-cache decode**: the engine prefills the
+stacked prompt rows in one program, then (for requests asking for
+generation) steps ``decode_step`` greedily against the shared f32 KV cache,
+one token per step.  The **anytime channel** returns, per requested digit
+prefix ``k``, the k-plane last-position logits (the cheap prefix-budget
+program) plus a calibrated first-order bound on ``max|partial_k - full|``
+over the pre-softmax logits (``DslrLmEngine.anytime_logit_bounds``,
+derivation in docs/NUMERICS.md).
+
+Adaptive (confidence-gated) tiers are a CNN-cascade feature; LM tiers are
+the planned/exact ones (``LM_DEFAULT_SLOS``).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cycle_model as cyc
+from repro.models.graph import ExecutionPolicy
+from repro.serve.dispatcher import QueuedRequest, ServerOverloaded
+from repro.serve.server import AnytimeResult, DslrServer, ResultHandle
+from repro.serve.slo import SloClass
+
+from .engine import DslrLmEngine
+
+LM_DEFAULT_SLOS: Tuple[SloClass, ...] = (
+    SloClass("fast", 0.35, max_dwell_ms=50.0),
+    SloClass("balanced", 0.60, max_dwell_ms=200.0),
+    SloClass("exact", None, max_dwell_ms=1000.0),
+)
+
+
+class LmResultHandle(ResultHandle):
+    """Future-style handle for one LM request.  ``result()`` is the
+    last-position logits ``(padded_vocab,)`` under the tier's policy;
+    ``generated`` holds the greedily decoded continuation (length = the
+    request's ``gen``), available once the request completes."""
+
+    def __init__(self, server: "DslrLmServer", request_id: int, slo: str):
+        super().__init__(server, request_id, slo)
+        self.generated: Tuple[int, ...] = ()
+
+    @property
+    def tokens(self) -> Tuple[int, ...]:
+        """The generated continuation (blocks like ``result()``)."""
+        self.result()
+        return self.generated
+
+
+class DslrLmServer(DslrServer):
+    """LM serving runtime: the CNN server's dispatcher/bucketing/SLO
+    machinery with the wave body swapped for prefill + KV-cache decode."""
+
+    def __init__(
+        self,
+        engine: DslrLmEngine,
+        slos: Sequence[SloClass] = LM_DEFAULT_SLOS,
+        buckets: Sequence[int] = (1, 2, 4, 8),
+        per_sample_scales: bool = True,
+        policies: Optional[Dict[str, ExecutionPolicy]] = None,
+        max_queue: Optional[int] = 256,
+        dispatch_margin_ms: float = 1.0,
+        default_dwell_ms: float = 200.0,
+    ):
+        for cls in slos:
+            if cls.adaptive:
+                raise ValueError(
+                    f"SLO class {cls.name!r}: adaptive cascades are a CNN "
+                    f"feature; LM tiers must be planned/exact"
+                )
+        super().__init__(
+            engine,
+            slos=slos,
+            buckets=buckets,
+            per_sample_scales=per_sample_scales,
+            policies=policies,
+            max_queue=max_queue,
+            dispatch_margin_ms=dispatch_margin_ms,
+            default_dwell_ms=default_dwell_ms,
+        )
+
+    # -- CNN-only surfaces ---------------------------------------------------
+
+    def cascade_for(self, slo: str):
+        raise NotImplementedError("adaptive cascades are not an LM feature")
+
+    def calibrate(self, *a, **k):
+        raise NotImplementedError("adaptive cascades are not an LM feature")
+
+    # -- planner-predicted compute --------------------------------------------
+
+    def predicted_compute_ms(self, slo: str) -> float:
+        """Eq.-3 predicted compute of one request under a tier's solved
+        per-site budgets, at the accelerator clock (the ``deadline_ms``
+        floor) — summed over the engine's projection sites."""
+        with self._lock:
+            if slo not in self._predicted_ms:
+                policy = self.policy_for(slo)
+                dims = self._donor.site_dims()
+                cycles = sum(
+                    cyc.dslr_cycles(
+                        dims[name],
+                        precision=policy.budget_for(name) or policy.n_planes,
+                    )
+                    for name in self._donor.site_names
+                )
+                self._predicted_ms[slo] = cycles / cyc.FREQ_HZ * 1e3
+            return self._predicted_ms[slo]
+
+    # -- submission ----------------------------------------------------------
+
+    def submit(
+        self,
+        tokens: jax.Array,
+        slo: str = "balanced",
+        anytime: Sequence[int] = (),
+        gen: int = 0,
+        deadline_ms: Optional[float] = None,
+    ) -> LmResultHandle:
+        """Enqueue one LM request.  ``tokens``: (S,) int32 prompt.  ``gen``
+        asks for that many greedily decoded continuation tokens.
+        ``anytime`` asks for k-digit-prefix last-position logits alongside
+        the full answer.  Same admission control / deadline semantics as the
+        CNN server."""
+        if self._dispatcher.closed:
+            raise RuntimeError("server is closed; build a new DslrLmServer")
+        tokens = jnp.asarray(tokens, jnp.int32)
+        if tokens.ndim != 1 or tokens.shape[0] < 1:
+            raise ValueError(
+                f"tokens must be a 1-D prompt (S,), got shape {tokens.shape}"
+            )
+        if gen < 0:
+            raise ValueError(f"gen={gen} must be >= 0")
+        policy = self.policy_for(slo)  # validates the SLO name eagerly
+        anytime = tuple(sorted(int(k) for k in anytime))
+        for k in anytime:
+            if not 1 <= k <= policy.n_planes:
+                raise ValueError(
+                    f"anytime budget {k} outside [1, {policy.n_planes}]"
+                )
+        if deadline_ms is not None:
+            floor_ms = self.predicted_compute_ms(slo)
+            if deadline_ms < floor_ms:
+                raise ValueError(
+                    f"deadline_ms={deadline_ms} is below the {slo!r} tier's "
+                    f"planner-predicted compute time {floor_ms:.4f} ms"
+                )
+            dwell_ms = float(deadline_ms)
+        else:
+            dwell_ms = self.dwell_budget_ms(slo)
+        with self._lock:
+            request_id = self._next_id
+            self._next_id += 1
+        handle = LmResultHandle(self, request_id, slo)
+        # waves group by (policy, (prompt_len, gen)): one compiled
+        # prefill(+decode) program chain per (bucket, policy, shape)
+        group_key = (policy, (int(tokens.shape[0]), int(gen)))
+        req = QueuedRequest(
+            request_id=request_id,
+            image=tokens,  # the dispatcher is payload-agnostic
+            slo=slo,
+            anytime=anytime,
+            handle=handle,
+            group_key=group_key,
+            submit_t=handle.submit_time,
+            deadline_t=handle.submit_time + dwell_ms * 1e-3,
+        )
+        if self.running:
+            try:
+                self._dispatcher.submit(req)
+            except ServerOverloaded:
+                with self._lock:
+                    self.stats["shed"] += 1
+                raise
+        else:
+            with self._lock:
+                self._queue.append(req)
+        with self._lock:
+            self.stats["requests"] += 1
+        return handle
+
+    # -- dispatch ------------------------------------------------------------
+
+    def _dispatch_wave(self, chunk: List[QueuedRequest]) -> None:
+        """One LM wave: batched prefill of the stacked prompt rows, greedy
+        KV-cache decode for ``gen`` steps, anytime prefix logits per
+        requested budget.  Per-token-row scales make bucket padding and wave
+        composition bitwise invisible to every request."""
+        policy, (S, gen) = chunk[0].group_key
+        engine: DslrLmEngine = self._engine_for(policy)
+        bucket = self._bucket_for(len(chunk))
+        tok = jnp.stack([r.image for r in chunk])
+        if bucket > len(chunk):
+            tok = jnp.pad(tok, ((0, bucket - len(chunk)), (0, 0)))
+
+        max_len = S + gen if gen else None
+        logits, caches = engine.prefill(tok, max_len=max_len)
+        last = logits[:, -1, :]
+        generated: List[List[int]] = [[] for _ in range(bucket)]
+        step_last = last
+        for t in range(gen):
+            next_tok = jnp.argmax(step_last, axis=-1).astype(jnp.int32)
+            for i in range(bucket):
+                generated[i].append(int(next_tok[i]))
+            if t + 1 >= gen:
+                break
+            step_logits, caches = engine.decode_step(
+                next_tok[:, None], caches, S + t
+            )
+            step_last = step_logits[:, 0, :]
+
+        # anytime channel: one prefix program per distinct requested budget
+        ks = sorted({k for r in chunk for k in r.anytime})
+        partials_by_k: Dict[int, jax.Array] = {}
+        bounds_by_k: Dict[int, float] = {}
+        if ks:
+            bounds_by_k = self._anytime_bounds(engine, tok, ks)
+            for k in ks:
+                pk = self._prefix_policy(policy, k)
+                if pk == policy:
+                    partials_by_k[k] = last
+                    bounds_by_k[k] = 0.0
+                else:
+                    partials_by_k[k] = self._engine_for(pk)(tok)[:, -1, :]
+
+        with self._lock:
+            self.stats["dispatches"] += 1
+            self.stats["padded_rows"] += bucket - len(chunk)
+            self.program_keys.add((bucket, policy))
+            for k in ks:
+                pk = self._prefix_policy(policy, k)
+                if pk != policy:
+                    self.program_keys.add((bucket, pk))
+            self.wave_log.append(tuple(r.request_id for r in chunk))
+            wave_seq = len(self.wave_log)
+
+        for i, r in enumerate(chunk):
+            r.handle.generated = tuple(generated[i])
+            r.handle._set_result(
+                last[i],
+                tuple(
+                    AnytimeResult(
+                        budget=k,
+                        logits=partials_by_k[k][i],
+                        top1=int(jnp.argmax(partials_by_k[k][i])),
+                        bound=bounds_by_k[k],
+                    )
+                    for k in r.anytime
+                ),
+                wave_seq,
+            )
+
+    # -- anytime error bounds --------------------------------------------------
+
+    def _anytime_bounds(
+        self, engine: DslrLmEngine, tok: jax.Array, ks: Sequence[int]
+    ) -> Dict[int, float]:
+        """Calibrated first-order bound on ``max|partial_k - full|`` over
+        the pre-softmax logits, per requested budget — the LM analog of the
+        CNN server's Lipschitz composition, via the engine's logit gain
+        walk.  Calibration (scales, gains) comes from the wave's own token
+        batch at full budget — the same one approximation the CNN bound
+        carries."""
+        return engine.anytime_logit_bounds(tok, ks)
+
+    # -- warmup ----------------------------------------------------------------
+
+    def warmup(
+        self,
+        prompt_len: int,
+        gen: int = 0,
+        slos: Optional[Sequence[str]] = None,
+        buckets: Optional[Sequence[int]] = None,
+        anytime: Sequence[int] = (),
+    ) -> int:
+        """Trace/compile every (bucket, SLO policy) prefill (+ one decode
+        step when ``gen > 0``) program up front with zero prompts, plus the
+        anytime prefix programs.  Returns the number of programs warmed."""
+        warmed = set()
+        if slos is None:
+            slos = sorted(set(self.slos) | set(self._slo_policies))
+        warm_buckets = tuple(buckets if buckets is not None else self.buckets)
+        for slo in slos:
+            policy = self.policy_for(slo)
+            policies = {policy}
+            policies.update(self._prefix_policy(policy, int(k)) for k in anytime)
+            for pol in policies:
+                engine = self._engine_for(pol)
+                for b in warm_buckets:
+                    key = (b, pol)
+                    if key in warmed:
+                        continue
+                    tok = jnp.zeros((b, prompt_len), jnp.int32)
+                    max_len = prompt_len + gen if gen else None
+                    logits, caches = engine.prefill(tok, max_len=max_len)
+                    if gen and pol == policy:
+                        step, _ = engine.decode_step(
+                            jnp.zeros((b, 1), jnp.int32), caches, prompt_len
+                        )
+                        jax.block_until_ready(step)
+                    jax.block_until_ready(logits)
+                    self.program_keys.add(key)
+                    warmed.add(key)
+        return len(warmed)

@@ -216,12 +216,13 @@ def gqa_spec(cfg: AttnConfig):
     return spec
 
 
-def _project_qkv(params, cfg: AttnConfig, x, positions, dslr_digits=0):
+def _project_qkv(params, cfg: AttnConfig, x, positions):
+    # digit-serial QKV projection is repro.lm's graph walk, not a flag here
     B, S, _ = x.shape
     H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    q = cm.dense(params["wq"], x, dslr_digits).reshape(B, S, H, Dh)
-    k = cm.dense(params["wk"], x, dslr_digits).reshape(B, S, Hkv, Dh)
-    v = cm.dense(params["wv"], x, dslr_digits).reshape(B, S, Hkv, Dh)
+    q = cm.dense(params["wq"], x).reshape(B, S, H, Dh)
+    k = cm.dense(params["wk"], x).reshape(B, S, Hkv, Dh)
+    v = cm.dense(params["wv"], x).reshape(B, S, Hkv, Dh)
     if cfg.qk_norm:
         q = cm.rmsnorm(params["q_norm"], q)
         k = cm.rmsnorm(params["k_norm"], k)
@@ -241,11 +242,10 @@ def gqa_apply(
     positions: Optional[jax.Array] = None,  # (B, S) or (3, B, S) for mrope
     kv_cache: Optional[Tuple[jax.Array, jax.Array]] = None,
     cache_index: Optional[jax.Array] = None,
-    dslr_digits: int = 0,
 ):
     """Returns (out, new_kv_cache).  Prefill when kv_cache is None."""
     B, S, _ = x.shape
-    q, k, v = _project_qkv(params, cfg, x, positions, dslr_digits)
+    q, k, v = _project_qkv(params, cfg, x, positions)
     # NOTE: no explicit q/k/v constraints — head counts (e.g. kv=2) don't
     # always divide the model axis; the projection-weight shardings propagate
     # the right layout and avoid SPMD involuntary-remat copies.
@@ -272,7 +272,7 @@ def gqa_apply(
         new_cache = (ck, cv)
 
     out = out.reshape(B, S, cfg.n_heads * cfg.head_dim)
-    return cm.dense(params["wo"], out, dslr_digits), new_cache
+    return cm.dense(params["wo"], out), new_cache
 
 
 def gqa_cache_shape(cfg: AttnConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
@@ -312,7 +312,6 @@ def mla_apply(
     positions: Optional[jax.Array] = None,
     kv_cache: Optional[jax.Array] = None,  # cached latent (B, S, kv_lora+d_rope)
     cache_index: Optional[jax.Array] = None,
-    dslr_digits: int = 0,
 ):
     """DeepSeek-V2 MLA.  The *compressed latent* is what we cache — the
     paper's 93% KV-memory saving — and heads are up-projected on the fly."""
@@ -320,13 +319,13 @@ def mla_apply(
     B, S, _ = x.shape
     H = cfg.n_heads
 
-    q = cm.dense(params["q_b"], cm.rmsnorm(params["q_a_norm"], cm.dense(params["q_a"], x, dslr_digits)), dslr_digits)
+    q = cm.dense(params["q_b"], cm.rmsnorm(params["q_a_norm"], cm.dense(params["q_a"], x)))
     q = q.reshape(B, S, H, m.d_nope + m.d_rope)
     q_nope, q_rope = q[..., : m.d_nope], q[..., m.d_nope :]
     if positions is not None:
         q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
 
-    latent = cm.dense(params["kv_a"], x, dslr_digits)  # (B, S, kv_lora + d_rope)
+    latent = cm.dense(params["kv_a"], x)  # (B, S, kv_lora + d_rope)
 
     if kv_cache is None:
         # prefill: up-project the latent to per-head K/V (compute-optimal)
@@ -334,7 +333,7 @@ def mla_apply(
         k_rope = latent[..., m.kv_lora :][:, :, None, :]  # (B, S, 1, d_rope)
         if positions is not None:
             k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
-        kv = cm.dense(params["kv_b"], c_kv, dslr_digits).reshape(
+        kv = cm.dense(params["kv_b"], c_kv).reshape(
             B, S, H, m.d_nope + m.d_v
         )
         k_nope, v = kv[..., : m.d_nope], kv[..., m.d_nope :]
@@ -345,7 +344,7 @@ def mla_apply(
         q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
         out = blocked_attention(q_full, k, v, causal=cfg.causal)
         out = out.reshape(B, S, H * m.d_v)
-        return cm.dense(params["wo"], out, dslr_digits), latent
+        return cm.dense(params["wo"], out), latent
 
     # decode: *absorbed* attention in latent space (the MLA trick) — the
     # cached compressed latent is attended directly; W_kv_b is folded into
@@ -388,7 +387,7 @@ def mla_apply(
         "bshl,lhd->bshd", out_lat, w_v.astype(x.dtype), preferred_element_type=f32
     ).astype(x.dtype)
     out = out.reshape(B, S, H * m.d_v)
-    return cm.dense(params["wo"], out, dslr_digits), new_cache
+    return cm.dense(params["wo"], out), new_cache
 
 
 def mla_cache_shape(cfg: AttnConfig, batch: int, max_len: int, dtype=jnp.bfloat16):

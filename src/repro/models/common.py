@@ -138,19 +138,15 @@ def dense_spec(d_in: int, d_out: int, axes=("embed", "mlp"), bias=False, scale=1
     return spec
 
 
-def dense(params, x, dslr_digits: int = 0):
-    """Linear layer; ``dslr_digits > 0`` switches to the paper's MSDF
-    digit-plane execution (weights parallel/stationary, activations
-    digit-serial) via core.dslr."""
+def dense(params, x):
+    """Linear layer.  Digit-serial execution is NOT a flag here: routing a
+    projection through the paper's MSDF digit-plane path is the job of
+    ``repro.lm`` (compile-time graph walk over ``model_spec``, packed Pallas
+    kernel, per-projection budgets) — the one spelling of digit-serial
+    projection.  The old eager ``dslr_digits`` hook never reached the packed
+    kernels, the planner, or the server, and was retired with it."""
     w = params["kernel"].astype(x.dtype)
-    if dslr_digits:
-        from repro.core.dslr import dslr_matmul
-
-        shp = x.shape
-        y = dslr_matmul(x.reshape(-1, shp[-1]), w, n_digits=dslr_digits)
-        y = y.reshape(*shp[:-1], w.shape[-1]).astype(x.dtype)
-    else:
-        y = x @ w
+    y = x @ w
     if "bias" in params:
         y = y + params["bias"].astype(y.dtype)
     return y

@@ -50,7 +50,8 @@ class ArchConfig:
     remat: bool = True
     remat_policy: str = "full"  # full | save_ffn (keep FFN hidden, skip its recompute)
     scan_layers: bool = True
-    dslr_digits: int = 0  # >0: paper's MSDF digit-serial linear execution
+    # (the old ``dslr_digits`` eager flag is retired: digit-serial execution
+    # is repro.lm's compile-time projection walk, not a config field)
     # distribution defaults (can be overridden per shape at dry-run time)
     microbatches: int = 1
 

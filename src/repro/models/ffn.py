@@ -22,19 +22,21 @@ def ffn_spec(d_model: int, d_ff: int, kind: str = "swiglu"):
     raise ValueError(kind)
 
 
-def ffn_apply(params, x, kind: str = "swiglu", dslr_digits: int = 0):
+def ffn_apply(params, x, kind: str = "swiglu"):
+    # digit-serial FFN execution lives in repro.lm (the packed digit-plane
+    # projection walk), not behind a flag here — see models/common.py::dense
     if kind in ("swiglu", "geglu"):
         act = jax.nn.silu if kind == "swiglu" else cm.gelu
-        g = cm.dense(params["wi_gate"], x, dslr_digits)
-        u = cm.dense(params["wi_up"], x, dslr_digits)
+        g = cm.dense(params["wi_gate"], x)
+        u = cm.dense(params["wi_up"], x)
         h = act(g) * u
         h = cm.constrain(h, "batch", "seq", "mlp")
         from jax.ad_checkpoint import checkpoint_name
 
         h = checkpoint_name(h, "ffn_hidden")
-        return cm.dense(params["wo"], h, dslr_digits)
+        return cm.dense(params["wo"], h)
     if kind == "mlp":
-        h = cm.gelu(cm.dense(params["wi"], x, dslr_digits))
+        h = cm.gelu(cm.dense(params["wi"], x))
         h = cm.constrain(h, "batch", "seq", "mlp")
-        return cm.dense(params["wo"], h, dslr_digits)
+        return cm.dense(params["wo"], h)
     raise ValueError(kind)

@@ -61,7 +61,7 @@ def moe_spec(d_model: int, mcfg: MoeConfig):
     return spec
 
 
-def moe_apply(params, x: jax.Array, mcfg: MoeConfig, dslr_digits: int = 0):
+def moe_apply(params, x: jax.Array, mcfg: MoeConfig):
     """x: (B, S, d) -> (B, S, d); aux loss returned separately."""
     B, S, d = x.shape
     E, K = mcfg.n_experts, mcfg.top_k
@@ -116,6 +116,6 @@ def moe_apply(params, x: jax.Array, mcfg: MoeConfig, dslr_digits: int = 0):
     if mcfg.n_shared:
         from .ffn import ffn_apply
 
-        y = y + ffn_apply(params["shared"], xt, "swiglu", dslr_digits)
+        y = y + ffn_apply(params["shared"], xt, "swiglu")
 
     return y.reshape(B, S, d), aux_loss

@@ -80,7 +80,6 @@ def block_apply(
 ):
     """One block. Returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
-    dd = cfg.dslr_digits
     new_cache: Dict[str, Any] = {}
     cache = cache or {}
     want_cache = want_cache or bool(cache)
@@ -109,11 +108,11 @@ def block_apply(
 
     if cfg.mla:
         a_out, kv = attn.mla_apply(
-            params["attn"], acfg, h, positions, cache.get("kv"), cache_index, dd
+            params["attn"], acfg, h, positions, cache.get("kv"), cache_index
         )
     else:
         a_out, kv = attn.gqa_apply(
-            params["attn"], acfg, h, positions, cache.get("kv"), cache_index, dd
+            params["attn"], acfg, h, positions, cache.get("kv"), cache_index
         )
     if want_cache and kind != "enc":
         new_cache["kv"] = kv
@@ -135,15 +134,15 @@ def block_apply(
     if kind == "dec":
         hc = _norm(cfg, params["norm_cross"], x)
         ccfg = cfg.attn_config(causal=False)
-        c_out = _cross_attend(params["cross"], ccfg, hc, enc_out, dd)
+        c_out = _cross_attend(params["cross"], ccfg, hc, enc_out)
         x = x + c_out
 
     if "ffn" in params:
         h = _norm(cfg, params["norm_ffn"], x)
-        x = x + ffn_mod.ffn_apply(params["ffn"], h, cfg.ffn_kind, dd)
+        x = x + ffn_mod.ffn_apply(params["ffn"], h, cfg.ffn_kind)
     elif "moe" in params:
         h = _norm(cfg, params["norm_ffn"], x)
-        y, aux = moe_mod.moe_apply(params["moe"], h, cfg.moe, dd)
+        y, aux = moe_mod.moe_apply(params["moe"], h, cfg.moe)
         x = x + y
 
     # sequence-parallel residual stream: the block output is the tensor the
@@ -153,14 +152,14 @@ def block_apply(
     return x, new_cache, aux
 
 
-def _cross_attend(params, acfg, q_in, enc_out, dd):
+def _cross_attend(params, acfg, q_in, enc_out):
     B, S, _ = q_in.shape
     H, Hkv, Dh = acfg.n_heads, acfg.n_kv_heads, acfg.head_dim
-    q = cm.dense(params["wq"], q_in, dd).reshape(B, S, H, Dh)
-    k = cm.dense(params["wk"], enc_out, dd).reshape(B, -1, Hkv, Dh)
-    v = cm.dense(params["wv"], enc_out, dd).reshape(B, -1, Hkv, Dh)
+    q = cm.dense(params["wq"], q_in).reshape(B, S, H, Dh)
+    k = cm.dense(params["wk"], enc_out).reshape(B, -1, Hkv, Dh)
+    v = cm.dense(params["wv"], enc_out).reshape(B, -1, Hkv, Dh)
     out = attn.blocked_attention(q, k, v, causal=False)
-    return cm.dense(params["wo"], out.reshape(B, S, H * Dh), dd)
+    return cm.dense(params["wo"], out.reshape(B, S, H * Dh))
 
 
 # =============================================================================

@@ -119,6 +119,55 @@ def test_roofline_row_math():
     assert row["fits_16g"]
 
 
+def test_qwen2_lm_site_walk_golden():
+    """The repro.lm graph walk over qwen2-0.5b: 24 layers x 7 projection
+    sites (4 attention + 3 swiglu FFN), each with the exact GQA/FFN dims
+    from the assignment table — the shape-level golden for the digit-serial
+    LM path."""
+    from repro.lm import lm_sites
+
+    cfg = configs.get_config("qwen2-0.5b")
+    sites = lm_sites(cfg)
+    assert len(sites) == 24 * 7
+    by_name = {s.name: s for s in sites}
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    for li in range(cfg.n_layers):
+        assert (by_name[f"L{li}.attn.wq"].d_in,
+                by_name[f"L{li}.attn.wq"].d_out) == (896, H * Dh)
+        assert by_name[f"L{li}.attn.wk"].d_out == Hkv * Dh == 128
+        assert by_name[f"L{li}.attn.wv"].d_out == 128
+        assert (by_name[f"L{li}.attn.wo"].d_in,
+                by_name[f"L{li}.attn.wo"].d_out) == (H * Dh, 896)
+        assert (by_name[f"L{li}.ffn.wi_gate"].d_in,
+                by_name[f"L{li}.ffn.wi_gate"].d_out) == (896, 4864)
+        assert by_name[f"L{li}.ffn.wi_up"].d_out == 4864
+        assert (by_name[f"L{li}.ffn.wo"].d_in,
+                by_name[f"L{li}.ffn.wo"].d_out) == (4864, 896)
+    # every site's kernel exists in the model spec with matching shape
+    spec = tf.model_spec(cfg)
+    import numpy as np
+
+    for s in sites[:7]:  # one layer's worth is enough at 0.5b scale
+        leaf = spec["blocks"][s.group]
+        for p in s.path:
+            leaf = leaf[p]
+        assert tuple(np.asarray(leaf["kernel"].shape)[-2:]) == (s.d_in, s.d_out)
+
+
+def test_qwen2_smoke_lm_logits_shape():
+    """The smoke reduction runs end to end through the LM engine with the
+    padded-vocab logit contract."""
+    from repro.lm import compile_lm
+
+    smoke = configs.get_config("qwen2-0.5b").smoke()
+    params = cm.init_params(tf.model_spec(smoke), jax.random.PRNGKey(0))
+    engine = compile_lm(smoke, params)
+    toks = jnp.zeros((1, 4), jnp.int32)
+    logits = engine(toks)
+    assert logits.shape == (1, 4, smoke.padded_vocab)
+    assert smoke.padded_vocab == 256
+
+
 def test_smoke_configs_are_reduced_same_family():
     for a in configs.ARCH_IDS:
         full = configs.get_config(a)

@@ -1,0 +1,216 @@
+"""DslrLmEngine: the digit-serial LM inference engine (repro.lm).
+
+On the qwen2-0.5b smoke reduction, interpret mode on CPU:
+  * full-budget logits through the packed-kernel projection path are
+    *bitwise equal* to the quantized jnp oracle (the scan-serial reference
+    matmul inside the identical shared forward) — prefill and decode_step,
+  * per-site budget maps (``with_budgets``) truncate without recompiling
+    the weights, and unknown site names are rejected,
+  * the calibrated logit-level anytime bound dominates the measured
+    truncation error at every budget and is exactly zero at full budget,
+  * the planner integration: ``budget_curves`` -> ``plan`` allocates
+    per-site budgets whose total predicted error beats the best uniform
+    budget at equal-or-fewer predicted cycles,
+  * per-token-row scales keep a request's logits bitwise independent of
+    its batchmates,
+  * the old eager ``dslr_digits`` hooks stay retired: passing the flag to
+    the model-layer entry points is a TypeError, and it is no longer an
+    ``ArchConfig`` field (digit-serial execution is repro.lm's compile-time
+    walk, not a per-call flag).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.lm import DslrLmEngine, compile_lm, lm_sites
+from repro.models import common as cm
+from repro.models import transformer as tf
+from repro.models.config import ArchConfig
+from repro.models.graph import ExecutionPolicy
+
+
+@pytest.fixture(scope="module")
+def smoke_engine():
+    smoke = configs.get_config("qwen2-0.5b").smoke()
+    params = cm.init_params(tf.model_spec(smoke), jax.random.PRNGKey(0))
+    return compile_lm(smoke, params)
+
+
+@pytest.fixture(scope="module")
+def toks(smoke_engine):
+    return jax.random.randint(
+        jax.random.PRNGKey(1), (2, 6), 0, smoke_engine.cfg.vocab,
+        dtype=jnp.int32,
+    )
+
+
+# ---------------------------------------------------------------------------
+# bitwise oracle equality
+# ---------------------------------------------------------------------------
+
+
+def test_full_budget_prefill_bitwise_equals_oracle(smoke_engine, toks):
+    lk = smoke_engine(toks)
+    lo, _ = smoke_engine.oracle(toks)
+    np.testing.assert_array_equal(np.asarray(lk), np.asarray(lo))
+
+
+def test_decode_step_bitwise_equals_oracle(smoke_engine, toks):
+    S = toks.shape[1]
+    lk, ck = smoke_engine.prefill(toks, max_len=S + 2)
+    lo, co = smoke_engine.oracle(toks, max_len=S + 2)
+    np.testing.assert_array_equal(np.asarray(lk), np.asarray(lo))
+    nxt = jnp.argmax(lk[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+    dk, ck = smoke_engine.decode_step(nxt, ck, S)
+    do, co = smoke_engine.oracle_decode_step(nxt, co, S)
+    np.testing.assert_array_equal(np.asarray(dk), np.asarray(do))
+    # and one more step through the updated caches
+    nxt2 = jnp.argmax(dk[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+    dk2, _ = smoke_engine.decode_step(nxt2, ck, S + 1)
+    do2, _ = smoke_engine.oracle_decode_step(nxt2, co, S + 1)
+    np.testing.assert_array_equal(np.asarray(dk2), np.asarray(do2))
+
+
+def test_truncated_budget_bitwise_equals_oracle(smoke_engine, toks):
+    e4 = smoke_engine.with_budgets(
+        {s: 4 for s in smoke_engine.site_names}
+    )
+    lk = e4(toks)
+    lo, _ = e4.oracle(toks)
+    np.testing.assert_array_equal(np.asarray(lk), np.asarray(lo))
+    assert np.any(np.asarray(lk) != np.asarray(smoke_engine(toks)))
+
+
+def test_per_sample_scales_decouple_batchmates(smoke_engine, toks):
+    alone = smoke_engine(toks[:1])
+    batched = smoke_engine(toks)
+    np.testing.assert_array_equal(np.asarray(alone[0]), np.asarray(batched[0]))
+
+
+# ---------------------------------------------------------------------------
+# policy / budget plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_with_budgets_rejects_unknown_site(smoke_engine):
+    with pytest.raises(ValueError, match="unknown"):
+        smoke_engine.with_budgets({"L0.attn.wq": 3, "L9.ffn.wo": 2})
+
+
+def test_engine_requires_dslr_mode():
+    smoke = configs.get_config("qwen2-0.5b").smoke()
+    params = cm.init_params(tf.model_spec(smoke), jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="mode"):
+        DslrLmEngine(smoke, params, ExecutionPolicy(mode="float"))
+
+
+def test_with_policy_memoized(smoke_engine):
+    pol = dataclasses.replace(smoke_engine.policy, digit_budget=3)
+    assert smoke_engine.with_policy(pol) is smoke_engine.with_policy(pol)
+    assert smoke_engine.with_policy(smoke_engine.policy) is smoke_engine
+
+
+# ---------------------------------------------------------------------------
+# anytime logit bound + planner integration
+# ---------------------------------------------------------------------------
+
+
+def test_anytime_bounds_dominate_measured_error(smoke_engine, toks):
+    V = smoke_engine.cfg.vocab
+    full = np.asarray(smoke_engine(toks)[:, :, :V])
+    ks = [2, 4, 6, smoke_engine.policy.n_planes]
+    bounds = smoke_engine.anytime_logit_bounds(toks, ks)
+    assert bounds[smoke_engine.policy.n_planes] == 0.0
+    for k in ks[:-1]:
+        ek = smoke_engine.with_budgets(
+            {s: k for s in smoke_engine.site_names}
+        )
+        err = float(np.max(np.abs(np.asarray(ek(toks)[:, :, :V]) - full)))
+        assert err <= bounds[k], (k, err, bounds[k])
+    # and the bound decays with the budget
+    assert bounds[2] > bounds[4] > bounds[6]
+
+
+def test_planned_beats_uniform_at_equal_predicted_cycles(smoke_engine, toks):
+    curves = smoke_engine.budget_curves(tokens=toks)
+    assert len(curves) == len(smoke_engine.site_names)
+    full = sum(c.cycles_at(c.max_budget) for c in curves)
+    floor = sum(c.cycles_at(1) for c in curves)
+    plan = smoke_engine.plan(
+        max_cycles=max(int(0.8 * full), floor), tokens=toks
+    )
+    bmap = dict(plan.budgets)
+    planned_cycles = sum(c.cycles_at(bmap[c.name]) for c in curves)
+    planned_err = sum(c.error_at(bmap[c.name]) for c in curves)
+    best_uniform_err = None
+    for k in range(1, smoke_engine.policy.n_planes + 1):
+        if sum(c.cycles_at(k) for c in curves) <= planned_cycles:
+            best_uniform_err = sum(c.error_at(k) for c in curves)
+    assert best_uniform_err is not None
+    assert planned_err <= best_uniform_err
+    # the plan is runnable as a policy
+    planned = smoke_engine.with_policy(
+        smoke_engine.policy.with_plan(plan)
+    )
+    assert planned(toks).shape == smoke_engine(toks).shape
+
+
+def test_budget_curves_unit_scale_without_tokens(smoke_engine):
+    """The server's ``resolve_policy`` calls ``budget_curves(method=...)``
+    with no tokens — curves must exist with unit error scale."""
+    curves = smoke_engine.budget_curves(method="bound")
+    assert len(curves) == len(smoke_engine.site_names)
+    for c in curves:
+        assert c.errors[-1] == 0.0 or c.errors[-1] < c.errors[0]
+
+
+# ---------------------------------------------------------------------------
+# the retired eager dslr_digits hooks stay retired
+# ---------------------------------------------------------------------------
+
+
+def test_dense_rejects_dslr_digits_flag():
+    params = {"kernel": jnp.zeros((4, 4), jnp.float32)}
+    with pytest.raises(TypeError):
+        cm.dense(params, jnp.zeros((2, 4), jnp.float32), dslr_digits=3)
+
+
+def test_ffn_apply_rejects_dslr_digits_flag():
+    from repro.models.ffn import ffn_apply
+
+    params = {
+        "wi_gate": {"kernel": jnp.zeros((4, 8), jnp.float32)},
+        "wi_up": {"kernel": jnp.zeros((4, 8), jnp.float32)},
+        "wo": {"kernel": jnp.zeros((8, 4), jnp.float32)},
+    }
+    with pytest.raises(TypeError):
+        ffn_apply(params, jnp.zeros((1, 2, 4), jnp.float32), dslr_digits=3)
+
+
+def test_arch_config_has_no_dslr_digits_field():
+    assert "dslr_digits" not in {f.name for f in dataclasses.fields(ArchConfig)}
+    with pytest.raises(TypeError):
+        ArchConfig(
+            name="x", family="dense", n_layers=1, d_model=8, n_heads=2,
+            n_kv_heads=2, d_ff=16, vocab=32, dslr_digits=8,
+        )
+
+
+# ---------------------------------------------------------------------------
+# site walk
+# ---------------------------------------------------------------------------
+
+
+def test_smoke_site_walk_matches_params(smoke_engine):
+    sites = lm_sites(smoke_engine.cfg)
+    assert [s.name for s in sites[:4]] == [
+        "L0.attn.wq", "L0.attn.wk", "L0.attn.wv", "L0.attn.wo",
+    ]
+    assert len(sites) == smoke_engine.cfg.n_layers * 7  # swiglu: 4 attn + 3 ffn
+    for s in sites:
+        kernel, _ = smoke_engine._exec["sites"][s.name]
+        assert kernel.shape == (s.d_in, s.d_out), s

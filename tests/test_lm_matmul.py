@@ -1,0 +1,154 @@
+"""The packed MSDF matmul (the LM projection primitive).
+
+Property tests (hypothesis) + bitwise checks, interpret mode on CPU:
+  * pack/unpack commutes with the matmul: the packed Pallas kernel equals
+    the scan-serial reference at every digit count 1..10 and every prefix
+    budget (including non-nibble-aligned ones — the residual bits of the
+    last byte group are never read),
+  * per-sample (per-token-row) scales decouple batchmates bitwise: a row's
+    output is identical alone, batched with an outlier, and batched with
+    zero padding rows (the request-level serving contract),
+  * the fused bias epilogue survives packing unchanged (bitwise),
+  * all three recoders and non-default block shapes stay bitwise-coupled.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+def rand_mm(seed, M=5, K=7, N=6):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((M, K)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((K, N)).astype(np.float32))
+    return x, w
+
+
+# ---------------------------------------------------------------------------
+# pack/unpack commutes with the matmul (the property behind repro.lm)
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(min_value=1, max_value=10),
+       st.integers(min_value=0, max_value=10**6))
+@settings(max_examples=10, deadline=None)
+def test_packed_matmul_every_digit_count_bitwise(n_digits, seed):
+    x, w = rand_mm(seed)
+    got = ops.dslr_matmul_packed(x, w, n_digits=n_digits)
+    want = ref.dslr_matmul_packed_ref(x, w, n_digits=n_digits)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(st.integers(min_value=0, max_value=10**6))
+@settings(max_examples=6, deadline=None)
+def test_packed_matmul_every_prefix_budget_bitwise(seed):
+    """Every budget 1..n_planes at n_digits=8 — budgets 5..8 exercise the
+    residual bits of byte group 1, budget 9 the single-digit group 2."""
+    x, w = rand_mm(seed)
+    for k in range(1, 10):
+        got = ops.dslr_matmul_packed(x, w, n_digits=8, digit_budget=k)
+        want = ref.dslr_matmul_packed_ref(x, w, n_digits=8, digit_budget=k)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("recoding", ["greedy", "csd", "binary"])
+def test_packed_matmul_all_recodings_bitwise(recoding):
+    x, w = rand_mm(3)
+    got = ops.dslr_matmul_packed(x, w, n_digits=8, recoding=recoding)
+    want = ref.dslr_matmul_packed_ref(x, w, n_digits=8, recoding=recoding)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("bm,bn", [(8, 8), (16, 128), (128, 16)])
+def test_packed_matmul_block_shapes_bitwise(bm, bn):
+    x, w = rand_mm(5, M=10, K=9, N=12)
+    got = ops.dslr_matmul_packed(x, w, n_digits=8, block_m=bm, block_n=bn)
+    want = ref.dslr_matmul_packed_ref(x, w, n_digits=8)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_packed_matmul_skip_toggle_identical():
+    x, w = rand_mm(11)
+    a = ops.dslr_matmul_packed(x, w, skip_zero_planes=True)
+    b = ops.dslr_matmul_packed(x, w, skip_zero_planes=False)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# fused bias epilogue
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("per_sample", [False, True])
+def test_packed_matmul_fused_bias_bitwise(per_sample):
+    x, w = rand_mm(21)
+    b = jnp.asarray(np.random.default_rng(2).standard_normal(6), jnp.float32)
+    got = ops.dslr_matmul_packed(x, w, bias=b, per_sample=per_sample)
+    want = ref.dslr_matmul_packed_ref(x, w, bias=b, per_sample=per_sample)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_packed_matmul_bias_at_truncated_budget():
+    """Bias lands once, after the digit scan — not once per plane — so a
+    truncated budget must still add the full bias."""
+    x, w = rand_mm(22)
+    b = jnp.asarray(np.random.default_rng(3).standard_normal(6), jnp.float32)
+    got = ops.dslr_matmul_packed(x, w, digit_budget=3, bias=b)
+    no_bias = ops.dslr_matmul_packed(x, w, digit_budget=3)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(no_bias + b))
+
+
+# ---------------------------------------------------------------------------
+# per-sample (per-token-row) scale decoupling — the serving contract
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(min_value=0, max_value=10**6))
+@settings(max_examples=6, deadline=None)
+def test_per_sample_rows_bitwise_decoupled(seed):
+    """Row i's output depends on row i alone: identical when computed
+    alone, batched with an outlier, or batched with zero padding."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((3, 7)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((7, 6)).astype(np.float32))
+    full = ops.dslr_matmul_packed(x, w, per_sample=True)
+    alone = ops.dslr_matmul_packed(x[:1], w, per_sample=True)
+    np.testing.assert_array_equal(np.asarray(full[:1]), np.asarray(alone))
+    outlier = x.at[2].multiply(1e4)
+    np.testing.assert_array_equal(
+        np.asarray(ops.dslr_matmul_packed(outlier, w, per_sample=True)[:2]),
+        np.asarray(full[:2]),
+    )
+    padded = jnp.concatenate([x, jnp.zeros((2, 7), jnp.float32)])
+    np.testing.assert_array_equal(
+        np.asarray(ops.dslr_matmul_packed(padded, w, per_sample=True)[:3]),
+        np.asarray(full),
+    )
+
+
+def test_per_tensor_rows_do_couple():
+    """Negative control: with one shared amax the outlier coarsens every
+    batchmate's grid — the coupling per-sample scales exist to remove."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((3, 7)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((7, 6)).astype(np.float32))
+    full = ops.dslr_matmul_packed(x, w, per_sample=False)
+    outlier = x.at[2].multiply(1e4)
+    coupled = ops.dslr_matmul_packed(outlier, w, per_sample=False)
+    assert np.any(np.asarray(coupled[:2]) != np.asarray(full[:2]))
+
+
+def test_zero_rows_quantize_to_zero_output():
+    """A zero padding row yields exactly zero output under per-sample
+    scales (zero planes, zero scale product) — pad rows cost nothing
+    numerically."""
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.standard_normal((2, 7)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((7, 6)).astype(np.float32))
+    padded = jnp.concatenate([x, jnp.zeros((2, 7), jnp.float32)])
+    out = ops.dslr_matmul_packed(padded, w, per_sample=True)
+    np.testing.assert_array_equal(
+        np.asarray(out[2:]), np.zeros((2, 6), np.float32)
+    )

@@ -1,0 +1,176 @@
+"""DslrLmServer: the LM workload through the serving runtime.
+
+Smoke-size qwen2-0.5b, interpret mode on CPU:
+  * a request's logits through the server are bitwise equal to a direct
+    engine call — batching, bucket padding, and wave composition are
+    invisible (per-token-row scales),
+  * prefill + greedy KV-cache decode round-trips end to end, with the
+    generated continuation on the handle,
+  * anytime digit-prefix logits arrive per request with a calibrated bound
+    (zero when the prefix equals the tier's own budget),
+  * one compiled program per (bucket, policy): program identity is bounded
+    by buckets x tiers, not by request count,
+  * the async dispatcher path (deadline-based waves) produces the same
+    results as the synchronous flush path,
+  * adaptive SLO tiers and malformed prompts are rejected.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.lm import DslrLmServer, LM_DEFAULT_SLOS, compile_lm
+from repro.models import common as cm
+from repro.models import transformer as tf
+from repro.serve.slo import SloClass
+
+
+@pytest.fixture(scope="module")
+def engine():
+    smoke = configs.get_config("qwen2-0.5b").smoke()
+    params = cm.init_params(tf.model_spec(smoke), jax.random.PRNGKey(0))
+    return compile_lm(smoke, params)
+
+
+def prompts(engine, n, S=6, seed=10):
+    return [
+        jax.random.randint(
+            jax.random.PRNGKey(seed + i), (S,), 0, engine.cfg.vocab,
+            dtype=jnp.int32,
+        )
+        for i in range(n)
+    ]
+
+
+def test_sync_flush_bitwise_vs_direct_engine(engine):
+    srv = DslrLmServer(engine, buckets=(1, 2, 4))
+    toks = prompts(engine, 3)
+    handles = [srv.submit(t, slo="exact", gen=2) for t in toks]
+    srv.flush()
+    for t, h in zip(toks, handles):
+        full, caches = engine.prefill(t[None], max_len=t.shape[0] + 2)
+        np.testing.assert_array_equal(
+            np.asarray(h.result()), np.asarray(full[0, -1, :])
+        )
+        # greedy continuation matches stepping the engine by hand
+        want = []
+        last = full[:, -1, :]
+        for step in range(2):
+            nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
+            want.append(int(nxt[0]))
+            if step == 0:
+                lg, caches = engine.decode_step(
+                    nxt[:, None], caches, t.shape[0]
+                )
+                last = lg[:, 0, :]
+        assert h.generated == tuple(want)
+        assert h.tokens == h.generated
+    srv.close()
+
+
+def test_anytime_prefix_logits_with_bounds(engine):
+    srv = DslrLmServer(engine, buckets=(1, 2))
+    n_planes = engine.policy.n_planes
+    t = prompts(engine, 1)[0]
+    h = srv.submit(t, slo="exact", anytime=(2, 4, n_planes))
+    srv.flush()
+    parts = h.partials
+    assert [p.budget for p in parts] == [2, 4, n_planes]
+    # the k-plane partial is the prefix-budget engine's own answer
+    for p in parts[:2]:
+        ek = engine.with_budgets({s: p.budget for s in engine.site_names})
+        np.testing.assert_array_equal(
+            np.asarray(p.logits), np.asarray(ek(t[None])[0, -1, :])
+        )
+        assert p.bound > 0.0
+    # full-budget prefix == the tier's own program: bound exactly 0
+    assert parts[2].bound == 0.0
+    np.testing.assert_array_equal(
+        np.asarray(parts[2].logits), np.asarray(h.result())
+    )
+    assert parts[0].bound > parts[1].bound
+    srv.close()
+
+
+def test_one_program_per_bucket_policy(engine):
+    srv = DslrLmServer(engine, buckets=(1, 2, 4))
+    for t in prompts(engine, 4):
+        srv.submit(t, slo="exact")
+    for t in prompts(engine, 2, seed=40):
+        srv.submit(t, slo="fast")
+    srv.flush()
+    # 4 exact requests -> bucket 4; 2 fast -> bucket 2: exactly two programs
+    assert len(srv.program_keys) == 2
+    buckets = sorted(b for b, _ in srv.program_keys)
+    assert buckets == [2, 4]
+    # resubmitting the same shapes adds no new programs
+    for t in prompts(engine, 4, seed=80):
+        srv.submit(t, slo="exact")
+    srv.flush()
+    assert len(srv.program_keys) == 2
+    srv.close()
+
+
+def test_bucket_padding_bitwise_invisible(engine):
+    """3 requests pad to bucket 4 — every request's logits identical to a
+    solo run (per-token-row scales; the pad row quantizes to zero)."""
+    srv = DslrLmServer(engine, buckets=(4,))
+    toks = prompts(engine, 3, seed=60)
+    handles = [srv.submit(t, slo="exact") for t in toks]
+    srv.flush()
+    assert srv.stats["padded_rows"] == 1
+    for t, h in zip(toks, handles):
+        np.testing.assert_array_equal(
+            np.asarray(h.result()), np.asarray(engine(t[None])[0, -1, :])
+        )
+    srv.close()
+
+
+def test_async_dispatcher_matches_sync(engine):
+    toks = prompts(engine, 2, seed=90)
+    srv_sync = DslrLmServer(engine, buckets=(1, 2))
+    hs = [srv_sync.submit(t, slo="balanced", gen=1) for t in toks]
+    srv_sync.flush()
+    want = [(np.asarray(h.result()), h.generated) for h in hs]
+    srv_sync.close()
+
+    srv = DslrLmServer(engine, buckets=(1, 2))
+    with srv:
+        srv.warmup(prompt_len=toks[0].shape[0], gen=1, slos=("balanced",))
+        ha = [srv.submit(t, slo="balanced", gen=1) for t in toks]
+        got = [(np.asarray(h.result(timeout=60)), h.generated) for h in ha]
+    for (wl, wg), (gl, gg) in zip(want, got):
+        np.testing.assert_array_equal(wl, gl)
+        assert wg == gg
+
+
+def test_planned_tier_uses_budgeted_policy(engine):
+    srv = DslrLmServer(engine, buckets=(1,))
+    fast = srv.policy_for("fast")
+    exact = srv.policy_for("exact")
+    assert fast != exact
+    assert fast.layer_budgets  # planner-solved per-site budgets
+    assert set(n for n, _ in fast.layer_budgets) == set(engine.site_names)
+    assert srv.predicted_compute_ms("fast") < srv.predicted_compute_ms("exact")
+    srv.close()
+
+
+def test_rejects_adaptive_slo_and_bad_prompts(engine):
+    with pytest.raises(ValueError, match="adaptive"):
+        DslrLmServer(
+            engine,
+            slos=LM_DEFAULT_SLOS + (SloClass("auto", None, adaptive=True),),
+        )
+    srv = DslrLmServer(engine)
+    with pytest.raises(ValueError, match="1-D"):
+        srv.submit(jnp.zeros((2, 6), jnp.int32))
+    with pytest.raises(ValueError, match="gen"):
+        srv.submit(jnp.zeros((6,), jnp.int32), gen=-1)
+    with pytest.raises(ValueError, match="unknown SLO"):
+        srv.submit(jnp.zeros((6,), jnp.int32), slo="nope")
+    with pytest.raises(ValueError, match="anytime"):
+        srv.submit(jnp.zeros((6,), jnp.int32), anytime=(99,))
+    with pytest.raises(NotImplementedError):
+        srv.cascade_for("fast")
+    srv.close()

@@ -75,6 +75,22 @@ RULES = {
     "pipeline.alexnet.bound_used_fraction": ("max", 1.0, 1.0),
     "pipeline.vgg16.bound_used_fraction": ("max", 1.0, 1.0),
     "pipeline.resnet18.bound_used_fraction": ("max", 1.0, 1.0),
+    # digit-serial LM inference (BENCH_lm.json): full-budget token agreement
+    # vs the quantized jnp oracle is an invariant — the packed projection
+    # path and the scan-serial reference must stay bitwise-coupled (hard
+    # 1.0), likewise decode_step through the KV cache; the checkpoint-budget
+    # agreement curve must stay monotone non-decreasing (hard 1.0 on the
+    # indicator row); the planner's per-site allocation must keep dominating
+    # the best uniform budget at equal-or-fewer predicted cycles (hard 1.0
+    # on the error ratio).  Curve points are deterministic (fixed seeds) but
+    # baseline-compared loosely: a model/kernel change legitimately moves
+    # agreement at truncated budgets without breaking the invariants.
+    "lm.full_budget_agreement": ("min", 0.0, 1.0),
+    "lm.decode_bitwise": ("min", 0.0, 1.0),
+    "lm.agreement_monotone": ("min", 0.0, 1.0),
+    "lm.ce_monotone": ("min", 0.0, 1.0),
+    "lm.planned_vs_uniform_predicted": ("min", 0.25, 1.0),
+    "lm.curve_k9": ("min", 0.0, 1.0),
 }
 
 
