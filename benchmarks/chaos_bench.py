@@ -1,0 +1,256 @@
+"""Chaos benchmark: availability, goodput, and brown-out behavior under
+deterministic fault injection (``serve/faults.py``).
+
+The fault-tolerance layer's measurable claims:
+
+  * **availability under chaos** — with seeded 10% transient wave faults
+    plus one poisoned request, every non-poisoned request still completes
+    (retry -> bisect -> quarantine), and only the poisoned handle errors;
+  * **bitwise under retry** — the surviving requests' logits are bitwise
+    identical to a fault-free run (per-sample scales make retried and
+    re-batched waves invisible);
+  * **worker recovery** — a worker killed mid-dispatch restarts, requeues
+    its in-flight wave, and everything completes bitwise;
+  * **guardrails** — NaN-corrupted kernel outputs are caught, re-run, and
+    rerouted to the jnp oracle path, still bitwise clean;
+  * **brown-out** — a flooded tier serves degraded digit-prefix results
+    (``digits_spent`` + a sound error bound on every degraded handle)
+    instead of shedding, and sheds only past the floor prefix.
+
+Emitted rows (``chaos.*``; guarded by ``tools/check_bench.py`` against
+``benchmarks/baselines/``):
+
+  * ``chaos.availability_f10``       — completed / non-poisoned (hard 1.0),
+  * ``chaos.bitwise_under_retry``    — 1.0 iff survivors bitwise equal the
+                                       fault-free run (hard 1.0),
+  * ``chaos.quarantine_isolation``   — 1.0 iff exactly the poisoned handle
+                                       errored, with PoisonedRequestError
+                                       (hard 1.0),
+  * ``chaos.goodput_f10``            — completed req/s under the same chaos
+                                       (guarded loosely: wall clock),
+  * ``chaos.worker_recovery``        — 1.0 iff a killed worker restarted and
+                                       its requeued wave completed bitwise
+                                       (hard 1.0),
+  * ``chaos.guardrail_clean``        — 1.0 iff NaN-corrupted waves came back
+                                       finite and bitwise via the oracle
+                                       (hard 1.0),
+  * ``chaos.brownout_served_degraded`` — 1.0 iff the flooded tier served
+                                       degraded results with digits_spent
+                                       (hard 1.0),
+  * ``chaos.brownout_sound``         — 1.0 iff every degraded bound held:
+                                       measured |degraded - full| <= bound
+                                       (hard 1.0),
+  * ``chaos.brownout_p99``           — p99 end-to-end latency of admitted
+                                       requests during the brown-out flood
+                                       (unguarded; CPU wall clock is noise).
+
+``BENCH_FAST=1`` shrinks the model and request counts to smoke size.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models.engine import compile_cnn
+from repro.models.graph import CnnConfig, ExecutionPolicy, graph_spec
+from repro.serve import (
+    DslrServer,
+    FaultInjector,
+    PoisonedRequestError,
+    ServerOverloaded,
+)
+from .common import FAST, emit
+
+DEADLINE_MS = 120_000.0
+
+
+def _images(n, img, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        jnp.asarray(rng.standard_normal((img, img, 3)), jnp.float32)
+        for _ in range(n)
+    ]
+
+
+def _fault_free(engine, buckets, imgs, slo="balanced"):
+    server = DslrServer(engine, buckets=buckets)
+    handles = [server.submit(im, slo=slo) for im in imgs]
+    server.flush()
+    return [np.asarray(h.result()) for h in handles]
+
+
+def main() -> None:
+    if FAST:
+        width, img, n_chaos, n_flood = 0.02, 8, 6, 8
+        buckets = (1, 2)
+    else:
+        width, img, n_chaos, n_flood = 0.05, 16, 10, 12
+        buckets = (1, 2, 4)
+    cfg = CnnConfig(name="alexnet", width=width, num_classes=4)
+    params = cm.init_params(graph_spec(cfg), jax.random.PRNGKey(0))
+    engine = compile_cnn(cfg, params, ExecutionPolicy())
+
+    # -- availability / bitwise / quarantine under 10% transient + 1 poison --
+    imgs = _images(n_chaos, img, seed=1)
+    want = _fault_free(engine, buckets, imgs)
+    poisoned_id = n_chaos // 2
+    inj = FaultInjector(
+        seed=0, transient_rate=0.10, poison_ids=(poisoned_id,)
+    )
+    srv = DslrServer(
+        engine, buckets=buckets, fault_injector=inj, backoff_base_s=0.001
+    )
+    t0 = time.perf_counter()
+    with srv:
+        handles = [
+            srv.submit(im, slo="balanced", deadline_ms=DEADLINE_MS)
+            for im in imgs
+        ]
+        srv.drain(timeout=600)
+    chaos_s = time.perf_counter() - t0
+    completed, bitwise, poison_errors, other_errors = 0, True, 0, 0
+    for i, h in enumerate(handles):
+        try:
+            got = np.asarray(h.result(timeout=5))
+        except PoisonedRequestError:
+            poison_errors += 1 if i == poisoned_id else 0
+            other_errors += 0 if i == poisoned_id else 1
+            continue
+        except Exception:
+            other_errors += 1
+            continue
+        completed += 1
+        bitwise = bitwise and np.array_equal(got, want[i])
+    availability = completed / (n_chaos - 1)
+    isolation = 1.0 if (poison_errors == 1 and other_errors == 0) else 0.0
+    emit(
+        "chaos.availability_f10",
+        chaos_s * 1e6 / n_chaos,
+        f"value={availability:.4f} ({completed}/{n_chaos - 1} non-poisoned "
+        f"completed under 10% transient faults; retries={srv.retries} "
+        f"quarantined={srv.quarantined})",
+    )
+    emit(
+        "chaos.bitwise_under_retry",
+        chaos_s * 1e6,
+        f"value={1.0 if bitwise else 0.0} (1=every survivor bitwise equal "
+        f"the fault-free run across retried/bisected waves)",
+    )
+    emit(
+        "chaos.quarantine_isolation",
+        chaos_s * 1e6,
+        f"value={isolation} (1=exactly the poisoned request errored, "
+        f"with PoisonedRequestError; injector={inj.counters})",
+    )
+    emit(
+        "chaos.goodput_f10",
+        chaos_s * 1e6 / max(completed, 1),
+        f"value={completed / max(chaos_s, 1e-9):.3f} completed req/s "
+        f"under the same chaos schedule",
+    )
+
+    # -- worker death: restart + requeue, still bitwise ----------------------
+    imgs = _images(n_chaos, img, seed=2)
+    want = _fault_free(engine, buckets, imgs)
+    inj = FaultInjector(seed=0, die_at_dispatch=(1,))
+    srv = DslrServer(engine, buckets=buckets, fault_injector=inj)
+    with srv:
+        handles = [
+            srv.submit(im, slo="balanced", deadline_ms=DEADLINE_MS)
+            for im in imgs
+        ]
+        srv.drain(timeout=600)
+    ok = srv.restarts >= 1 and all(
+        np.array_equal(np.asarray(h.result(timeout=5)), want[i])
+        for i, h in enumerate(handles)
+    )
+    emit(
+        "chaos.worker_recovery",
+        float(srv.restarts),
+        f"value={1.0 if ok else 0.0} (1=worker killed mid-dispatch "
+        f"restarted, requeued wave completed bitwise; "
+        f"restarts={srv.restarts})",
+    )
+
+    # -- guardrails: NaN corruption -> re-run -> oracle, bitwise -------------
+    imgs = _images(n_chaos, img, seed=3)
+    want = _fault_free(engine, buckets, imgs)
+    inj = FaultInjector(seed=0, nan_rate=1.0)
+    srv = DslrServer(engine, buckets=buckets, fault_injector=inj)
+    with srv:
+        handles = [
+            srv.submit(im, slo="balanced", deadline_ms=DEADLINE_MS)
+            for im in imgs
+        ]
+        srv.drain(timeout=600)
+    clean = all(
+        np.isfinite(np.asarray(h.result(timeout=5))).all()
+        and np.array_equal(np.asarray(h.result(timeout=5)), want[i])
+        for i, h in enumerate(handles)
+    )
+    emit(
+        "chaos.guardrail_clean",
+        float(srv.stats["oracle_waves"]),
+        f"value={1.0 if clean else 0.0} (1=all NaN-corrupted waves finite "
+        f"and bitwise via oracle; guard_retries={srv.stats['guard_retries']} "
+        f"oracle_waves={srv.stats['oracle_waves']})",
+    )
+
+    # -- brown-out: flooded exact tier degrades with sound bounds ------------
+    img0 = _images(1, img, seed=4)[0]
+    full = _fault_free(engine, buckets, [img0], slo="exact")[0]
+    srv = DslrServer(engine, buckets=buckets, brownout_hold_s=0.0)
+    with srv:
+        srv.submit(img0, slo="exact").result(timeout=600)  # prime the EWMA
+        srv.drain(timeout=600)  # the EMA lands with the wave's retirement
+        srv.pause()
+        floor_ms = srv.predicted_compute_ms("exact")
+        handles, shed = [], 0
+        t0 = time.perf_counter()
+        for _ in range(n_flood):
+            try:
+                handles.append(
+                    srv.submit(img0, slo="exact", deadline_ms=floor_ms + 0.01)
+                )
+            except ServerOverloaded:
+                shed += 1
+        srv.resume()
+        srv.drain(timeout=600)
+    lat_ms = [(h.done_time - h.submit_time) * 1e3 for h in handles]
+    degraded = [h for h in handles if h.degraded]
+    served = 1.0 if degraded and all(
+        h.digits_spent is not None and h.digits_spent > 0 for h in degraded
+    ) else 0.0
+    sound = 1.0 if degraded and all(
+        float(np.max(np.abs(np.asarray(h.result(timeout=5)) - full)))
+        <= h.brownout_bound
+        for h in degraded
+    ) else 0.0
+    emit(
+        "chaos.brownout_served_degraded",
+        float(len(degraded)),
+        f"value={served} (1=flooded exact tier served {len(degraded)} "
+        f"degraded digit-prefix results at budgets "
+        f"{sorted({h.served_budget for h in degraded})}, shed={shed})",
+    )
+    emit(
+        "chaos.brownout_sound",
+        float(len(degraded)),
+        f"value={sound} (1=every degraded handle's measured "
+        f"|degraded - full| within its reported bound)",
+    )
+    p99 = float(np.percentile(lat_ms, 99)) if lat_ms else 0.0
+    emit(
+        "chaos.brownout_p99",
+        p99 * 1e3,
+        f"p99={p99:.1f}ms over {len(handles)} admitted requests during the "
+        f"brown-out flood (unguarded: CPU wall clock)",
+    )
+
+
+if __name__ == "__main__":
+    main()

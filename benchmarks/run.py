@@ -18,6 +18,7 @@ One module per paper table/figure:
   adaptive_bench     confidence-gated early exit: mean digits vs static plans
   pipeline_bench     cross-layer digit pipelining: traffic saved, cycle overlap
   lm_bench           digit-serial LM inference: token agreement/CE vs digits
+  chaos_bench        fault-tolerant serving: availability/bitwise under chaos
 
 ``--only`` takes exact module names (comma-separated for several); an
 unknown name is an error, not a silent no-op.  (It used to be a prefix
@@ -49,6 +50,7 @@ MODULES = [
     "adaptive_bench",
     "pipeline_bench",
     "lm_bench",
+    "chaos_bench",
 ]
 
 

@@ -23,6 +23,7 @@ from repro.core import dslr as core_dslr
 
 from . import dslr_conv2d as _dc
 from . import dslr_matmul as _dm
+from . import ref as _ref
 from . import msdf_quantize as _mq
 from . import online_sop as _os
 from . import tuning
@@ -221,10 +222,17 @@ def dslr_conv2d_planes_flat(
     block_n: int | None = None,
     skip_zero_planes: bool = True,
     interpret: bool | None = None,
+    use_ref: bool = False,
 ) -> jax.Array:
     """``dslr_conv2d_planes`` with pre-flattened stationary weights
     ``w_flat``: (K*K*Cin, Cout) — what a compiled engine calls so weight
-    flattening happens once at build time, not per forward pass."""
+    flattening happens once at build time, not per forward pass.
+
+    ``use_ref=True`` routes the accumulation through the pure-jnp oracle
+    scan (``ref.planes_scan_flat_ref``) instead of the Pallas kernel — the
+    serving guardrails' trusted fallback, bitwise-identical to a healthy
+    kernel (quantize / pack / im2col / scale folding are shared; only the
+    plane-accumulation launch differs)."""
     if interpret is None:
         interpret = _on_cpu()
     q = core_dslr.quantize_conv_planes(x, n_digits, recoding, per_sample=per_sample)
@@ -259,25 +267,41 @@ def dslr_conv2d_planes_flat(
         # Ho*Wo pixel block shares its sample's scale), multiplied into the
         # accumulator at the flush step before the bias lands
         row_scale = jnp.repeat(q.scale.astype(jnp.float32), Ho * Wo)
-    if block_m is None or block_n is None:
-        tuned_m, tuned_n = tuning.autotune_conv_blocks(
-            B * Ho * Wo, w_flat.shape[1], T, D, packed=packed, interpret=interpret
+    if use_ref:
+        out = _ref.planes_scan_flat_ref(
+            planes,
+            w_flat,
+            scales,
+            n_planes=D,
+            packed=packed,
+            bias=bias,
+            row_scale=row_scale,
+            apply_relu=relu,
         )
-        block_m = block_m if block_m is not None else tuned_m
-        block_n = block_n if block_n is not None else tuned_n
-    kernel = _dc.dslr_conv2d_planes_packed_mxu if packed else _dc.dslr_conv2d_planes_mxu
-    out = kernel(
-        planes,
-        w_flat,
-        scales,
-        bias=bias,
-        row_scale=row_scale,
-        block_m=block_m,
-        block_n=block_n,
-        skip_zero_planes=skip_zero_planes,
-        apply_relu=relu,
-        interpret=interpret,
-    )
+    else:
+        if block_m is None or block_n is None:
+            tuned_m, tuned_n = tuning.autotune_conv_blocks(
+                B * Ho * Wo, w_flat.shape[1], T, D, packed=packed, interpret=interpret
+            )
+            block_m = block_m if block_m is not None else tuned_m
+            block_n = block_n if block_n is not None else tuned_n
+        kernel = (
+            _dc.dslr_conv2d_planes_packed_mxu
+            if packed
+            else _dc.dslr_conv2d_planes_mxu
+        )
+        out = kernel(
+            planes,
+            w_flat,
+            scales,
+            bias=bias,
+            row_scale=row_scale,
+            block_m=block_m,
+            block_n=block_n,
+            skip_zero_planes=skip_zero_planes,
+            apply_relu=relu,
+            interpret=interpret,
+        )
     out = out.reshape(B, Ho, Wo, w_flat.shape[1])
     if not fused:
         s = q.scale.reshape(-1, 1, 1, 1) if per_sample else q.scale

@@ -78,6 +78,48 @@ def dslr_conv2d_planes_ref(
     return acc.reshape(B, Ho, Wo, w_flat.shape[1])
 
 
+def planes_scan_flat_ref(
+    planes: jax.Array,
+    w_flat: jax.Array,
+    digit_scales: jax.Array,
+    n_planes: int,
+    packed: bool,
+    bias: jax.Array | None = None,
+    row_scale: jax.Array | None = None,
+    apply_relu: bool = False,
+) -> jax.Array:
+    """Kernel-shaped jnp oracle over pre-built patch planes: the exact
+    computation ``ops.dslr_conv2d_planes_flat`` hands the Pallas kernel —
+    ``planes`` (D, M, T) signed digits or (G, M, T) packed bytes, ``w_flat``
+    (T, N) stationary weights, the (possibly scale-folded) ``digit_scales``
+    and optional per-row ``row_scale``/``bias``/ReLU of the fused epilogue —
+    accumulated in the same MSDF order as :func:`dslr_conv2d_planes_ref`'s
+    scan.  The serving guardrails' trusted fallback path
+    (``ExecutionPolicy.use_ref``): bitwise-coupled to the kernel, so a
+    healthy kernel and this oracle agree exactly.  Returns the (M, N)
+    accumulator (the wrapper reshapes and, when unfused, scales)."""
+    if packed:
+        planes = dig.unpack_planes(planes, n_planes)
+    w32 = w_flat.astype(jnp.float32)
+    rs = None if row_scale is None else row_scale.astype(jnp.float32)[:, None]
+
+    def body(acc, jp):
+        s, plane = jp
+        if rs is not None:
+            s = s * rs
+        return acc + s * (plane.astype(jnp.float32) @ w32), None
+
+    zeros = jnp.zeros((planes.shape[1], w32.shape[1]), jnp.float32)
+    acc, _ = jax.lax.scan(
+        body, zeros, (digit_scales.astype(jnp.float32), planes)
+    )
+    if bias is not None:
+        acc = acc + bias.astype(jnp.float32)
+    if apply_relu:
+        acc = jnp.maximum(acc, 0.0)
+    return acc
+
+
 def dslr_matmul_planes_ref(
     planes: jax.Array, w: jax.Array, digit_scales: jax.Array
 ) -> jax.Array:

@@ -25,6 +25,16 @@ target (``--plan-latency`` / ``--plan-error``) install a single ``custom``
 tier instead of the SLO classes.  All (bucket, policy) programs are warmed
 up before the timed waves, so the latency percentiles exclude jit
 trace/compile cost.
+
+Fault tolerance: ``--chaos "seed=0,transient=0.1,nan=0.05,poison=3,die_at=2"``
+hooks a deterministic ``FaultInjector`` at the dispatch boundary (transient
+wave failures retry/bisect/quarantine, NaN outputs reroute through the
+guardrails to the jnp oracle, worker deaths restart and requeue) and the run
+reports retries / quarantined / restarts / guardrail counters.  Brown-out
+degradation is on by default — overload steps tiers down a digit-prefix
+ladder instead of shedding (``--no-brownout`` restores plain shedding,
+``--brownout-floor`` sets the smallest prefix served) — and degraded
+requests are reported with their ``digits_spent`` and sound error bound.
 """
 from __future__ import annotations
 
@@ -38,7 +48,7 @@ import jax.numpy as jnp
 from repro.models import common as cm
 from repro.models.engine import compile_cnn
 from repro.models.graph import CnnConfig, ExecutionPolicy, build_graph, graph_spec
-from repro.serve import DslrServer, ServerOverloaded
+from repro.serve import DslrServer, ServerOverloaded, injector_from_spec
 
 
 def parse_args(argv=None) -> argparse.Namespace:
@@ -73,6 +83,14 @@ def parse_args(argv=None) -> argparse.Namespace:
                     choices=("auto", "bound", "measured"),
                     help="planner frontier error model (default: analytic "
                          "bound — 'measured' probes every layer first)")
+    ap.add_argument("--chaos", default="",
+                    help="deterministic fault injection spec, e.g. "
+                         "'seed=0,transient=0.1,nan=0.05,poison=3,die_at=2'")
+    ap.add_argument("--no-brownout", action="store_true",
+                    help="shed under overload instead of degrading tiers "
+                         "down the digit-prefix ladder")
+    ap.add_argument("--brownout-floor", type=int, default=2,
+                    help="smallest digit-prefix budget brown-out may serve")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     # validate flag combinations BEFORE any engine is compiled: a conflicting
@@ -128,11 +146,15 @@ def main() -> None:
         policies["custom"] = policy
 
     buckets = tuple(int(b) for b in args.buckets.split(","))
+    injector = injector_from_spec(args.chaos)
     server = DslrServer(
         engine,
         buckets=buckets,
         per_sample_scales=not args.per_tensor_scales,
         policies=policies,
+        fault_injector=injector,
+        brownout=not args.no_brownout,
+        brownout_floor=args.brownout_floor,
     )
     build_ms = (time.perf_counter() - t0) * 1e3
 
@@ -185,6 +207,8 @@ def main() -> None:
         server.drain()
         total_s = time.perf_counter() - t0
 
+    completed = [h for h in handles if h.done() and h._error is None]
+    failed = [h for h in handles if h._error is not None]
     lat_ms = np.array([(h.done_time - h.submit_time) * 1e3 for h in handles])
     n_dev = len(jax.devices())
     print(
@@ -197,6 +221,21 @@ def main() -> None:
     )
     print(f"[serve_cnn] stats: {server.stats} programs={len(server.program_keys)} "
           f"waves={len(server.wave_log)}")
+    if injector is not None or failed or server.retries:
+        print(f"[serve_cnn] fault tolerance: completed {len(completed)}/"
+              f"{len(handles)}, failed {len(failed)}, retries {server.retries}, "
+              f"quarantined {server.quarantined}, worker restarts "
+              f"{server.restarts}, guard retries {server.stats['guard_retries']}, "
+              f"oracle waves {server.stats['oracle_waves']}"
+              + (f", injected {injector.counters}" if injector is not None else ""))
+    degraded = [h for h in completed if h.degraded]
+    if degraded:
+        spent = np.array([h.digits_spent for h in degraded])
+        bounds = np.array([h.brownout_bound for h in degraded])
+        print(f"[serve_cnn] brown-out: {len(degraded)} degraded request(s), "
+              f"served budgets {sorted({h.served_budget for h in degraded})}, "
+              f"digit planes spent mean {spent.mean():.1f}, "
+              f"max bound {bounds.max():.3e}")
     for tier in tiers:
         pol = server.policy_for(tier)
         if pol.layer_budgets:
@@ -206,7 +245,7 @@ def main() -> None:
         print(f"[serve_cnn] tier {tier!r}: budgets={shown} "
               f"per_sample_scales={pol.per_sample_scales}")
     if anytime:
-        h = next((h for h in handles if h.partials), None)
+        h = next((h for h in completed if h.partials), None)
         if h is not None:
             parts = ", ".join(
                 f"k={p.budget}: top1={p.top1} bound={p.bound:.3e}"
@@ -214,7 +253,7 @@ def main() -> None:
             )
             print(f"[serve_cnn] anytime partials of first {h.slo!r} request: "
                   f"{parts}; final top1={h.top1}")
-    decided = [h for h in handles if h.digits_spent is not None]
+    decided = [h for h in handles if h.decided_at_stage is not None]
     if decided:
         spent = np.array([h.digits_spent for h in decided])
         stages = sorted({h.decided_at_stage for h in decided})

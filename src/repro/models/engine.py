@@ -111,6 +111,7 @@ def _conv_node(
             block_n=policy.block_n,
             skip_zero_planes=policy.skip_zero_planes,
             interpret=policy.interpret,
+            use_ref=policy.use_ref,
         )
         if fuse:
             return out

@@ -190,6 +190,13 @@ class ExecutionPolicy:
     # policy rather than a per-call knob so every execution detail that
     # shapes a compiled program lives on one hashable identity
     serve_pad_to: Optional[int] = None
+    # route the conv digit-plane launches through the pure-jnp oracle scan
+    # (kernels/ref.py) instead of the Pallas kernel — the serving
+    # guardrails' trusted fallback when a kernel wave fails its output
+    # checks twice.  Bitwise-coupled to the kernel by construction (same
+    # MSDF accumulation order and scale folding), so a healthy kernel and
+    # the oracle agree exactly.
+    use_ref: bool = False
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -235,6 +242,11 @@ class ExecutionPolicy:
         if self.serve_pad_to is not None and self.serve_pad_to < 1:
             raise ValueError(
                 f"serve_pad_to={self.serve_pad_to} must be >= 1 (or None)"
+            )
+        if self.use_ref and self.mode != "dslr_planes":
+            raise ValueError(
+                f"use_ref=True only applies to mode='dslr_planes', "
+                f"got {self.mode!r}"
             )
 
     @property

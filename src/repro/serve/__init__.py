@@ -9,9 +9,24 @@ the MSDF anytime channel (k-digit partial results with sound error
 bounds), and confidence-gated adaptive tiers (``SloClass(adaptive=True)``
 -> a repro.adaptive escalation cascade: requests exit at the first digit
 prefix whose top-1 margin provably dominates the remaining-digit bound).
+
+The stack is fault-tolerant: failed waves retry with backoff, bisect, and
+quarantine poisoned requests (bitwise-identical re-batching via per-sample
+scales); a dead worker restarts and requeues its wave; output guardrails
+reroute suspect waves to the jnp oracle path; and overload brown-out
+degrades tiers down a digit-prefix ladder (sound bounds + ``digits_spent``
+on every degraded handle) instead of shedding.  ``FaultInjector``
+(serve/faults.py) makes the chaos deterministic and reproducible.
 See serve/server.py for the lifecycle and
-docs/ARCHITECTURE.md#the-serving-runtime for the diagram.
+docs/ARCHITECTURE.md#failure-semantics for the state machines.
 """
 from .dispatcher import Dispatcher, ServerOverloaded  # noqa: F401
+from .faults import (  # noqa: F401
+    FaultInjector,
+    PoisonedRequestError,
+    TransientWaveError,
+    WorkerKilled,
+    injector_from_spec,
+)
 from .server import AnytimeResult, DslrServer, ResultHandle  # noqa: F401
 from .slo import DEFAULT_SLOS, SloClass, resolve_policy, slo_table  # noqa: F401

@@ -1,0 +1,212 @@
+"""Deterministic fault injection for chaos-testing the serving stack.
+
+Production serving dies in ways unit tests never exercise: a transient
+runtime failure takes out a whole wave, one malformed request poisons every
+batchmate, an accelerator returns NaN, a worker thread dies mid-wave.  The
+:class:`FaultInjector` manufactures exactly those failures *on demand and
+reproducibly* at the dispatcher's dispatch boundary, so the retry /
+bisection / quarantine / supervision machinery (serve/dispatcher.py,
+serve/server.py) can be asserted against a seeded chaos schedule instead of
+hoped about.
+
+Determinism is the load-bearing property: every decision ("does this
+dispatch fail?", "is this wave's output corrupted?") is a pure function of
+``(seed, site, key)`` where ``key`` includes the request ids and the attempt
+number.  The roll stream is keyed by :func:`zlib.crc32` of the formatted
+key — NOT Python's ``hash()``, which ``PYTHONHASHSEED`` randomizes per
+process — so the same seed produces the same chaos schedule across runs,
+processes, and CI machines.  Keying by attempt means a retry of the same
+wave re-rolls (a *transient* fault clears on retry); keying by request id
+means a poisoned request fails every wave it rides, which is what forces
+the dispatcher down the bisection path.
+
+>>> a = FaultInjector(seed=7, transient_rate=0.5)
+>>> b = FaultInjector(seed=7, transient_rate=0.5)
+>>> a.roll("transient", (1, 2), 0) == b.roll("transient", (1, 2), 0)
+True
+>>> a.roll("transient", (1, 2), 0) != a.roll("transient", (1, 2), 1)
+True
+"""
+from __future__ import annotations
+
+import threading
+import time
+import zlib
+from typing import Dict, Iterable, Optional, Sequence, Tuple
+
+
+class TransientWaveError(RuntimeError):
+    """An injected wave-scoped transient failure (the moral equivalent of a
+    device OOM, a preempted host, a flaky RPC).  Clears on retry: the
+    injector re-rolls per dispatch attempt."""
+
+
+class PoisonedRequestError(RuntimeError):
+    """An injected deterministic per-request failure: any wave containing a
+    poisoned request id fails, every time.  Only bisection can isolate it."""
+
+
+class WorkerKilled(BaseException):
+    """An injected worker-thread death.  Deliberately NOT an ``Exception``:
+    the wave retry machinery must not catch it — it models the thread dying
+    (stack unwind past the wave loop), exercising the supervisor's
+    restart-and-requeue path instead of the retry path."""
+
+
+class FaultInjector:
+    """Seeded, deterministic fault source hooked at the dispatch boundary.
+
+    ``transient_rate``   P(dispatch attempt raises TransientWaveError)
+    ``slow_rate``        P(dispatch attempt sleeps ``slow_ms`` first)
+    ``nan_rate``         P(a wave's output tensor gets a NaN written into it)
+    ``poison_ids``       request ids whose waves always fail (bisection bait)
+    ``die_at_dispatch``  1-based dispatch-call ordinals at which the worker
+                         thread is killed (each fires once)
+
+    All rates are evaluated via :meth:`roll` — crc32-keyed uniforms in
+    ``[0, 1)``, reproducible across processes.  ``counters`` tallies every
+    injected fault by kind for test/bench assertions.
+    """
+
+    def __init__(
+        self,
+        seed: int = 0,
+        transient_rate: float = 0.0,
+        slow_rate: float = 0.0,
+        slow_ms: float = 2.0,
+        nan_rate: float = 0.0,
+        poison_ids: Iterable[int] = (),
+        die_at_dispatch: Iterable[int] = (),
+    ):
+        for name, rate in (
+            ("transient_rate", transient_rate),
+            ("slow_rate", slow_rate),
+            ("nan_rate", nan_rate),
+        ):
+            if not 0.0 <= rate <= 1.0:
+                raise ValueError(f"{name}={rate} outside [0, 1]")
+        self.seed = int(seed)
+        self.transient_rate = float(transient_rate)
+        self.slow_rate = float(slow_rate)
+        self.slow_ms = float(slow_ms)
+        self.nan_rate = float(nan_rate)
+        self._lock = threading.Lock()
+        self._poison = set(int(i) for i in poison_ids)
+        self._die_at = set(int(n) for n in die_at_dispatch)
+        self._died_at: set = set()
+        self._dispatch_calls = 0
+        self.counters: Dict[str, int] = {
+            "transient": 0,
+            "poisoned": 0,
+            "slow": 0,
+            "nan": 0,
+            "worker_killed": 0,
+        }
+
+    # -- deterministic randomness -------------------------------------------
+
+    def roll(self, site: str, *key: object) -> float:
+        """A uniform in ``[0, 1)`` that is a pure function of
+        ``(seed, site, key)`` — the injector's only source of randomness."""
+        h = zlib.crc32(f"{self.seed}:{site}:{key!r}".encode())
+        return (h & 0xFFFFFFFF) / 2.0**32
+
+    # -- configuration -------------------------------------------------------
+
+    def poison(self, request_id: int) -> None:
+        """Mark a request id as poisoned from now on."""
+        with self._lock:
+            self._poison.add(int(request_id))
+
+    def is_poisoned(self, request_id: int) -> bool:
+        with self._lock:
+            return int(request_id) in self._poison
+
+    @property
+    def dispatch_calls(self) -> int:
+        with self._lock:
+            return self._dispatch_calls
+
+    def _count(self, kind: str) -> None:
+        with self._lock:
+            self.counters[kind] += 1
+
+    # -- the dispatch-boundary hook -----------------------------------------
+
+    def at_dispatch(self, request_ids: Sequence[int], attempt: int) -> None:
+        """Called by the dispatcher immediately before executing a wave.
+        May sleep (slow wave), raise :class:`TransientWaveError` /
+        :class:`PoisonedRequestError`, or raise :class:`WorkerKilled` (which
+        unwinds the worker thread).  ``attempt`` is the wave's dispatch
+        attempt counter, so retries re-roll transients but poison persists."""
+        with self._lock:
+            self._dispatch_calls += 1
+            ordinal = self._dispatch_calls
+            die = ordinal in self._die_at and ordinal not in self._died_at
+            if die:
+                self._died_at.add(ordinal)
+            poisoned = sorted(i for i in request_ids if int(i) in self._poison)
+        if die:
+            self._count("worker_killed")
+            raise WorkerKilled(f"injected worker death at dispatch #{ordinal}")
+        ids = tuple(int(i) for i in request_ids)
+        if self.slow_rate and self.roll("slow", ids, attempt) < self.slow_rate:
+            self._count("slow")
+            time.sleep(self.slow_ms * 1e-3)
+        if poisoned:
+            self._count("poisoned")
+            raise PoisonedRequestError(
+                f"injected poisoned request(s) {poisoned} in wave {list(ids)}"
+            )
+        if self.transient_rate and (
+            self.roll("transient", ids, attempt) < self.transient_rate
+        ):
+            self._count("transient")
+            raise TransientWaveError(
+                f"injected transient fault (wave {list(ids)}, attempt {attempt})"
+            )
+
+    # -- output corruption ---------------------------------------------------
+
+    def corrupt_logits(self, logits, key: Tuple[object, ...]):
+        """Maybe write a NaN into a wave's output tensor (keyed by the wave's
+        ids *and* the guardrail attempt, so a re-run of a corrupted wave
+        rolls fresh — an injected NaN is transient, unlike a genuine one).
+        Returns the (possibly corrupted) array."""
+        if self.nan_rate and self.roll("nan", key) < self.nan_rate:
+            self._count("nan")
+            import jax.numpy as jnp
+
+            flat = logits.reshape(-1)
+            flat = flat.at[0].set(jnp.nan)
+            return flat.reshape(logits.shape)
+        return logits
+
+
+def injector_from_spec(spec: Optional[str]) -> Optional[FaultInjector]:
+    """Build an injector from a compact CLI spec like
+    ``"seed=0,transient=0.1,nan=0.05,poison=3,die_at=2"`` (None/empty ->
+    no injection).  ``poison`` and ``die_at`` accept ``+``-separated lists."""
+    if not spec:
+        return None
+    kw: Dict[str, object] = {}
+    for part in spec.split(","):
+        k, _, v = part.partition("=")
+        k = k.strip()
+        if k == "seed":
+            kw["seed"] = int(v)
+        elif k in ("transient", "transient_rate"):
+            kw["transient_rate"] = float(v)
+        elif k in ("slow", "slow_rate"):
+            kw["slow_rate"] = float(v)
+        elif k == "slow_ms":
+            kw["slow_ms"] = float(v)
+        elif k in ("nan", "nan_rate"):
+            kw["nan_rate"] = float(v)
+        elif k == "poison":
+            kw["poison_ids"] = [int(x) for x in v.split("+") if x]
+        elif k == "die_at":
+            kw["die_at_dispatch"] = [int(x) for x in v.split("+") if x]
+        else:
+            raise ValueError(f"unknown chaos spec key {k!r} in {spec!r}")
+    return FaultInjector(**kw)

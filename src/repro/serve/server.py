@@ -33,6 +33,20 @@ per-tensor activation scale couples whoever lands in the same batch.
     bounded-error answer, so the server runs the cheap prefix-budget
     programs and reports, per partial, the top-1 class and a sound error
     bound versus the request's full-budget logits.
+  * **Brown-out degradation**: when the dispatcher's EWMA dwell projection
+    blows a tier's budget, the tier steps down a ladder of digit-prefix
+    policies (halving budgets toward a floor) instead of shedding — the
+    same MSDF anytime prefixes, served as the primary answer with
+    ``digits_spent`` and a sound ``|degraded - full|`` bound on every
+    degraded handle.  Recovery is hysteretic (a hold window plus a
+    recovery fraction below the budget); only past the floor prefix does
+    the tier shed, with a structured ``retry_after_s``.
+  * **Output guardrails**: every wave's logits are checked finite and its
+    anytime partials checked against their sound bounds; a suspect wave
+    re-runs once (clears injected/transient corruption) and then falls
+    back to the pure-jnp oracle path (``ExecutionPolicy.use_ref``), which
+    is bitwise-coupled to the kernel — so even a guardrail-rerouted wave
+    returns bit-identical logits.
 
 Lifecycle: ``with DslrServer(engine) as server`` starts the dispatcher and
 drains + joins it on exit; explicitly, ``start()`` / ``drain()`` /
@@ -64,6 +78,7 @@ from repro.models.engine import DslrEngine, conv_layers_for_graph
 from repro.models.graph import ExecutionPolicy
 
 from .dispatcher import Dispatcher, QueuedRequest, ServerOverloaded
+from .faults import FaultInjector
 from .slo import DEFAULT_SLOS, SloClass, resolve_policy, slo_table
 
 
@@ -109,6 +124,15 @@ class ResultHandle:
         # decision rule accepted the answer (last stage = ran full budget)
         self.digits_spent: Optional[int] = None
         self.decided_at_stage: Optional[int] = None
+        # brown-out degradation (non-adaptive tiers under overload), set at
+        # completion: ``degraded`` marks a request served a digit-prefix of
+        # its tier, ``served_budget`` the prefix plane count k, and
+        # ``brownout_bound`` a sound bound on max|degraded - tier-full|
+        # logits (the anytime tail bound at k); ``digits_spent`` is then the
+        # planes actually executed, summed over conv layers
+        self.degraded = False
+        self.served_budget: Optional[int] = None
+        self.brownout_bound: Optional[float] = None
 
     def done(self) -> bool:
         """True once the request completed, errored, or was cancelled.
@@ -193,6 +217,16 @@ class DslrServer:
     hard backstop); ``dispatch_margin_ms`` is how far before a dwell
     deadline a wave launches; ``default_dwell_ms`` is the dwell budget of
     explicit ``policies=`` tiers (named SLO classes carry their own).
+
+    Fault tolerance: ``max_retries``/``backoff_base_s``/``backoff_cap_s``
+    parameterize the dispatcher's wave retry -> bisect -> quarantine ladder;
+    ``fault_injector`` (serve/faults.py) hooks seeded chaos at the dispatch
+    boundary.  ``brownout=True`` (default) converts EWMA-projected overload
+    on non-adaptive tiers into digit-prefix degradation down to
+    ``brownout_floor`` planes, shedding only past the floor; recovery needs
+    the projection under ``brownout_recover_fraction`` of the budget for at
+    least ``brownout_hold_s`` (hysteresis, so the tier does not flap).
+    ``brownout=False`` restores plain shedding.
     """
 
     def __init__(
@@ -205,6 +239,14 @@ class DslrServer:
         max_queue: Optional[int] = 256,
         dispatch_margin_ms: float = 1.0,
         default_dwell_ms: float = 200.0,
+        fault_injector: Optional[FaultInjector] = None,
+        max_retries: int = 2,
+        backoff_base_s: float = 0.005,
+        backoff_cap_s: float = 0.1,
+        brownout: bool = True,
+        brownout_floor: int = 2,
+        brownout_recover_fraction: float = 0.5,
+        brownout_hold_s: float = 0.05,
     ):
         if engine.policy.mode != "dslr_planes":
             raise ValueError(
@@ -237,11 +279,28 @@ class DslrServer:
         self._predicted_ms: Dict[str, float] = {}
         self._cascades: Dict[str, Cascade] = {}  # adaptive tier -> ladder
         self._calibrations: Dict[str, CascadeCalibration] = {}
+        self._fault_injector = fault_injector
+        if not 0.0 < brownout_recover_fraction <= 1.0:
+            raise ValueError(
+                f"brownout_recover_fraction={brownout_recover_fraction} "
+                f"outside (0, 1]"
+            )
+        self._brownout = bool(brownout)
+        self._brownout_floor = int(brownout_floor)
+        self._brownout_recover = float(brownout_recover_fraction)
+        self._brownout_hold_s = float(brownout_hold_s)
+        # per-tier hysteretic degradation state: slo -> [ladder level,
+        # monotonic time of the last level change]
+        self._brownout_state: Dict[str, List[float]] = {}
         self._dispatcher = Dispatcher(
             dispatch=self._dispatch_wave,
             max_wave=buckets[-1],
             max_queue=max_queue,
             margin_s=float(dispatch_margin_ms) * 1e-3,
+            max_retries=max_retries,
+            backoff_base_s=backoff_base_s,
+            backoff_cap_s=backoff_cap_s,
+            fault_injector=fault_injector,
         )
         # every (bucket, policy) this server has dispatched — the program
         # cache keyspace (jax's jit cache holds the programs themselves)
@@ -254,6 +313,10 @@ class DslrServer:
             "cancelled": 0,
             "early_exits": 0,
             "escalated": 0,
+            "degraded": 0,  # requests served a brown-out digit prefix
+            "brownout_steps": 0,  # tier level escalations under pressure
+            "guard_retries": 0,  # waves re-run by the output guardrails
+            "oracle_waves": 0,  # waves rerouted to the jnp oracle path
         }
         self.wave_log: List[Tuple[int, ...]] = []  # request ids per wave
         self.completion_order: List[int] = []  # request ids as results land
@@ -304,6 +367,21 @@ class DslrServer:
     def service_estimate_s(self) -> Optional[float]:
         """The admission controller's EWMA of per-request service time."""
         return self._dispatcher.service_estimate_s
+
+    @property
+    def retries(self) -> int:
+        """Failed wave dispatch attempts that were retried (or bisected)."""
+        return self._dispatcher.retries
+
+    @property
+    def quarantined(self) -> int:
+        """Requests isolated by wave bisection (only their handles errored)."""
+        return self._dispatcher.quarantined
+
+    @property
+    def restarts(self) -> int:
+        """Dispatcher worker-thread resurrections after a mid-wave death."""
+        return self._dispatcher.restarts
 
     # -- policy / engine resolution -----------------------------------------
 
@@ -424,6 +502,81 @@ class DslrServer:
                 self._predicted_ms[slo] = cycles / cyc.FREQ_HZ * 1e3
             return self._predicted_ms[slo]
 
+    # -- brown-out controller ------------------------------------------------
+
+    def brownout_ladder(self, slo: str) -> Tuple[int, ...]:
+        """The descending digit-prefix budgets a tier steps through under
+        overload: the tier's maximum effective plane budget halved repeatedly
+        down to the server's ``brownout_floor``.  Empty when the tier cannot
+        degrade (its budget is already at/below the floor) — such a tier
+        sheds immediately under overload, exactly like ``brownout=False``."""
+        policy = self.policy_for(slo)
+        if policy.layer_budgets:
+            kmax = max(int(k) for _, k in policy.layer_budgets)
+        elif policy.digit_budget is not None:
+            kmax = int(policy.digit_budget)
+        else:
+            kmax = policy.n_planes
+        cls = self._slo_class(slo)
+        floor = (
+            self._brownout_floor
+            if cls is None or cls.brownout_floor is None
+            else cls.brownout_floor
+        )
+        floor = max(1, min(floor, kmax))
+        ladder: List[int] = []
+        k = kmax
+        while k > floor:
+            k = max(floor, k // 2)
+            ladder.append(k)
+        return tuple(ladder)
+
+    def brownout_level(self, slo: str) -> int:
+        """The tier's current position on its brown-out ladder (0 = serving
+        full budgets)."""
+        with self._lock:
+            st = self._brownout_state.get(slo)
+            return 0 if st is None else int(st[0])
+
+    def _brownout_admit(self, slo: str, budget_s: float) -> Optional[int]:
+        """The brown-out admission decision for one non-adaptive request:
+        returns the digit-prefix budget to serve it at (None = the tier's
+        full policy), stepping the tier's ladder level up when the EWMA
+        dwell projection blows ``budget_s`` and back down — hysteretically:
+        only after the projection holds below ``brownout_recover_fraction x
+        budget`` for ``brownout_hold_s`` — when pressure clears.  Past the
+        floor prefix the request is shed with a structured
+        ``retry_after_s``, the only shedding a brown-out tier does."""
+        proj = self._dispatcher.projected_dwell_s()
+        ladder = self.brownout_ladder(slo)
+        now = time.monotonic()
+        with self._lock:
+            st = self._brownout_state.setdefault(slo, [0, -float("inf")])
+            level = int(st[0])
+            overloaded = proj is not None and proj > budget_s
+            if overloaded:
+                held = now - st[1] >= self._brownout_hold_s
+                if level < len(ladder) and (level == 0 or held):
+                    level += 1
+                    st[0], st[1] = level, now
+                    self.stats["brownout_steps"] += 1
+                elif level >= len(ladder):
+                    est = self._dispatcher.service_estimate_s
+                    raise ServerOverloaded(
+                        f"tier {slo!r} is past its brown-out floor "
+                        f"(level {level}/{len(ladder)}, ladder {ladder}): "
+                        f"projected dwell {proj * 1e3:.1f} ms still exceeds "
+                        f"the {budget_s * 1e3:.1f} ms budget at the floor "
+                        f"prefix; shed",
+                        retry_after_s=max(proj - budget_s, est or proj),
+                    )
+            elif level > 0:
+                recovered = proj is None or proj <= self._brownout_recover * budget_s
+                if recovered and now - st[1] >= self._brownout_hold_s:
+                    level -= 1
+                    st[0], st[1] = level, now
+            return ladder[level - 1] if level > 0 else None
+
     # -- submission ----------------------------------------------------------
 
     def submit(
@@ -477,6 +630,23 @@ class DslrServer:
             dwell_ms = float(deadline_ms)
         else:
             dwell_ms = self.dwell_budget_ms(slo)
+        # brown-out admission: under projected overload a non-adaptive tier
+        # degrades to a digit-prefix policy instead of shedding (shedding
+        # only past the floor prefix); the dispatcher then skips its own
+        # projection check (preadmitted) — the controller already decided
+        brownout_k: Optional[int] = None
+        if self.running and self._brownout and not is_adaptive:
+            try:
+                brownout_k = self._brownout_admit(slo, dwell_ms * 1e-3)
+            except ServerOverloaded:
+                with self._lock:
+                    self.stats["shed"] += 1
+                raise
+        wave_policy = policy
+        if brownout_k is not None:
+            wave_policy = self._prefix_policy(policy, brownout_k)
+            if wave_policy == policy:  # prefix changes nothing: not degraded
+                brownout_k = None
         with self._lock:
             request_id = self._next_id
             self._next_id += 1
@@ -487,7 +657,7 @@ class DslrServer:
         group_key = (
             ("adaptive", slo, 0, tuple(image.shape))
             if is_adaptive
-            else (policy, tuple(image.shape))
+            else (wave_policy, tuple(image.shape))
         )
         req = QueuedRequest(
             request_id=request_id,
@@ -498,10 +668,13 @@ class DslrServer:
             group_key=group_key,
             submit_t=handle.submit_time,
             deadline_t=handle.submit_time + dwell_ms * 1e-3,
+            brownout_k=brownout_k,
         )
         if self.running:
             try:
-                self._dispatcher.submit(req)
+                self._dispatcher.submit(
+                    req, preadmitted=self._brownout and not is_adaptive
+                )
             except ServerOverloaded:
                 with self._lock:
                     self.stats["shed"] += 1
@@ -573,34 +746,55 @@ class DslrServer:
             self._dispatch_adaptive_wave(chunk)
             return
         policy = chunk[0].group_key[0]
-        engine = self._engine_for(policy)
         bucket = self._bucket_for(len(chunk))
         xb = jnp.stack([r.image for r in chunk])
         if bucket > len(chunk):
             xb = jnp.pad(
                 xb, ((0, bucket - len(chunk)), (0, 0), (0, 0), (0, 0))
             )
-        logits = engine(xb)
-
-        # anytime channel: one prefix program per distinct requested budget
-        # in this wave (per-sample scales make the grouping invisible to
-        # each request's values)
+        # anytime channel budgets: one prefix program per distinct requested
+        # budget in this wave (per-sample scales make the grouping invisible
+        # to each request's values)
         ks = sorted({k for r in chunk for k in r.anytime})
-        partials_by_k: Dict[int, jax.Array] = {}
-        bounds_by_k: Dict[int, float] = {}
-        if ks:
-            bounds_by_k = self._anytime_bounds(engine, xb, ks)
-            for k in ks:
-                pk = self._prefix_policy(policy, k)
-                if pk == policy:
-                    partials_by_k[k] = logits
-                    bounds_by_k[k] = 0.0
-                else:
-                    partials_by_k[k] = self._engine_for(pk)(xb)
+        wave_ids = tuple(r.request_id for r in chunk)
+        logits, partials_by_k, bounds_by_k = self._guarded_wave(
+            policy, xb, ks, wave_ids
+        )
+
+        # brown-out accounting, per degraded (tier, prefix k) in this wave:
+        # a sound |degraded - tier-full| bound (the tier's anytime tail
+        # bound at k — and at min(k_any, k) for each anytime partial, since
+        # a prefix of the degraded policy IS a prefix of the tier policy)
+        # plus the digit planes actually executed, summed over conv layers
+        tier_bounds: Dict[Tuple[str, int], Dict[int, float]] = {}
+        tier_digits: Dict[Tuple[str, int], int] = {}
+        for tslo, kd in {
+            (r.slo, r.brownout_k) for r in chunk if r.brownout_k is not None
+        }:
+            full_pol = self.policy_for(tslo)
+            keffs = sorted(
+                {
+                    min(k, kd)
+                    for r in chunk
+                    if r.slo == tslo and r.brownout_k == kd
+                    for k in r.anytime
+                }
+                | {kd}
+            )
+            tier_bounds[(tslo, kd)] = self._anytime_bounds(
+                self._engine_for(full_pol), xb, keffs
+            )
+            tier_digits[(tslo, kd)] = sum(
+                min(kd, full_pol.budget_for(n.name) or full_pol.n_planes)
+                for n in self._donor.graph.conv_nodes
+            )
 
         with self._lock:
             self.stats["dispatches"] += 1
             self.stats["padded_rows"] += bucket - len(chunk)
+            self.stats["degraded"] += sum(
+                1 for r in chunk if r.brownout_k is not None
+            )
             self.program_keys.add((bucket, policy))
             for k in ks:
                 pk = self._prefix_policy(policy, k)
@@ -610,19 +804,118 @@ class DslrServer:
             wave_seq = len(self.wave_log)
 
         for i, r in enumerate(chunk):
-            r.handle._set_result(
-                logits[i],
-                tuple(
+            partials = []
+            for k in r.anytime:
+                if r.brownout_k is not None:
+                    bound = tier_bounds[(r.slo, r.brownout_k)][
+                        min(k, r.brownout_k)
+                    ]
+                else:
+                    bound = bounds_by_k[k]
+                partials.append(
                     AnytimeResult(
                         budget=k,
                         logits=partials_by_k[k][i],
                         top1=int(jnp.argmax(partials_by_k[k][i])),
-                        bound=bounds_by_k[k],
+                        bound=bound,
                     )
-                    for k in r.anytime
-                ),
-                wave_seq,
+                )
+            if r.brownout_k is not None:
+                key = (r.slo, r.brownout_k)
+                r.handle.degraded = True
+                r.handle.served_budget = r.brownout_k
+                r.handle.brownout_bound = tier_bounds[key][r.brownout_k]
+                r.handle._set_result(
+                    logits[i],
+                    tuple(partials),
+                    wave_seq,
+                    digits_spent=tier_digits[key],
+                )
+            else:
+                r.handle._set_result(logits[i], tuple(partials), wave_seq)
+
+    def _guarded_wave(
+        self,
+        policy: ExecutionPolicy,
+        xb: jax.Array,
+        ks: Sequence[int],
+        wave_ids: Tuple[int, ...],
+    ) -> Tuple[jax.Array, Dict[int, jax.Array], Dict[int, float]]:
+        """Execute one wave's full + anytime-prefix programs behind the
+        output guardrails: logits (and partials) must be finite and every
+        partial must respect its sound anytime bound.  A suspect wave
+        re-runs once — injected/transient corruption clears, a deterministic
+        miscomputation does not — and then reroutes to the pure-jnp oracle
+        path (``ExecutionPolicy.use_ref``), which is bitwise-coupled to the
+        kernel, so even a rerouted wave's logits match a healthy kernel's
+        bit for bit."""
+        inj = self._fault_injector
+        engine = self._engine_for(policy)
+        for attempt in range(2):
+            logits = engine(xb)
+            if inj is not None:
+                logits = inj.corrupt_logits(logits, key=wave_ids + (attempt,))
+            partials_by_k, bounds_by_k = self._anytime_partials(
+                policy, xb, ks, logits
             )
+            if self._wave_healthy(logits, partials_by_k, bounds_by_k):
+                return logits, partials_by_k, bounds_by_k
+            with self._lock:
+                self.stats["guard_retries"] += 1
+        # both kernel runs suspect: fall back to the trusted oracle (no
+        # injection on this path — it models the known-good slow engine)
+        oracle_policy = dataclasses.replace(policy, use_ref=True)
+        logits = self._engine_for(oracle_policy)(xb)
+        partials_by_k, bounds_by_k = self._anytime_partials(
+            oracle_policy, xb, ks, logits
+        )
+        with self._lock:
+            self.stats["oracle_waves"] += 1
+        return logits, partials_by_k, bounds_by_k
+
+    def _anytime_partials(
+        self,
+        policy: ExecutionPolicy,
+        xb: jax.Array,
+        ks: Sequence[int],
+        logits: jax.Array,
+    ) -> Tuple[Dict[int, jax.Array], Dict[int, float]]:
+        """The anytime channel's per-budget prefix logits and sound bounds
+        for one wave (empty dicts when no budgets were requested)."""
+        partials_by_k: Dict[int, jax.Array] = {}
+        bounds_by_k: Dict[int, float] = {}
+        if ks:
+            bounds_by_k = self._anytime_bounds(self._engine_for(policy), xb, ks)
+            for k in ks:
+                pk = self._prefix_policy(policy, k)
+                if pk == policy:
+                    partials_by_k[k] = logits
+                    bounds_by_k[k] = 0.0
+                else:
+                    partials_by_k[k] = self._engine_for(pk)(xb)
+        return partials_by_k, bounds_by_k
+
+    def _wave_healthy(
+        self,
+        logits: jax.Array,
+        partials_by_k: Dict[int, jax.Array],
+        bounds_by_k: Dict[int, float],
+    ) -> bool:
+        """The output guardrails: finite logits/partials, and every anytime
+        partial within its sound bound of the full answer (a violated bound
+        is *proof* of a miscomputation — the bound is an upper bound by
+        construction, so a healthy wave cannot trip it)."""
+        if not bool(jnp.all(jnp.isfinite(logits))):
+            return False
+        for k, part in partials_by_k.items():
+            if not bool(jnp.all(jnp.isfinite(part))):
+                return False
+            bound = bounds_by_k.get(k)
+            if bound is not None and bound > 0.0:
+                measured = float(jnp.max(jnp.abs(part - logits)))
+                if measured > bound:
+                    return False
+        return True
 
     def _dispatch_adaptive_wave(self, chunk: List[QueuedRequest]) -> None:
         """One cascade-stage wave of a confidence-gated tier: run the stage

@@ -56,7 +56,13 @@ class SloClass:
     ``"proven"`` (margin vs the sound remaining-digit bound; the early
     answer equals the full-budget argmax by construction) or
     ``"calibrated"`` (measured margin thresholds, heuristic — requires a
-    prior ``DslrServer.calibrate`` call)."""
+    prior ``DslrServer.calibrate`` call).
+
+    ``brownout_floor`` caps how far the server's brown-out controller may
+    degrade this tier under overload: the smallest digit-prefix budget it
+    may be served at (None = the server-wide ``brownout_floor`` default).
+    Below-floor pressure sheds — a tier that must never degrade sets the
+    floor at its full budget."""
 
     name: str
     cycle_fraction: Optional[float]
@@ -64,8 +70,13 @@ class SloClass:
     adaptive: bool = False
     stages: Optional[Tuple[int, ...]] = None
     decision: str = "proven"
+    brownout_floor: Optional[int] = None
 
     def __post_init__(self):
+        if self.brownout_floor is not None and self.brownout_floor < 1:
+            raise ValueError(
+                f"brownout_floor={self.brownout_floor} must be >= 1 (or None)"
+            )
         if self.cycle_fraction is not None and not 0.0 < self.cycle_fraction <= 1.0:
             raise ValueError(
                 f"cycle_fraction={self.cycle_fraction} outside (0, 1]"

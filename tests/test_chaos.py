@@ -1,0 +1,441 @@
+"""Fault-tolerant serving under seeded chaos (serve/faults.py).
+
+The acceptance criteria of the fault-tolerance layer:
+
+  * under seeded chaos (transient wave faults + one poisoned request) every
+    non-poisoned request completes with logits BITWISE identical to a
+    fault-free run, and only the poisoned handle errors (retry -> bisect ->
+    quarantine);
+  * a dead worker thread restarts and requeues its in-flight wave;
+  * NaN-corrupted outputs are caught by the guardrails, re-run, and routed
+    to the jnp oracle path — still bitwise identical (the oracle is
+    bitwise-coupled to the kernel);
+  * under sustained overload a brown-out tier serves degraded digit-prefix
+    results carrying ``digits_spent`` and a sound error bound instead of
+    shedding, sheds only past the floor prefix (with ``retry_after_s``),
+    and recovers hysteretically.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import common as cm
+from repro.models.engine import compile_cnn
+from repro.models.graph import CnnConfig, ExecutionPolicy, graph_spec
+from repro.serve import (
+    DslrServer,
+    FaultInjector,
+    PoisonedRequestError,
+    ServerOverloaded,
+    SloClass,
+    TransientWaveError,
+)
+
+
+@pytest.fixture(scope="module")
+def alexnet():
+    cfg = CnnConfig(name="alexnet", width=0.02, num_classes=4)
+    params = cm.init_params(graph_spec(cfg), jax.random.PRNGKey(0))
+    return compile_cnn(cfg, params, ExecutionPolicy())
+
+
+def images(n, seed=0, img=12):
+    rng = np.random.default_rng(seed)
+    return [
+        jnp.asarray(rng.standard_normal((img, img, 3)), jnp.float32)
+        for _ in range(n)
+    ]
+
+
+def fault_free_reference(engine, imgs, slo="balanced"):
+    """The deterministic sync-flush logits every chaos run is asserted
+    bitwise against (per-sample scales make wave composition invisible)."""
+    server = DslrServer(engine, buckets=(1, 2, 4))
+    handles = [server.submit(im, slo=slo) for im in imgs]
+    server.flush()
+    return [h.result() for h in handles]
+
+
+# ---------------------------------------------------------------------------
+# the injector itself: deterministic chaos
+# ---------------------------------------------------------------------------
+
+
+def test_injector_rolls_are_deterministic_and_keyed():
+    a = FaultInjector(seed=7, transient_rate=0.5)
+    b = FaultInjector(seed=7, transient_rate=0.5)
+    assert a.roll("transient", (1, 2), 0) == b.roll("transient", (1, 2), 0)
+    # retries re-roll (attempt is part of the key) and sites are independent
+    assert a.roll("transient", (1, 2), 0) != a.roll("transient", (1, 2), 1)
+    assert a.roll("transient", (1, 2), 0) != a.roll("nan", (1, 2), 0)
+    # a different seed is a different schedule
+    c = FaultInjector(seed=8, transient_rate=0.5)
+    assert a.roll("transient", (1, 2), 0) != c.roll("transient", (1, 2), 0)
+
+
+def test_injector_transient_raises_and_counts():
+    inj = FaultInjector(seed=0, transient_rate=1.0)
+    with pytest.raises(TransientWaveError):
+        inj.at_dispatch([1, 2], 0)
+    assert inj.counters["transient"] == 1
+    # rate 0 never fires
+    FaultInjector(seed=0).at_dispatch([1, 2], 0)
+
+
+def test_injector_poison_persists_across_attempts():
+    inj = FaultInjector(seed=0, poison_ids=(5,))
+    for attempt in range(4):
+        with pytest.raises(PoisonedRequestError):
+            inj.at_dispatch([3, 5, 7], attempt)
+    inj.at_dispatch([3, 7], 0)  # poison gone -> clean
+    assert inj.counters["poisoned"] == 4
+
+
+# ---------------------------------------------------------------------------
+# acceptance: transient retry + poisoned-request quarantine, bitwise
+# ---------------------------------------------------------------------------
+
+
+def test_chaos_retry_and_quarantine_bitwise_identical(alexnet):
+    """ISSUE acceptance: seeded chaos with 10% transient wave faults and one
+    poisoned request — every non-poisoned request completes bitwise
+    identical to the fault-free run, only the poisoned handle errors."""
+    imgs = images(6, seed=1)
+    ref = fault_free_reference(alexnet, imgs)
+    poisoned_id = 2
+    inj = FaultInjector(seed=0, transient_rate=0.10, poison_ids=(poisoned_id,))
+    server = DslrServer(
+        alexnet, buckets=(1, 2, 4), fault_injector=inj, backoff_base_s=0.001
+    )
+    with server:
+        handles = [server.submit(im, slo="balanced") for im in imgs]
+        server.drain(timeout=600)
+    for i, h in enumerate(handles):
+        if i == poisoned_id:
+            with pytest.raises(PoisonedRequestError):
+                h.result(timeout=5)
+        else:
+            assert bool(jnp.all(h.result(timeout=5) == ref[i])), (
+                f"request {i} diverged bitwise under chaos"
+            )
+    # the poison forced the retry -> bisect -> quarantine ladder
+    assert server.quarantined == 1
+    assert server.retries >= 1
+    assert inj.counters["poisoned"] >= 1
+
+
+def test_transient_only_chaos_completes_everything_bitwise(alexnet):
+    imgs = images(5, seed=2)
+    ref = fault_free_reference(alexnet, imgs)
+    inj = FaultInjector(seed=3, transient_rate=0.25)
+    server = DslrServer(
+        alexnet, buckets=(1, 2), fault_injector=inj, backoff_base_s=0.001
+    )
+    with server:
+        handles = [server.submit(im, slo="balanced") for im in imgs]
+        server.drain(timeout=600)
+    for i, h in enumerate(handles):
+        assert bool(jnp.all(h.result(timeout=5) == ref[i]))
+    assert server.quarantined == 0
+
+
+def test_wave_mates_of_poisoned_request_share_its_first_waves(alexnet):
+    """The quarantine must isolate the poison *within* a shared wave: force
+    one 4-wide wave containing the poisoned request, then check the three
+    mates complete (bitwise) while only the poison errors."""
+    imgs = images(4, seed=4)
+    ref = fault_free_reference(alexnet, imgs, slo="exact")
+    inj = FaultInjector(seed=0, poison_ids=(1,))
+    server = DslrServer(
+        alexnet, buckets=(1, 2, 4), fault_injector=inj, backoff_base_s=0.001
+    )
+    with server:
+        server.pause()  # one 4-wide wave forms
+        handles = [server.submit(im, slo="exact") for im in imgs]
+        server.resume()
+        server.drain(timeout=600)
+    # the poison never reaches the engine: no executed wave contains it
+    pid = handles[1].request_id
+    assert server.wave_log and all(pid not in w for w in server.wave_log)
+    for i, h in enumerate(handles):
+        if i == 1:
+            with pytest.raises(PoisonedRequestError):
+                h.result(timeout=5)
+        else:
+            assert bool(jnp.all(h.result(timeout=5) == ref[i]))
+    assert server.quarantined == 1
+
+
+# ---------------------------------------------------------------------------
+# worker supervision: death -> restart -> requeue
+# ---------------------------------------------------------------------------
+
+
+def test_worker_death_restarts_and_requeues_inflight_wave(alexnet):
+    imgs = images(5, seed=5)
+    ref = fault_free_reference(alexnet, imgs)
+    inj = FaultInjector(seed=0, die_at_dispatch=(2,))
+    server = DslrServer(alexnet, buckets=(1, 2), fault_injector=inj)
+    with server:
+        handles = [server.submit(im, slo="balanced") for im in imgs]
+        server.drain(timeout=600)
+    for i, h in enumerate(handles):
+        assert bool(jnp.all(h.result(timeout=5) == ref[i]))
+    assert server.restarts >= 1
+    assert inj.counters["worker_killed"] == 1
+
+
+def test_fatal_keyboard_interrupt_fails_wave_and_kills_worker(alexnet):
+    """Satellite: KeyboardInterrupt is no longer swallowed into handles by a
+    blanket ``except BaseException`` — the wave's handles carry it AND the
+    worker terminates without a supervisor restart."""
+    with DslrServer(alexnet, buckets=(1, 2)) as server:
+        server._dispatcher._dispatch = lambda wave: (_ for _ in ()).throw(
+            KeyboardInterrupt()
+        )
+        server.pause()
+        hs = [server.submit(im, slo="exact") for im in images(2, seed=6)]
+        server.resume()
+        for h in hs:
+            with pytest.raises(KeyboardInterrupt):
+                h.result(timeout=600)
+        deadline = time.monotonic() + 10
+        while server._dispatcher._thread.is_alive():
+            assert time.monotonic() < deadline, "worker should have died"
+            time.sleep(0.01)
+        assert server.restarts == 0
+
+
+# ---------------------------------------------------------------------------
+# output guardrails: NaN / bound violation -> re-run -> oracle
+# ---------------------------------------------------------------------------
+
+
+def test_nan_guardrail_reroutes_to_oracle_bitwise(alexnet):
+    """nan_rate=1.0 corrupts every kernel attempt, so the guardrails must
+    re-run once and then reroute every wave to the jnp oracle path — whose
+    logits are bitwise identical to a healthy kernel's."""
+    imgs = images(4, seed=7)
+    ref = fault_free_reference(alexnet, imgs)
+    inj = FaultInjector(seed=0, nan_rate=1.0)
+    server = DslrServer(alexnet, buckets=(1, 2), fault_injector=inj)
+    with server:
+        handles = [server.submit(im, slo="balanced") for im in imgs]
+        server.drain(timeout=600)
+    for i, h in enumerate(handles):
+        got = h.result(timeout=5)
+        assert bool(jnp.all(jnp.isfinite(got)))
+        assert bool(jnp.all(got == ref[i]))
+    assert server.stats["oracle_waves"] >= 1
+    assert server.stats["guard_retries"] >= server.stats["oracle_waves"]
+
+
+def test_transient_nan_clears_on_guardrail_rerun(alexnet):
+    """A moderate nan_rate corrupts some first attempts but re-rolls on the
+    re-run — most suspect waves recover on the kernel path without ever
+    reaching the oracle, and everything stays bitwise."""
+    imgs = images(6, seed=8)
+    ref = fault_free_reference(alexnet, imgs)
+    inj = FaultInjector(seed=5, nan_rate=0.4)
+    server = DslrServer(alexnet, buckets=(1, 2), fault_injector=inj)
+    with server:
+        handles = [server.submit(im, slo="balanced") for im in imgs]
+        server.drain(timeout=600)
+    for i, h in enumerate(handles):
+        assert bool(jnp.all(h.result(timeout=5) == ref[i]))
+    assert inj.counters["nan"] >= 1
+    assert server.stats["guard_retries"] >= 1
+
+
+def test_use_ref_oracle_engine_is_bitwise_coupled(alexnet):
+    """The guardrails' fallback path is only sound because the jnp oracle
+    scan is bitwise-identical to the Pallas kernel."""
+    import dataclasses
+
+    xb = jnp.stack(images(2, seed=9))
+    policy = dataclasses.replace(alexnet.policy, per_sample_scales=True)
+    kernel_engine = alexnet.with_policy(policy)
+    oracle_engine = alexnet.with_policy(
+        dataclasses.replace(policy, use_ref=True)
+    )
+    assert bool(jnp.all(kernel_engine(xb) == oracle_engine(xb)))
+
+
+# ---------------------------------------------------------------------------
+# brown-out: degrade -> floor -> shed, sound bounds, hysteretic recovery
+# ---------------------------------------------------------------------------
+
+
+def flood(server, img, slo, n, deadline_ms):
+    """Submit n requests with a tiny dwell budget; return (handles, shed
+    errors)."""
+    handles, errors = [], []
+    for _ in range(n):
+        try:
+            handles.append(server.submit(img, slo=slo, deadline_ms=deadline_ms))
+        except ServerOverloaded as e:
+            errors.append(e)
+    return handles, errors
+
+
+def test_brownout_degrades_with_digits_and_sound_bound(alexnet):
+    """ISSUE acceptance: under sustained overload the tier serves degraded
+    digit-prefix results — ``digits_spent`` and a sound |degraded - full|
+    bound on every degraded handle — instead of shedding."""
+    img = images(1, seed=10)[0]
+    server = DslrServer(alexnet, buckets=(1, 2), brownout_hold_s=0.0)
+    with server:
+        server.submit(img, slo="exact").result(timeout=600)  # prime the EWMA
+        server.drain(timeout=600)  # the EMA lands with the wave's retirement
+        server.pause()  # queue builds -> dwell projection blows the budget
+        floor_ms = server.predicted_compute_ms("exact")
+        handles, errors = flood(
+            server, img, "exact", n=10, deadline_ms=floor_ms + 0.01
+        )
+        assert server.brownout_level("exact") > 0
+        server.resume()
+        server.drain(timeout=600)
+    degraded = [h for h in handles if h.degraded]
+    assert degraded, "overload must degrade, not just shed"
+    # fault-free full-budget reference for the bound check
+    ref_server = DslrServer(alexnet, buckets=(1, 2))
+    rh = ref_server.submit(img, slo="exact")
+    ref_server.flush()
+    full = rh.result()
+    ladder = server.brownout_ladder("exact")
+    for h in degraded:
+        assert h.served_budget in ladder
+        assert h.digits_spent is not None and h.digits_spent > 0
+        assert h.brownout_bound is not None and h.brownout_bound > 0
+        measured = float(jnp.max(jnp.abs(h.result(timeout=5) - full)))
+        assert measured <= h.brownout_bound, (
+            f"brown-out bound unsound: measured {measured} > "
+            f"bound {h.brownout_bound} at k={h.served_budget}"
+        )
+    assert server.stats["degraded"] == len(degraded)
+
+
+def test_brownout_sheds_only_past_floor_with_retry_after(alexnet):
+    img = images(1, seed=11)[0]
+    server = DslrServer(alexnet, buckets=(1, 2), brownout_hold_s=0.0)
+    with server:
+        server.submit(img, slo="exact").result(timeout=600)
+        server.drain(timeout=600)  # the EMA lands with the wave's retirement
+        server.pause()
+        floor_ms = server.predicted_compute_ms("exact")
+        handles, errors = flood(
+            server, img, "exact", n=12, deadline_ms=floor_ms + 0.01
+        )
+        ladder = server.brownout_ladder("exact")
+        # with hold 0 the tier walks the whole ladder, then sheds
+        assert server.brownout_level("exact") == len(ladder)
+        assert errors, "past the floor prefix the tier must shed"
+        for e in errors:
+            assert e.retry_after_s is not None and e.retry_after_s > 0
+        server.resume()
+        server.drain(timeout=600)
+    # every shed happened at the floor: the admitted-degraded requests
+    # cover the ladder levels walked before it (handles carry served_budget
+    # only once their wave completed)
+    assert {h.served_budget for h in handles if h.degraded} == set(ladder)
+
+
+def test_brownout_recovery_is_hysteretic(alexnet):
+    img = images(1, seed=12)[0]
+    server = DslrServer(
+        alexnet, buckets=(1, 2), brownout_hold_s=0.02, brownout_recover_fraction=0.9
+    )
+    with server:
+        server.submit(img, slo="exact").result(timeout=600)
+        server.drain(timeout=600)  # the EMA lands with the wave's retirement
+        server.pause()
+        floor_ms = server.predicted_compute_ms("exact")
+        flood(server, img, "exact", n=6, deadline_ms=floor_ms + 0.01)
+        level_under_load = server.brownout_level("exact")
+        assert level_under_load > 0
+        server.resume()
+        server.drain(timeout=600)
+        # pressure cleared, but recovery needs the hold window per step:
+        # submit with a generous dwell budget until the tier walks back to 0
+        deadline = time.monotonic() + 30
+        while server.brownout_level("exact") > 0:
+            assert time.monotonic() < deadline, "brown-out never recovered"
+            server.submit(img, slo="exact").result(timeout=600)
+            time.sleep(0.025)
+    assert server.brownout_level("exact") == 0
+
+
+def test_brownout_disabled_sheds_with_retry_after(alexnet):
+    """``brownout=False`` restores the PR-6 behavior — EWMA projection
+    overload sheds at admission — now with the structured retry hint."""
+    img = images(1, seed=13)[0]
+    server = DslrServer(alexnet, buckets=(1, 2), brownout=False)
+    with server:
+        server.submit(img, slo="exact").result(timeout=600)
+        server.drain(timeout=600)  # the EMA lands with the wave's retirement
+        server.pause()
+        floor_ms = server.predicted_compute_ms("exact")
+        handles, errors = flood(
+            server, img, "exact", n=10, deadline_ms=floor_ms + 0.01
+        )
+        assert errors, "disabled brown-out must shed under projected overload"
+        assert all(e.retry_after_s is not None and e.retry_after_s > 0 for e in errors)
+        assert not any(h.degraded for h in handles)
+        assert server.stats["brownout_steps"] == 0
+        server.resume()
+        server.drain(timeout=600)
+
+
+def test_brownout_floor_per_tier_override(alexnet):
+    """A tier-level ``SloClass.brownout_floor`` caps its ladder."""
+    slos = (SloClass("exact", None, max_dwell_ms=1000.0, brownout_floor=4),)
+    server = DslrServer(alexnet, slos=slos, buckets=(1, 2))
+    ladder = server.brownout_ladder("exact")
+    assert ladder and min(ladder) == 4  # halves stop at the tier's own floor
+    # server-wide default floor (2) still applies elsewhere
+    default_server = DslrServer(alexnet, buckets=(1, 2))
+    assert min(default_server.brownout_ladder("exact")) == 2
+
+
+def test_brownout_degraded_anytime_partials_keep_sound_bounds(alexnet):
+    """An anytime ask on a degraded request stays sound: each partial's
+    bound is vs the TIER-full answer (prefix-of-prefix = prefix), so
+    measured |partial - full| <= bound still holds."""
+    img = images(1, seed=14)[0]
+    server = DslrServer(alexnet, buckets=(1, 2), brownout_hold_s=0.0)
+    with server:
+        server.submit(img, slo="exact").result(timeout=600)
+        server.drain(timeout=600)  # the EMA lands with the wave's retirement
+        server.pause()
+        floor_ms = server.predicted_compute_ms("exact")
+        handles = []
+        for _ in range(6):
+            try:
+                handles.append(
+                    server.submit(
+                        img,
+                        slo="exact",
+                        anytime=(2, 6),
+                        deadline_ms=floor_ms + 0.01,
+                    )
+                )
+            except ServerOverloaded:
+                pass
+        server.resume()
+        server.drain(timeout=600)
+    degraded = [h for h in handles if h.degraded]
+    assert degraded
+    ref_server = DslrServer(alexnet, buckets=(1, 2))
+    rh = ref_server.submit(img, slo="exact")
+    ref_server.flush()
+    full = rh.result()
+    for h in degraded:
+        for p in h.partials:
+            measured = float(jnp.max(jnp.abs(p.logits - full)))
+            assert measured <= p.bound, (
+                f"anytime bound on degraded request unsound: "
+                f"{measured} > {p.bound} at k={p.budget}"
+            )

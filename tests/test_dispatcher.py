@@ -255,3 +255,135 @@ def test_deadline_ms_below_predicted_compute_rejected(alexnet):
         server.submit(images(1)[0], slo="exact", deadline_ms=floor / 1e6)
     # fast tier's planned budgets predict strictly less compute than exact
     assert server.predicted_compute_ms("fast") < floor
+
+
+# ---------------------------------------------------------------------------
+# satellites: requeue-vs-cancel ordering, close timeout split, KI narrowing
+# ---------------------------------------------------------------------------
+
+
+class _FakeHandle:
+    """Just enough ResultHandle surface for a bare Dispatcher."""
+
+    def __init__(self):
+        self._done = False
+        self.error = None
+
+    def done(self):
+        return self._done
+
+    def _set_error(self, e):
+        self._done, self.error = True, e
+
+
+def _bare_request(request_id, group_key="g", dwell_s=60.0):
+    import time as _time
+
+    from repro.serve.dispatcher import QueuedRequest
+
+    now = _time.monotonic()
+    return QueuedRequest(
+        request_id=request_id,
+        image=None,
+        slo="exact",
+        anytime=(),
+        handle=_FakeHandle(),
+        group_key=(group_key,),
+        submit_t=now,
+        deadline_t=now + dwell_s,
+    )
+
+
+def test_requeue_front_insertion_ordering_under_cancel():
+    """Satellite: ``requeue`` folds escalations in *ahead* of earlier
+    arrivals, and a concurrent ``cancel`` of a requeued request removes it
+    without disturbing that ordering — the next wave rides [D, A, B]."""
+    from repro.serve.dispatcher import Dispatcher
+
+    dispatched = []
+    disp = Dispatcher(
+        dispatch=lambda wave: dispatched.append([r.request_id for r in wave]),
+        max_wave=8,
+    )
+    disp.start()
+    try:
+        disp.pause()
+        a, b = _bare_request(0), _bare_request(1)
+        disp.submit(a)
+        disp.submit(b)
+        c, d = _bare_request(2), _bare_request(3)
+        disp.requeue([c, d])  # escalations jump the line
+        assert [r.request_id for r in disp._pending] == [2, 3, 0, 1]
+        assert disp.cancel(c.request_id)  # withdrawn while still queued
+        assert [r.request_id for r in disp._pending] == [3, 0, 1]
+        disp.resume()
+        disp.drain(timeout=10)
+    finally:
+        disp.close(timeout=10)
+    assert dispatched == [[3, 0, 1]]  # requeued D leads, cancelled C is gone
+    assert not disp.cancel(d.request_id)  # already dispatched
+
+
+def test_close_splits_timeout_across_drain_and_join():
+    """Satellite: ``close(t)`` is one budget — the worker join gets ``t``
+    minus what the drain already spent, not a fresh ``t`` (the old behavior
+    let ``close(5)`` block 10 s)."""
+    import time as _time
+
+    from repro.serve.dispatcher import Dispatcher
+
+    disp = Dispatcher(dispatch=lambda wave: None, max_wave=4)
+    disp.start()
+    real_drain = disp.drain
+
+    def slow_drain(timeout=None):
+        real_drain(timeout)
+        _time.sleep(0.2)
+
+    disp.drain = slow_drain
+    joined = []
+    thread = disp._thread
+    real_join = thread.join
+    thread.join = lambda timeout=None: (joined.append(timeout), real_join(timeout))[1]
+    disp.close(timeout=5.0)
+    assert len(joined) == 1
+    assert joined[0] is not None
+    assert joined[0] <= 5.0 - 0.2 + 0.05  # drain's 0.2 s was deducted
+    assert joined[0] > 4.0
+
+
+def test_queue_full_shed_carries_retry_after_estimate(alexnet):
+    """Satellite: once the EWMA has a service estimate, a hard-cap shed
+    reports a structured ``retry_after_s`` instead of a bare error."""
+    with DslrServer(alexnet, buckets=(1,), max_queue=2) as server:
+        server.submit(images(1)[0], slo="exact").result(timeout=600)  # seed EWMA
+        server.pause()
+        shed = None
+        try:
+            for im in images(4, seed=10):
+                server.submit(im, slo="exact")
+        except ServerOverloaded as e:
+            shed = e
+        assert shed is not None
+        assert shed.retry_after_s is not None and shed.retry_after_s > 0
+        server.resume()
+
+
+def test_drain_and_close_override_pause():
+    """Regression: drain()/close() on a *paused* dispatcher must still force
+    the queue out — close(timeout=None) from a paused server's teardown used
+    to deadlock because _take_wave honored pause over the shutdown flush."""
+    from repro.serve.dispatcher import Dispatcher
+
+    dispatched = []
+    disp = Dispatcher(
+        dispatch=lambda wave: dispatched.append(len(wave)), max_wave=4
+    )
+    disp.start()
+    disp.pause()
+    disp.submit(_bare_request(0))
+    disp.submit(_bare_request(1))
+    disp.drain(timeout=10)  # must not hang: flush overrides pause
+    assert sum(dispatched) == 2
+    disp.close(timeout=10)
+    assert disp.closed

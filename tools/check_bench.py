@@ -91,6 +91,22 @@ RULES = {
     "lm.ce_monotone": ("min", 0.0, 1.0),
     "lm.planned_vs_uniform_predicted": ("min", 0.25, 1.0),
     "lm.curve_k9": ("min", 0.0, 1.0),
+    # chaos / fault tolerance (BENCH_chaos.json): the correctness rows are
+    # deterministic indicators under a seeded fault schedule and carry hard
+    # 1.0 bounds — availability of non-poisoned requests, bitwise identity
+    # of every survivor vs the fault-free run, quarantine isolation of the
+    # poisoned request, worker restart+requeue, NaN guardrail reroute, and
+    # the brown-out served-degraded / bound-soundness indicators.  Goodput
+    # is interpret-mode wall clock, so its baseline guard is loose; the
+    # brown-out p99 row is informational only (no rule).
+    "chaos.availability_f10": ("min", 0.0, 1.0),
+    "chaos.bitwise_under_retry": ("min", 0.0, 1.0),
+    "chaos.quarantine_isolation": ("min", 0.0, 1.0),
+    "chaos.goodput_f10": ("min", 0.9, None),
+    "chaos.worker_recovery": ("min", 0.0, 1.0),
+    "chaos.guardrail_clean": ("min", 0.0, 1.0),
+    "chaos.brownout_served_degraded": ("min", 0.0, 1.0),
+    "chaos.brownout_sound": ("min", 0.0, 1.0),
 }
 
 
